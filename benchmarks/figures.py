@@ -1,0 +1,130 @@
+"""One function per paper table/figure (Figures 13-22)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_and_query, dataset, emit, timed, windows
+
+DATASETS = [("berkeley", 0.08), ("johns_creek", 0.06)]
+METHODS = ["sps", "ada", "rfs", "rfs+ls"]
+
+
+def _kw(method):
+    if method == "rfs+ls":
+        return dict(solution="rfs", lixel_sharing=True)
+    return dict(solution=method)
+
+
+def fig13_bandwidth():
+    """Processing time vs spatial bandwidth (50m..5000m in the paper)."""
+    for dname, scale in DATASETS:
+        net, ev, meta = dataset(dname, scale)
+        ts, b_t = windows(ev, 1)
+        for b_s in (50.0, 400.0, 1200.0, 2500.0):
+            for method in METHODS:
+                b, q, m, F = build_and_query(net, ev, ts=ts, b_t=b_t, g=10.0, b_s=b_s, **_kw(method))
+                emit(
+                    f"fig13/{dname}/bs={int(b_s)}/{method}",
+                    (b + q) * 1e6,
+                    f"build_s={b:.3f};query_s={q:.3f};F_sum={F.sum():.1f}",
+                )
+
+
+def fig14_batch_size():
+    """Processing time vs #online windows (index reuse is RFS's win)."""
+    net, ev, meta = dataset("berkeley", 0.08)
+    for nq in (1, 5, 10, 15):
+        ts, b_t = windows(ev, nq)
+        for method in METHODS:
+            b, q, m, F = build_and_query(net, ev, ts=ts, b_t=b_t, g=50.0, b_s=400.0, **_kw(method))
+            emit(f"fig14/nq={nq}/{method}", (b + q) * 1e6, f"build_s={b:.3f};query_s={q:.3f}")
+
+
+def fig15_lixel_length():
+    net, ev, meta = dataset("berkeley", 0.08)
+    ts, b_t = windows(ev, 5)
+    for g in (10.0, 25.0, 50.0, 100.0):
+        for method in METHODS:
+            b, q, m, F = build_and_query(net, ev, ts=ts, b_t=b_t, g=g, b_s=400.0, **_kw(method))
+            emit(f"fig15/g={int(g)}/{method}", (b + q) * 1e6,
+                 f"L={m.n_lixels};query_s={q:.3f}")
+
+
+def fig16_time_window():
+    net, ev, meta = dataset("berkeley", 0.08)
+    for frac in (0.25, 0.5, 0.75, 1.0):
+        ts, b_t = windows(ev, 3, frac=frac)
+        for method in METHODS:
+            b, q, m, F = build_and_query(net, ev, ts=ts, b_t=b_t, g=50.0, b_s=400.0, **_kw(method))
+            emit(f"fig16/win={int(frac*100)}%/{method}", (b + q) * 1e6, f"query_s={q:.3f}")
+
+
+def fig17_memory():
+    for dname, scale in DATASETS:
+        net, ev, meta = dataset(dname, scale)
+        ts, b_t = windows(ev, 1)
+        raw = ev.edge_id.nbytes + ev.pos.nbytes + ev.time.nbytes
+        emit(f"fig17/{dname}/raw", 0.0, f"bytes={raw}")
+        for method in ("ada", "rfs"):
+            b, q, m, F = build_and_query(net, ev, ts=ts, b_t=b_t, g=50.0, b_s=400.0, **_kw(method))
+            emit(
+                f"fig17/{dname}/{method}",
+                0.0,
+                f"bytes={m.stats.index_bytes};x_raw={m.stats.index_bytes/max(raw,1):.1f}",
+            )
+
+
+def fig18_21_drfs_depth():
+    """DRFS: indexing time / processing time / accuracy / memory vs H."""
+    net, ev, meta = dataset("berkeley", 0.08)
+    ts, b_t = windows(ev, 3, frac=1.0)
+    _, _, _, ref = build_and_query(net, ev, ts=ts, b_t=b_t, g=50.0, b_s=1000.0, solution="rfs")
+    for H in (2, 4, 6, 8, 10):
+        b, q, m, F = build_and_query(
+            net, ev, ts=ts, b_t=b_t, g=50.0, b_s=1000.0, solution="drfs", drfs_depth=H
+        )
+        acc = 1.0 - np.abs(F - ref).sum() / max(np.abs(ref).sum(), 1e-9)
+        emit(
+            f"fig18-21/drfs/H={H}",
+            (b + q) * 1e6,
+            f"index_s={b:.3f};query_s={q:.3f};accuracy={acc*100:.2f}%;bytes={m.index.index_bytes}",
+        )
+    # quantized query depth H0 (paper: H0=2 keeps >90% accuracy)
+    for h0 in (1, 2, 4):
+        b, q, m, F = build_and_query(
+            net, ev, ts=ts, b_t=b_t, g=50.0, b_s=1000.0,
+            solution="drfs", drfs_depth=8, drfs_h0=h0,
+        )
+        acc = 1.0 - np.abs(F - ref).sum() / max(np.abs(ref).sum(), 1e-9)
+        emit(f"fig18-21/drfs-quant/H0={h0}", q * 1e6, f"accuracy={acc*100:.2f}%")
+
+
+def fig22_kernels():
+    """Replaceable kernel functions: equal query cost, differing smoothness."""
+    net, ev, meta = dataset("berkeley", 0.08)
+    ts, b_t = windows(ev, 2)
+    ref = None
+    for ks in ("triangular", "cosine", "exponential", "epanechnikov", "gaussian"):
+        b, q, m, F = build_and_query(
+            net, ev, ts=ts, b_t=b_t, g=50.0, b_s=600.0, solution="rfs", spatial_kernel=ks
+        )
+        Fn = F / max(F.max(), 1e-9)
+        if ref is None:
+            ref = Fn
+        corr = float(np.corrcoef(Fn.ravel(), ref.ravel())[0, 1])
+        emit(
+            f"fig22/kernel={ks}",
+            q * 1e6,
+            f"query_s={q:.3f};corr_vs_triangular={corr:.3f};hotspot_frac={(Fn>0.5).mean():.4f}",
+        )
+
+
+ALL = [
+    fig13_bandwidth,
+    fig14_batch_size,
+    fig15_lixel_length,
+    fig16_time_window,
+    fig17_memory,
+    fig18_21_drfs_depth,
+    fig22_kernels,
+]

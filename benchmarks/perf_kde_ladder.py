@@ -1,0 +1,28 @@
+import sys, time
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core import TNKDE
+from repro.data.spatial import make_dataset
+sys.path.insert(0, ".")
+from benchmarks.common import windows
+
+print("=== KDE §Perf iteration ladder (berkeley x0.08, 5 windows) ===")
+net, ev, meta = make_dataset("berkeley", scale=0.08, seed=0)
+ts, b_t = windows(ev, 5)
+print(f"|V|={meta['V']} |E|={meta['E']} N={meta['N']}")
+
+def run(tag, b_s, **kw):
+    t0 = time.perf_counter(); m = TNKDE(net, ev, g=50.0, b_s=b_s, b_t=b_t, **kw)
+    build = time.perf_counter() - t0
+    t0 = time.perf_counter(); F = m.query(ts); q = time.perf_counter() - t0
+    print(f"{tag:42s} b_s={int(b_s):5d} build={build:6.2f}s query={q:6.2f}s atoms={m.stats.n_atoms} dom={m.stats.n_pairs_dominated} out={m.stats.n_pairs_out}")
+    return F, q
+
+for b_s in (400.0, 2000.0):
+    ref, _ = run("it0 rfs search (paper-faithful)", b_s, solution="rfs", cascade=False)
+    F, _ = run("it1 rfs cascade (beyond-paper)", b_s, solution="rfs", cascade=True)
+    assert np.allclose(F, ref, rtol=1e-9)
+    F, _ = run("it2 rfs search + LS (batched moments)", b_s, solution="rfs", cascade=False, lixel_sharing=True)
+    assert np.allclose(F, ref, rtol=1e-8), np.abs(F-ref).max()
+    run("     ada (rebuild per window)", b_s, solution="ada")
+    run("     sps (no index)", b_s, solution="sps")

@@ -1,0 +1,18 @@
+import sys, time
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+import numpy as np
+from repro.core import TNKDE
+from repro.data.spatial import make_dataset
+from benchmarks.common import windows
+
+print("=== index-reuse crossover: berkeley x1.0 (N=735k), 25 windows ===")
+net, ev, meta = make_dataset("berkeley", scale=1.0, seed=0)
+print(f"|V|={meta['V']} |E|={meta['E']} N={meta['N']}")
+ts, b_t = windows(ev, 25, frac=0.5)
+for tag, kw in [("rfs", dict(solution="rfs", cascade=False)),
+                ("rfs+ls", dict(solution="rfs", cascade=False, lixel_sharing=True)),
+                ("ada", dict(solution="ada"))]:
+    t0 = time.perf_counter(); m = TNKDE(net, ev, g=100.0, b_s=1000.0, b_t=b_t, **kw)
+    b = time.perf_counter() - t0
+    t0 = time.perf_counter(); F = m.query(ts); q = time.perf_counter() - t0
+    print(f"{tag:8s} build={b:7.2f}s query(25 windows)={q:7.2f}s total={b+q:7.2f}s per-window={q/25*1e3:.0f}ms")

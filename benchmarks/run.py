@@ -1,0 +1,51 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout) — tee'd into
+bench_output.txt by the final run. ``--only`` filters by figure name.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on figure fns")
+    ap.add_argument("--roofline-dir", default="runs/dryrun")
+    args = ap.parse_args(argv)
+
+    from benchmarks import figures
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for fn in figures.ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        print(f"# -- {fn.__name__} --", flush=True)
+        fn()
+    # roofline summary rows if a dry-run directory exists
+    try:
+        import glob
+        import json
+        import os
+
+        from repro.launch.roofline import roofline_row
+
+        files = sorted(glob.glob(os.path.join(args.roofline_dir, "*__pod1.json")))
+        for path in files:
+            with open(path) as f:
+                rec = json.load(f)
+            row = roofline_row(rec, 256)
+            if row:
+                print(
+                    f"roofline/{row['arch']}/{row['shape']},0.0,dominant={row['dominant']};"
+                    f"frac={row['roofline_fraction']:.3f};gib={row['bytes_per_device_gib']:.1f}"
+                )
+    except Exception as e:  # roofline data optional for bench runs
+        print(f"# roofline summary skipped: {e}")
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: build a TN-KDE index once, answer many temporal windows.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import TNKDE
+from repro.data.spatial import make_dataset
+
+# 1. a calibrated synthetic replica of the paper's Berkeley dataset
+net, events, meta = make_dataset("berkeley", scale=0.05, seed=0)
+print(f"network: |V|={meta['V']} |E|={meta['E']} events N={meta['N']} "
+      f"(Table-3 shape ratio N/|E|={meta['N_over_E']:.0f})")
+
+# 2. build the Range Forest once (exact, any future window)
+t0, t1 = events.time.min(), events.time.max()
+model = TNKDE(
+    net, events,
+    g=50.0,                 # lixel length (metres)
+    b_s=800.0,              # spatial bandwidth
+    b_t=0.2 * (t1 - t0),    # temporal bandwidth
+    spatial_kernel="triangular",
+    temporal_kernel="triangular",
+    solution="rfs",
+    lixel_sharing=True,
+)
+print(f"built RFS over {model.n_lixels} lixels in {model.stats.build_seconds:.2f}s "
+      f"(index {model.stats.index_bytes/2**20:.1f} MiB)")
+
+# 3. three online windows (morning / midday / evening of day 30)
+day = 30 * 86400.0
+windows = [day + 8 * 3600, day + 13 * 3600, day + 18 * 3600]
+F = model.query(windows)
+for t, f in zip(windows, F):
+    hot = np.argsort(f)[-3:][::-1]
+    print(f"window t={t:>12.0f}: density sum={f.sum():9.1f}  "
+          f"top lixels={list(hot)} (F={f[hot].round(2)})")
+
+# 4. exactness: the index reproduces the direct (SPS) computation
+ref = TNKDE(net, events, g=50.0, b_s=800.0, b_t=0.2 * (t1 - t0), solution="sps").query(windows)
+print(f"max |RFS - direct| = {np.abs(F - ref).max():.2e}  (exact, as the paper claims)")
+
+# 5. non-polynomial kernels, same index machinery (§7)
+for k in ("exponential", "cosine", "gaussian"):
+    Fk = TNKDE(net, events, g=50.0, b_s=800.0, b_t=0.2 * (t1 - t0),
+               solution="rfs", spatial_kernel=k).query(windows[:1])
+    c = np.corrcoef(Fk[0], F[0])[0, 1]
+    print(f"kernel {k:12s}: corr vs triangular = {c:.3f}")

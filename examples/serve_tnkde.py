@@ -1,0 +1,14 @@
+"""End-to-end serving driver (the paper's workload): a TN-KDE query server
+answering batched online temporal-window requests, with DRFS streaming
+ingestion of new events between request batches.
+
+    PYTHONPATH=src python examples/serve_tnkde.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import serve_tnkde
+
+if __name__ == "__main__":
+    serve_tnkde(n_requests=12, dataset="berkeley", scale=0.05, stream_every=4)

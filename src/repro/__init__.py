@@ -1,0 +1,3 @@
+"""repro: TN-KDE (Efficient Multiple Temporal Network KDE) as a multi-pod
+JAX + Pallas framework. See README.md / DESIGN.md / EXPERIMENTS.md."""
+__version__ = "1.0.0"

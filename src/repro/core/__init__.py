@@ -1,0 +1,10 @@
+"""TN-KDE core: the paper's contribution as a composable library.
+
+Public entry point: ``TNKDE`` (build-once, query-many temporal network KDE),
+plus the individual pieces for power users (RangeForest, DynamicRangeForest,
+AggregateDistanceIndex, kernel decompositions, lixel sharing).
+"""
+from .events import Events, EdgeEvents, group_events_by_edge  # noqa: F401
+from .kernels_math import get_kernel  # noqa: F401
+from .network import Lixels, RoadNetwork, build_lixels  # noqa: F401
+from .tnkde import TNKDE, QueryStats  # noqa: F401

@@ -1,0 +1,265 @@
+"""Distributed TN-KDE: the paper's estimator as a shard_map workload.
+
+Distribution scheme (DESIGN.md §3):
+
+  * the event edges — and their merge-tree tables — are **sharded** across the
+    mesh's data axes: each device owns a contiguous slab of (rebased) flat
+    tables. Index memory scales 1/devices, the property that matters at
+    fleet scale (the NY dataset's forest is ~10 GB; 256 devices make it 40MB).
+  * edges are assigned to shards by greedy balanced packing over n_e log n_e
+    work (descending first-fit) — the KDE analogue of straggler mitigation:
+    no device owns all the heavy edges.
+  * query atoms are routed to the shard that owns their edge, padded to the
+    per-shard max, and evaluated with the jit'd flat engine
+    (``jax_engine.eval_atoms_flat``); per-device partial heatmaps are
+    ``psum``-reduced over the data axes.
+
+``DistributedTNKDE`` is mesh-agnostic: tests run it on 8 host devices;
+launch/dryrun.py lowers the same program for the production 16x16 and
+2x16x16 meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .aggregation import N_COMBOS
+from .jax_engine import FlatAtoms, FlatForest, eval_atoms_flat
+from .plan import AtomSet
+from .rfs import RangeForest
+
+__all__ = ["ShardedForest", "DistributedTNKDE", "assign_edges", "build_sharded", "pack_atoms"]
+
+
+@dataclasses.dataclass
+class ShardedForest:
+    """Stacked per-shard flat tables: leading axis = shard (one per device)."""
+
+    pos_flat: np.ndarray  # [S, Tmax]
+    cum_flat: np.ndarray  # [S, Tmax, 4, K]
+    edge_base: np.ndarray  # [S, E]  (rebased; 0 for edges not in shard)
+    n_pad: np.ndarray  # [S, E]   (0 for edges not in shard)
+    time_flat: np.ndarray  # [S, Nmax] (+inf pad)
+    time_ptr: np.ndarray  # [S, E+1]
+    shard_of_edge: np.ndarray  # [E]
+    max_levels: int
+    search_steps: int
+    n_shards: int
+
+    @property
+    def bytes_per_shard(self) -> int:
+        return (
+            self.pos_flat.nbytes + self.cum_flat.nbytes + self.time_flat.nbytes
+        ) // max(self.n_shards, 1)
+
+
+def assign_edges(counts: np.ndarray, n_shards: int) -> np.ndarray:
+    """Greedy balanced assignment by n log n work, descending first-fit."""
+    w = counts * np.maximum(np.log2(np.maximum(counts, 2)), 1.0)
+    order = np.argsort(-w, kind="stable")
+    load = np.zeros(n_shards)
+    out = np.zeros(len(counts), np.int64)
+    for e in order:
+        s = int(np.argmin(load))
+        out[e] = s
+        load[s] += w[e]
+    return out
+
+
+def build_sharded(rf: RangeForest, n_shards: int) -> ShardedForest:
+    """Repack a built RangeForest's flat tables into per-shard rebased slabs."""
+    E = rf.net.n_edges
+    counts = np.diff(rf.ee.ptr)
+    shard_of = assign_edges(counts, n_shards)
+    K = rf.ctx.K
+    blocks = (rf.n_pad * rf.n_levels).astype(np.int64)
+    t_sizes = np.bincount(shard_of, weights=blocks.astype(np.float64), minlength=n_shards).astype(np.int64)
+    n_sizes = np.bincount(shard_of, weights=counts.astype(np.float64), minlength=n_shards).astype(np.int64)
+    tmax = max(int(t_sizes.max(initial=0)), 1)
+    nmax = max(int(n_sizes.max(initial=0)), 1)
+    pos = np.full((n_shards, tmax), np.inf, np.float32)
+    cum = np.zeros((n_shards, tmax, N_COMBOS, K), np.float32)
+    base = np.zeros((n_shards, E), np.int64)
+    npad = np.zeros((n_shards, E), np.int64)
+    times = np.full((n_shards, nmax), np.inf, np.float64)
+    tptr = np.zeros((n_shards, E + 1), np.int64)
+    t_off = np.zeros(n_shards, np.int64)
+    n_off = np.zeros(n_shards, np.int64)
+    for e in range(E):
+        s = shard_of[e]
+        blk = int(blocks[e])
+        if blk:
+            src = int(rf.edge_base[e])
+            pos[s, t_off[s] : t_off[s] + blk] = rf.pos_flat[src : src + blk]
+            cum[s, t_off[s] : t_off[s] + blk] = rf.cum_flat[src : src + blk]
+            base[s, e] = t_off[s]
+            npad[s, e] = rf.n_pad[e]
+            t_off[s] += blk
+        c = int(counts[e])
+        lo = int(rf.ee.ptr[e])
+        times[s, n_off[s] : n_off[s] + c] = rf.ee.time[lo : lo + c]
+        n_off[s] += c
+    for s in range(n_shards):
+        own = np.where(shard_of == s, counts, 0)
+        tptr[s, 1:] = np.cumsum(own)
+    steps = max(int(np.ceil(np.log2(max(int(rf.n_pad.max(initial=1)), 1) + 1))) + 1, 1)
+    return ShardedForest(
+        pos_flat=pos,
+        cum_flat=cum,
+        edge_base=base,
+        n_pad=npad,
+        time_flat=times,
+        time_ptr=tptr,
+        shard_of_edge=shard_of,
+        max_levels=rf.max_levels,
+        search_steps=steps,
+        n_shards=n_shards,
+    )
+
+
+def pack_atoms(
+    sf: ShardedForest, atoms: AtomSet, combo: np.ndarray, q_full: np.ndarray
+) -> FlatAtoms:
+    """Route atoms to their edge's shard; pad each shard to the global max."""
+    S = sf.n_shards
+    shard = sf.shard_of_edge[atoms.edge]
+    order = np.argsort(shard, kind="stable")
+    counts = np.bincount(shard, minlength=S)
+    mp = max(int(counts.max()), 1)
+
+    def packed(x, fill=0):
+        out = np.full((S, mp) + x.shape[1:], fill, x.dtype)
+        off = 0
+        for s in range(S):
+            c = int(counts[s])
+            out[s, :c] = x[order[off : off + c]]
+            off += c
+        return out
+
+    return FlatAtoms(
+        lixel=packed(atoms.lixel),
+        edge=packed(atoms.edge),
+        combo=packed(combo.astype(np.int32)),
+        q_vec=packed(q_full.astype(np.float32), 0.0),
+        pos_hi=packed(atoms.pos_hi.astype(np.float32), np.float32(-np.inf)),
+        pos_lo1=packed(atoms.pos_lo1.astype(np.float32), np.float32(np.inf)),
+        lo1_right=packed(atoms.lo1_right, False),
+        pos_lo2=packed(atoms.pos_lo2.astype(np.float32), np.float32(np.inf)),
+        valid=packed(np.ones(atoms.m, bool), False),
+    )
+
+
+class DistributedTNKDE:
+    """Multi-device front end over a built (host) TNKDE with solution='rfs'."""
+
+    def __init__(self, tnkde, mesh: Mesh, axes: Sequence[str] = ("data",)):
+        if tnkde.solution != "rfs":
+            raise ValueError("distributed evaluation shards the RFS index")
+        self.tnkde = tnkde
+        self.mesh = mesh
+        self.axes = tuple(axes)
+        n_shards = int(math.prod(mesh.shape[a] for a in self.axes))
+        self.sf = build_sharded(tnkde.index, n_shards)
+        self.atoms = self._collect_atoms()
+        self._fn = None
+
+    def _collect_atoms(self) -> AtomSet:
+        """Run the host planner for every query edge (window-independent)."""
+        from .plan import build_atoms, build_edge_geometry
+        from .shortest_path import bounded_dijkstra
+
+        t = self.tnkde
+        net, lix, ee, ctx = t.net, t.lix, t.ee, t.ctx
+        radius = ctx.b_s + float(net.edge_len.max()) + 1.0
+        parts = []
+        E = net.n_edges
+        for blk_lo in range(0, E, t.edge_block):
+            blk = np.arange(blk_lo, min(blk_lo + t.edge_block, E))
+            verts = np.unique(np.concatenate([net.edge_src[blk], net.edge_dst[blk]]))
+            rows = bounded_dijkstra(net, verts, radius, adj=t._adj)
+            vmap_ = {int(v): i for i, v in enumerate(verts)}
+            for a in blk:
+                geom = build_edge_geometry(
+                    net,
+                    lix,
+                    ee,
+                    int(a),
+                    ctx.b_s,
+                    np.stack([rows[vmap_[int(net.edge_src[a])]], rows[vmap_[int(net.edge_dst[a])]]]),
+                )
+                atoms = build_atoms(geom, ctx)
+                if atoms.m:
+                    parts.append(atoms)
+        return AtomSet.concat(parts)
+
+    def _shard_fn(self):
+        if self._fn is not None:
+            return self._fn
+        axes = self.axes
+        spec = P(axes)
+        L = self.tnkde.n_lixels
+        max_levels, search_steps = self.sf.max_levels, self.sf.search_steps
+
+        def shard_body(forest, fa, tw):
+            forest = jax.tree.map(lambda x: x[0], forest)
+            fa_local = jax.tree.map(lambda x: x[0], fa)
+            t_lo, t_hi, lo_right = tw
+            vals = eval_atoms_flat(
+                forest,
+                fa_local,
+                t_lo,
+                t_hi,
+                lo_right,
+                max_levels=max_levels,
+                search_steps=search_steps,
+            )
+            f = jnp.zeros((L,), vals.dtype).at[fa_local.lixel].add(vals)
+            return jax.lax.psum(f, axes)
+
+        dummy_forest = FlatForest(
+            pos_flat=None, cum_flat=None, edge_base=None, n_pad=None, time_flat=None, time_ptr=None
+        )
+        in_specs = (
+            FlatForest(*(spec,) * 6),
+            FlatAtoms(*(spec,) * 9),
+            (P(), P(), P()),
+        )
+        self._fn = jax.jit(
+            jax.shard_map(shard_body, mesh=self.mesh, in_specs=in_specs, out_specs=P())
+        )
+        return self._fn
+
+    def query(self, ts: Sequence[float]) -> np.ndarray:
+        """[W, L] heatmaps, evaluated across the mesh."""
+        t = self.tnkde
+        ctx = t.ctx
+        atoms = self.atoms
+        fn = self._shard_fn()
+        forest = FlatForest(
+            pos_flat=jnp.asarray(self.sf.pos_flat),
+            cum_flat=jnp.asarray(self.sf.cum_flat),
+            edge_base=jnp.asarray(self.sf.edge_base),
+            n_pad=jnp.asarray(self.sf.n_pad),
+            time_flat=jnp.asarray(self.sf.time_flat.astype(np.float32)),
+            time_ptr=jnp.asarray(self.sf.time_ptr),
+        )
+        out = np.zeros((len(ts), t.n_lixels))
+        for w_i, tq in enumerate(ts):
+            qt = (ctx.qt_left(tq), ctx.qt_right(tq))
+            bounds = ((tq - ctx.b_t, tq, False), (tq, tq + ctx.b_t, True))
+            for w in (0, 1):
+                q_full = (atoms.qs[:, :, None] * qt[w][None, :]).reshape(atoms.m, -1)
+                combo = atoms.side_feat.astype(np.int64) * 2 + w
+                fa = pack_atoms(self.sf, atoms, combo, q_full)
+                fa = jax.tree.map(jnp.asarray, fa)
+                t_lo, t_hi, lo_r = bounds[w]
+                f = fn(forest, fa, (jnp.float32(t_lo), jnp.float32(t_hi), jnp.asarray(lo_r)))
+                out[w_i] += np.asarray(f, np.float64)
+        return out

@@ -1,0 +1,391 @@
+"""Dynamic Range Forest Solution (paper §5), TPU-adapted.
+
+DRFS replaces RFS's rank-based splits with *real-position* bisection so the
+structure is known before the data arrives — that is what makes streaming
+insertion possible (§5.1) and gives the accuracy/size dial H (§5.2).
+
+Dense-array form (DESIGN.md §2): per edge, an implicit position-bisection
+tree of depth H over [0, len_e] (node (d, i) covers the i-th 1/2^d fraction).
+Every node stores its events in arrival = time order with inclusive prefix
+sums of the moment block Φ — each event appears on its root-to-leaf path, so
+construction is O(n_e · H) time and space (Lemma 5.1); adding one more depth
+level ("extension operation", Algorithm 4) costs O(n_e), and streaming
+inserts append to pending buffers that queries scan linearly until a
+geometric ``seal`` merges them.
+
+Queries map a position interval to fully-covered leaves at depth
+H_q = min(H, H_0), canonically decompose that leaf range (<= 2 nodes per
+level, the same walk as rfs.py), and resolve the *time* window with two
+binary searches per node (events inside a node are time-sorted).
+
+  * quantized mode (paper §5.2): partially covered boundary leaves at depth
+    H_q are dropped (the paper's "return a zero-vector"); accuracy rises with
+    H_0 exactly as Figure 20.
+  * ``exact_leaf_scan`` (testing convenience, beyond paper): boundary leaves
+    are scanned event-by-event, making DRFS exact — used to validate the
+    machinery against the SPS oracle.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .aggregation import (
+    MomentContext,
+    N_COMBOS,
+    segmented_cumsum,
+    segmented_searchsorted,
+)
+from .events import EdgeEvents
+from .network import RoadNetwork
+from .plan import AtomSet
+
+__all__ = ["DynamicRangeForest"]
+
+
+class DynamicRangeForest:
+    def __init__(
+        self,
+        net: RoadNetwork,
+        ee: EdgeEvents,
+        ctx: MomentContext,
+        phi: np.ndarray,
+        *,
+        depth: int = 8,
+    ):
+        self.net = net
+        self.ctx = ctx
+        self.depth = 0
+        E = net.n_edges
+        # sealed event arrays (grouped by edge, time-sorted within edge)
+        self.ptr = ee.ptr.copy()
+        self.pos = ee.pos.copy()
+        self.time = ee.time.copy()
+        self.phi = phi.copy()
+        self.lens = net.edge_len
+        # per-depth CSR: levels[d] = (node_ptr [E*2^d+1], time_s [N], cum [N,4,K], ev_idx [N])
+        self.levels: List[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]] = []
+        # streaming buffers
+        self._pend_edge: List[np.ndarray] = []
+        self._pend_pos: List[np.ndarray] = []
+        self._pend_time: List[np.ndarray] = []
+        self._pend_phi: List[np.ndarray] = []
+        self._n_pending = 0
+        self._build_level(0)
+        for _ in range(depth):
+            self.extend()
+
+    # ----------------------------------------------------------- structure
+    @property
+    def n_sealed(self) -> int:
+        return int(self.pos.shape[0])
+
+    @property
+    def index_bytes(self) -> int:
+        return sum(p.nbytes + t.nbytes + c.nbytes + i.nbytes for p, t, c, i in self.levels)
+
+    def _node_of(self, edge: np.ndarray, pos: np.ndarray, d: int) -> np.ndarray:
+        u = pos / self.lens[edge]
+        return np.minimum((u * (1 << d)).astype(np.int64), (1 << d) - 1)
+
+    def _build_level(self, d: int) -> None:
+        E = self.net.n_edges
+        n = self.n_sealed
+        counts = np.diff(self.ptr)
+        edge_of = np.repeat(np.arange(E, dtype=np.int64), counts)
+        node_local = self._node_of(edge_of, self.pos, d)
+        node = edge_of * (1 << d) + node_local
+        order = np.argsort(node, kind="stable")  # keeps time order inside node
+        node_s = node[order]
+        node_ptr = np.zeros(E * (1 << d) + 1, dtype=np.int64)
+        np.add.at(node_ptr, node_s + 1, 1)
+        np.cumsum(node_ptr, out=node_ptr)
+        cum = segmented_cumsum(self.phi[order], node_ptr)
+        self.levels.append((node_ptr, self.time[order], cum, order.astype(np.int64)))
+
+    def extend(self) -> None:
+        """Extension operation (Algorithm 4): add one depth level, O(N)."""
+        self.depth += 1
+        self._build_level(self.depth)
+
+    # ------------------------------------------------------------ streaming
+    def insert(self, edge: np.ndarray, pos: np.ndarray, time: np.ndarray, phi: np.ndarray):
+        """Streaming insertion (persistent/streaming mode, §5).
+
+        Events must arrive in nondecreasing time order (streaming data).
+        Amortized O(H): appended to pending buffers; a geometric ``seal``
+        merges them when they exceed 25% of the sealed set.
+        """
+        self._pend_edge.append(np.asarray(edge, np.int64))
+        self._pend_pos.append(np.asarray(pos, np.float64))
+        self._pend_time.append(np.asarray(time, np.float64))
+        self._pend_phi.append(np.asarray(phi))
+        self._n_pending += len(pos)
+        if self._n_pending > max(self.n_sealed, 64) // 4:
+            self.seal()
+
+    def seal(self) -> None:
+        if not self._n_pending:
+            return
+        pe = np.concatenate(self._pend_edge)
+        pp = np.concatenate(self._pend_pos)
+        pt = np.concatenate(self._pend_time)
+        pf = np.concatenate(self._pend_phi)
+        E = self.net.n_edges
+        counts_old = np.diff(self.ptr)
+        edge_old = np.repeat(np.arange(E, dtype=np.int64), counts_old)
+        edge = np.concatenate([edge_old, pe])
+        pos = np.concatenate([self.pos, pp])
+        time = np.concatenate([self.time, pt])
+        phi = np.concatenate([self.phi, pf], axis=0) if self.phi.size else pf
+        order = np.lexsort((time, edge))
+        self.pos, self.time, self.phi = pos[order], time[order], phi[order]
+        ptr = np.zeros(E + 1, dtype=np.int64)
+        np.add.at(ptr, edge + 1, 1)
+        np.cumsum(ptr, out=ptr)
+        self.ptr = ptr
+        depth = self.depth
+        self.levels = []
+        self.depth = 0
+        self._build_level(0)
+        for _ in range(depth):
+            self.extend()
+        self._pend_edge, self._pend_pos, self._pend_time, self._pend_phi = [], [], [], []
+        self._n_pending = 0
+
+    # -------------------------------------------------------------- queries
+    def eval_atoms(
+        self,
+        atoms: AtomSet,
+        t: float,
+        *,
+        h0: Optional[int] = None,
+        exact_leaf_scan: bool = False,
+        **_,
+    ) -> np.ndarray:
+        M = atoms.m
+        if M == 0:
+            return np.zeros(0)
+        ctx = self.ctx
+        hq = self.depth if h0 is None else min(h0, self.depth)
+        qt = (ctx.qt_left(t), ctx.qt_right(t))
+        t_bounds = ((t - ctx.b_t, t), (t, t + ctx.b_t))
+        lens = self.lens[atoms.edge]
+        nleaf = 1 << hq
+        w_leaf = lens / nleaf
+        # fully-covered leaf range [leaf_lo, leaf_hi) at depth hq
+        hi_ok = np.minimum(np.floor(atoms.pos_hi / w_leaf), nleaf).astype(np.int64)
+        hi_ok = np.where(atoms.pos_hi >= lens, nleaf, np.maximum(hi_ok, 0))
+        lo1 = np.asarray(atoms.pos_lo1, np.float64)
+        lo2 = np.asarray(atoms.pos_lo2, np.float64)
+        lo1_leaf = np.where(
+            np.isfinite(lo1),
+            np.where(
+                atoms.lo1_right,
+                np.floor(lo1 / w_leaf) + 1,  # need leaf start strictly > lo1
+                np.ceil(lo1 / w_leaf),
+            ),
+            0,
+        ).astype(np.int64)
+        lo2_leaf = np.where(np.isfinite(lo2), np.ceil(lo2 / w_leaf), 0).astype(np.int64)
+        leaf_lo = np.clip(np.maximum(lo1_leaf, lo2_leaf), 0, nleaf)
+        leaf_hi = np.clip(hi_ok, 0, nleaf)
+        out = np.zeros(M)
+        for w in (0, 1):
+            q_full = (atoms.qs[:, :, None] * qt[w][None, :]).reshape(M, -1)
+            combo = atoms.side_feat.astype(np.int64) * 2 + w
+            out += self._decompose(atoms, leaf_lo, leaf_hi, hq, t_bounds[w], combo, q_full, w)
+            if exact_leaf_scan:
+                out += self._scan_partials(
+                    atoms, leaf_lo, leaf_hi, hq, t_bounds[w], combo, q_full, w
+                )
+        if self._n_pending:
+            out += self._scan_pending(atoms, t, qt)
+        return out
+
+    # canonical decomposition over the leaf range; per emitted node, resolve
+    # the time window with two binary searches in that node's time-sorted run.
+    def _decompose(self, atoms, leaf_lo, leaf_hi, hq, tb, combo, q_full, w):
+        M = atoms.m
+        out = np.zeros(M)
+        l = leaf_lo.astype(np.int64).copy()
+        r = np.maximum(leaf_hi.astype(np.int64), l)
+        eid = atoms.edge
+        for lev in range(hq + 1):
+            active = l < r
+            if not active.any():
+                break
+            d = hq - lev  # actual tree depth of buckets at this step
+            node_ptr, time_s, cum, _ = self.levels[d]
+            for side in (0, 1):
+                if side == 0:
+                    emit = active & ((l & 1) == 1)
+                    b = l
+                else:
+                    emit = active & ((r & 1) == 1)
+                    b = r - 1
+                idx = np.nonzero(emit)[0]
+                if len(idx):
+                    node = eid[idx] * (1 << d) + b[idx]
+                    out[idx] += self._node_window_dot(
+                        node_ptr, time_s, cum, node, idx, tb, combo, q_full, w
+                    )
+            l = np.where(active & ((l & 1) == 1), l + 1, l) >> 1
+            r = np.where(active & ((r & 1) == 1), r - 1, r) >> 1
+            if lev == hq:
+                break
+        return out
+
+    def _node_window_dot(self, node_ptr, time_s, cum, node, idx, tb, combo, q_full, w):
+        n = len(idx)
+        s_lo = node_ptr[node]
+        s_hi = node_ptr[node + 1]
+        t0, t1 = tb
+        # left half-window [t-b_t, t] has an inclusive lower bound ('left');
+        # right half-window (t, t+b_t] has an exclusive one ('right' on t0)
+        i_lo = segmented_searchsorted(
+            time_s, s_lo, s_hi, np.full(n, t0), np.full(n, w == 1, dtype=bool)
+        )
+        i_hi = segmented_searchsorted(time_s, s_lo, s_hi, np.full(n, t1), np.ones(n, bool))
+        i_hi = np.maximum(i_hi, i_lo)
+        c = combo[idx]
+
+        def pref(i):
+            v = cum[np.maximum(i - 1, 0), c]
+            return np.where((i > s_lo)[:, None], v, 0.0)
+
+        mom = pref(i_hi) - pref(i_lo)
+        return np.einsum("mk,mk->m", q_full[idx], mom)
+
+    def _scan_partials(self, atoms, leaf_lo, leaf_hi, hq, tb, combo, q_full, w):
+        """Exact mode: scan the (<= 3) partially covered boundary leaves."""
+        node_ptr, time_s, cum, ev_order = self.levels[hq]
+        M = atoms.m
+        nleaf = 1 << hq
+        lens = self.lens[atoms.edge]
+        w_leaf = lens / nleaf
+        # an event outside the fully-covered range [leaf_lo, leaf_hi) can only
+        # pass the bounds if it sits in the leaf containing max(lo1, lo2) or
+        # the leaf containing pos_hi — scan exactly those (deduplicated).
+        lo_eff = np.maximum(
+            np.where(np.isfinite(atoms.pos_lo1), atoms.pos_lo1, -np.inf),
+            np.where(np.isfinite(atoms.pos_lo2), atoms.pos_lo2, -np.inf),
+        )
+        cl = np.where(
+            np.isfinite(lo_eff), np.clip(np.floor(lo_eff / w_leaf), 0, nleaf - 1), -1
+        ).astype(np.int64)
+        cu = np.where(
+            atoms.pos_hi >= lens,
+            -1,
+            np.clip(np.floor(np.maximum(atoms.pos_hi, 0.0) / w_leaf), -1, nleaf - 1),
+        ).astype(np.int64)
+        cu = np.where(atoms.pos_hi < 0, -1, cu)
+        out = np.zeros(M)
+        pairs = []
+        lo_c = np.clip(leaf_lo, 0, nleaf)
+        hi_c = np.clip(leaf_hi, 0, nleaf)
+        ok_cl = (cl >= 0) & (cl < lo_c)
+        # scan cu when it is not inside the fully-covered range; dedup vs cl
+        ok_cu = (cu >= 0) & ((cu < lo_c) | (cu >= hi_c)) & ~(ok_cl & (cu == cl))
+        for leaf, ok in ((cl, ok_cl), (cu, ok_cu)):
+            idx = np.nonzero(ok)[0]
+            if len(idx):
+                pairs.append((idx, atoms.edge[idx] * nleaf + leaf[idx]))
+        for idx, node in pairs:
+            s_lo = node_ptr[node]
+            s_hi = node_ptr[node + 1]
+            counts = (s_hi - s_lo).astype(np.int64)
+            if counts.sum() == 0:
+                continue
+            rep_atom = np.repeat(idx, counts)
+            ev = (
+                np.repeat(s_lo, counts)
+                + np.arange(int(counts.sum()))
+                - np.repeat(np.concatenate([[0], np.cumsum(counts)[:-1]]), counts)
+            )
+            ev_abs = ev_order[ev]
+            p = self.pos[ev_abs]
+            te = self.time[ev_abs]
+            keep = ((te >= tb[0]) if w == 0 else (te > tb[0])) & (te <= tb[1])
+            keep &= _pos_mask(atoms, rep_atom, p)
+            if not keep.any():
+                continue
+            rep_atom, ev_abs = rep_atom[keep], ev_abs[keep]
+            contrib = np.einsum(
+                "mk,mk->m", q_full[rep_atom], self.phi[ev_abs, combo[rep_atom]]
+            )
+            np.add.at(out, rep_atom, contrib)
+        return out
+
+    def _scan_pending(self, atoms, t, qt):
+        ctx = self.ctx
+        pe = np.concatenate(self._pend_edge)
+        pp = np.concatenate(self._pend_pos)
+        pt = np.concatenate(self._pend_time)
+        pf = np.concatenate(self._pend_phi)
+        # pending CSR by edge
+        order = np.argsort(pe, kind="stable")
+        pe_s, pp_s, pt_s, pf_s = pe[order], pp[order], pt[order], pf[order]
+        E = self.net.n_edges
+        pptr = np.zeros(E + 1, np.int64)
+        np.add.at(pptr, pe_s + 1, 1)
+        np.cumsum(pptr, out=pptr)
+        counts = (pptr[atoms.edge + 1] - pptr[atoms.edge]).astype(np.int64)
+        total = int(counts.sum())
+        out = np.zeros(atoms.m)
+        if total == 0:
+            return out
+        rep_atom = np.repeat(np.arange(atoms.m), counts)
+        ev = (
+            np.repeat(pptr[atoms.edge], counts)
+            + np.arange(total)
+            - np.repeat(np.concatenate([[0], np.cumsum(counts)[:-1]]), counts)
+        )
+        ok_pos = _pos_mask(atoms, rep_atom, pp_s[ev])
+        for w, (t0, t1) in enumerate(((t - ctx.b_t, t), (t, t + ctx.b_t))):
+            q_full = (atoms.qs[:, :, None] * qt[w][None, :]).reshape(atoms.m, -1)
+            combo = atoms.side_feat.astype(np.int64) * 2 + w
+            te = pt_s[ev]
+            keep = ok_pos & ((te >= t0) if w == 0 else (te > t0)) & (te <= t1)
+            sel = np.nonzero(keep)[0]
+            if not len(sel):
+                continue
+            ra = rep_atom[sel]
+            contrib = np.einsum("mk,mk->m", q_full[ra], pf_s[ev[sel], combo[ra]])
+            np.add.at(out, ra, contrib)
+        return out
+
+    # LS support (depth-0 node = whole edge, O(1) per edge)
+    def dominated_moments(self, edges: np.ndarray, t: float, side: int) -> np.ndarray:
+        ctx = self.ctx
+        edges = np.asarray(edges, np.int64)
+        node_ptr, time_s, cum, _ = self.levels[0]
+        qt = (ctx.qt_left(t), ctx.qt_right(t))
+        n = len(edges)
+        M = np.zeros((n, ctx.k_s))
+        for w, (t0, t1) in enumerate(((t - ctx.b_t, t), (t, t + ctx.b_t))):
+            s_lo = node_ptr[edges]
+            s_hi = node_ptr[edges + 1]
+            i_lo = segmented_searchsorted(
+                time_s, s_lo, s_hi, np.full(n, t0), np.full(n, w == 1)
+            )
+            i_hi = segmented_searchsorted(time_s, s_lo, s_hi, np.full(n, t1), np.ones(n, bool))
+            i_hi = np.maximum(i_hi, i_lo)
+            c = np.full(n, side * 2 + w)
+
+            def pref(i):
+                v = cum[np.maximum(i - 1, 0), c]
+                return np.where((i > s_lo)[:, None], v, 0.0)
+
+            mom = (pref(i_hi) - pref(i_lo)).reshape(n, ctx.k_s, ctx.k_t)
+            M += mom @ qt[w]
+        return M
+
+
+def _pos_mask(atoms: AtomSet, rep_atom: np.ndarray, p: np.ndarray) -> np.ndarray:
+    hi_ok = p <= atoms.pos_hi[rep_atom]
+    lo1 = atoms.pos_lo1[rep_atom]
+    lo1_ok = np.where(atoms.lo1_right[rep_atom], p > lo1, p >= lo1)
+    lo2_ok = p >= atoms.pos_lo2[rep_atom]
+    return hi_ok & lo1_ok & lo2_ok

@@ -1,0 +1,93 @@
+"""Event sets (paper Def 3.3): an event o_i = (p_i, t_i) lies on an edge at a
+position (metres from the edge's src endpoint) and carries a timestamp.
+
+``EdgeEvents`` is the canonical per-edge, time-sorted CSR layout every index in
+this package (ADA / RFS / DRFS) consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .network import RoadNetwork
+
+__all__ = ["Events", "EdgeEvents", "group_events_by_edge"]
+
+
+@dataclasses.dataclass
+class Events:
+    """Flat event set. ``edge_id[i]``, ``pos[i]`` (metres from edge src,
+    clipped to [0, len]), ``time[i]`` (seconds, arbitrary epoch)."""
+
+    edge_id: np.ndarray  # int32 [N]
+    pos: np.ndarray  # float64 [N]
+    time: np.ndarray  # float64 [N]
+
+    def __post_init__(self):
+        self.edge_id = np.asarray(self.edge_id, dtype=np.int32)
+        self.pos = np.asarray(self.pos, dtype=np.float64)
+        self.time = np.asarray(self.time, dtype=np.float64)
+
+    @property
+    def n(self) -> int:
+        return int(self.edge_id.shape[0])
+
+    def time_span(self):
+        if self.n == 0:
+            return 0.0, 1.0
+        return float(self.time.min()), float(self.time.max())
+
+
+@dataclasses.dataclass
+class EdgeEvents:
+    """Events grouped per edge and sorted by time within each edge.
+
+    ``ptr`` is [E+1]; the slice [ptr[e], ptr[e+1]) holds edge e's events in
+    ascending *time* order (the range-forest version axis, §4.1). ``pos`` is
+    the distance from the edge's src endpoint (= the paper's d(v_c, p_i)).
+    """
+
+    ptr: np.ndarray  # int64 [E+1]
+    pos: np.ndarray  # float64 [N]
+    time: np.ndarray  # float64 [N]
+    t_min: float
+    t_max: float
+
+    @property
+    def n(self) -> int:
+        return int(self.pos.shape[0])
+
+    def count(self, e: int) -> int:
+        return int(self.ptr[e + 1] - self.ptr[e])
+
+    def slice(self, e: int):
+        lo, hi = int(self.ptr[e]), int(self.ptr[e + 1])
+        return self.pos[lo:hi], self.time[lo:hi]
+
+
+def merge_edge_events(net: RoadNetwork, ee: EdgeEvents, ev: Events) -> EdgeEvents:
+    """Merge a new event batch into an existing EdgeEvents (streaming)."""
+    counts = np.diff(ee.ptr)
+    edge_old = np.repeat(np.arange(net.n_edges, dtype=np.int32), counts)
+    pos_new = np.clip(ev.pos, 0.0, net.edge_len[ev.edge_id] if ev.n else 0.0)
+    merged = Events(
+        edge_id=np.concatenate([edge_old, ev.edge_id]),
+        pos=np.concatenate([ee.pos, pos_new]),
+        time=np.concatenate([ee.time, ev.time]),
+    )
+    return group_events_by_edge(net, merged)
+
+
+def group_events_by_edge(net: RoadNetwork, ev: Events) -> EdgeEvents:
+    if ev.n and (ev.edge_id.min() < 0 or ev.edge_id.max() >= net.n_edges):
+        raise ValueError("event edge_id out of range")
+    pos = np.clip(ev.pos, 0.0, net.edge_len[ev.edge_id] if ev.n else 0.0)
+    # stable sort by (edge, time)
+    order = np.lexsort((ev.time, ev.edge_id))
+    eid, pos, time = ev.edge_id[order], pos[order], ev.time[order]
+    ptr = np.zeros(net.n_edges + 1, dtype=np.int64)
+    np.add.at(ptr, eid + 1, 1)
+    np.cumsum(ptr, out=ptr)
+    t_min, t_max = (float(time.min()), float(time.max())) if ev.n else (0.0, 1.0)
+    return EdgeEvents(ptr=ptr, pos=pos, time=time, t_min=t_min, t_max=t_max)

@@ -1,0 +1,124 @@
+"""JAX port of the RFS query engine (flat-table, ragged-atom form).
+
+Same algorithm as rfs.RangeForest._decompose_search, expressed as pure
+jax.numpy on the flat tables so it can run under jit / shard_map on
+TPU meshes. Scalar gathers only — memory stays O(M) regardless of table
+size (the Pallas ``tree_query`` kernel is the size-classed VMEM-resident
+accelerator for the same math; this engine is the general fallback and the
+distribution vehicle).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FlatForest", "FlatAtoms", "eval_atoms_flat"]
+
+
+class FlatForest(NamedTuple):
+    """Flat merge-tree tables for a set of edges (see rfs.RangeForest)."""
+
+    pos_flat: jnp.ndarray  # [T] position-sorted bucket tables (+inf pad)
+    cum_flat: jnp.ndarray  # [T, 4, K] inclusive per-bucket prefix moments
+    edge_base: jnp.ndarray  # [E] flat offset of each edge's block
+    n_pad: jnp.ndarray  # [E] padded event count (power of two; 0 = no events)
+    time_flat: jnp.ndarray  # [N] per-edge time-sorted event times
+    time_ptr: jnp.ndarray  # [E+1] event offsets
+
+
+class FlatAtoms(NamedTuple):
+    """Flattened window-resolved atoms (see plan.AtomSet)."""
+
+    lixel: jnp.ndarray  # [M] output index
+    edge: jnp.ndarray  # [M]
+    combo: jnp.ndarray  # [M] int32 in [0, 4): (side_feat, window half)
+    q_vec: jnp.ndarray  # [M, K]
+    pos_hi: jnp.ndarray  # [M]
+    pos_lo1: jnp.ndarray  # [M]
+    lo1_right: jnp.ndarray  # [M] bool
+    pos_lo2: jnp.ndarray  # [M]
+    valid: jnp.ndarray  # [M] bool (padding mask)
+
+
+def _seg_search(vals, seg_lo, seg_hi, q, right, steps: int):
+    def body(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) >> 1
+        v = vals[jnp.where(lo < hi, mid, 0)]
+        go = jnp.where(right, v <= q, v < q) & (lo < hi)
+        return jnp.where(go, mid + 1, lo), jnp.where(go | (lo >= hi), hi, mid)
+
+    lo, _ = jax.lax.fori_loop(0, steps, body, (seg_lo, seg_hi))
+    return lo
+
+
+@functools.partial(jax.jit, static_argnames=("max_levels", "search_steps"))
+def eval_atoms_flat(
+    forest: FlatForest,
+    atoms: FlatAtoms,
+    t_lo: jnp.ndarray,  # scalar window lower bound (time)
+    t_hi: jnp.ndarray,  # scalar upper bound
+    lo_right: jnp.ndarray,  # scalar bool: lower bound exclusive?
+    *,
+    max_levels: int,
+    search_steps: int,
+) -> jnp.ndarray:
+    """Per-atom aggregated Q·A over (time window × position interval): [M]."""
+    M = atoms.lixel.shape[0]
+    eid = atoms.edge
+    base = forest.edge_base[eid]
+    npad = forest.n_pad[eid]
+    # time-rank range within each atom's edge
+    s_lo = forest.time_ptr[eid]
+    s_hi = forest.time_ptr[eid + 1]
+    r_lo = (
+        _seg_search(
+            forest.time_flat, s_lo, s_hi, jnp.full((M,), t_lo), jnp.full((M,), lo_right), search_steps
+        )
+        - s_lo
+    )
+    r_hi = (
+        _seg_search(
+            forest.time_flat, s_lo, s_hi, jnp.full((M,), t_hi), jnp.ones((M,), bool), search_steps
+        )
+        - s_lo
+    )
+
+    def level_body(lev, state):
+        l, r, acc = state
+
+        def bucket_val(b, on):
+            seg_lo = base + lev * npad + (b << lev)
+            seg_hi = seg_lo + (1 << lev)
+            i_hi = _seg_search(forest.pos_flat, seg_lo, seg_hi, atoms.pos_hi, jnp.ones((M,), bool), search_steps)
+            i_l1 = _seg_search(forest.pos_flat, seg_lo, seg_hi, atoms.pos_lo1, atoms.lo1_right, search_steps)
+            i_l2 = _seg_search(forest.pos_flat, seg_lo, seg_hi, atoms.pos_lo2, jnp.zeros((M,), bool), search_steps)
+            i_lo = jnp.maximum(i_l1, i_l2)
+            i_hi = jnp.maximum(i_hi, i_lo)
+
+            def pref(i):
+                v = forest.cum_flat[jnp.maximum(i - 1, 0), atoms.combo]
+                return jnp.where((i > seg_lo)[:, None], v, 0.0)
+
+            mom = pref(i_hi) - pref(i_lo)
+            return jnp.where(on, jnp.sum(atoms.q_vec * mom, axis=1), 0.0)
+
+        active = l < r
+        emit_l = active & ((l & 1) == 1)
+        acc = acc + bucket_val(l, emit_l)
+        l = jnp.where(emit_l, l + 1, l)
+        emit_r = (l < r) & ((r & 1) == 1)
+        acc = acc + bucket_val(r - 1, emit_r)
+        r = jnp.where(emit_r, r - 1, r)
+        return l >> 1, r >> 1, acc
+
+    l0 = r_lo.astype(jnp.int32)
+    r0 = r_hi.astype(jnp.int32)
+    # derive the accumulator init from a (possibly shard_map-varying) input so
+    # the fori_loop carry has consistent varying-manual-axes under shard_map
+    acc0 = (atoms.q_vec[:, 0] * 0.0).astype(forest.cum_flat.dtype)
+    _, _, acc = jax.lax.fori_loop(0, max_levels, level_body, (l0, r0, acc0))
+    return jnp.where(atoms.valid, acc, 0.0)

@@ -1,0 +1,364 @@
+"""Range Forest Solution (paper §4), TPU-adapted.
+
+The paper's range forest is a *persistent* spatial range tree whose versions
+are the time-sorted insertion prefixes; a time window is answered by
+subtracting two versions while descending both roots in lockstep
+(``DualDetect``, Algorithm 2).
+
+Dense-array equivalent (see DESIGN.md §2): a **time-hierarchical merge tree**.
+Per edge with n_e events (time-sorted = the version axis):
+
+  level ℓ buckets 2^ℓ consecutive time-ranks; inside a bucket, events are
+  position-sorted and carry inclusive prefix sums of the moment block Φ
+  ([4 combos, K features], see aggregation.py).
+
+A query (time-rank interval × position interval) decomposes canonically into
+<= 2 buckets per level (exactly the nodes the paper's DualDetect touches);
+each bucket contributes a difference of two prefix-sum rows located by binary
+search. Identical outputs, O(n_e log n_e) space, zero data-dependent control
+flow — every step is a masked gather, so the whole thing batches over
+(lixels × edges × windows) and maps directly onto the Pallas ``tree_query``
+kernel.
+
+Two query engines, selectable with ``cascade``:
+  * ``cascade=False`` — per-bucket binary searches: O(log² n_e) compare steps
+    per query (a binary search inside each canonical bucket).
+  * ``cascade=True``  — fractional cascading (beyond-paper §Perf
+    optimization): the three position bounds are binary-searched **once** in
+    the root bucket, then walked down the two boundary paths with O(1)
+    precomputed bridge gathers per level — restoring the paper's O(log n_e)
+    bound (their Lemma 4.1) and cutting the vectorized step count ~log n ×.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .aggregation import (
+    MomentContext,
+    N_COMBOS,
+    next_pow2,
+    segmented_cumsum,
+    segmented_searchsorted,
+    window_rank_ranges,
+)
+from .events import EdgeEvents
+from .network import RoadNetwork
+from .plan import AtomSet
+
+__all__ = ["RangeForest"]
+
+
+class RangeForest:
+    """Static exact index over all edges (paper's RFS, Lemma 4.3)."""
+
+    def __init__(
+        self,
+        net: RoadNetwork,
+        ee: EdgeEvents,
+        ctx: MomentContext,
+        phi: np.ndarray,
+        *,
+        build_bridges: bool = True,
+    ):
+        self.net = net
+        self.ee = ee
+        self.ctx = ctx
+        E = net.n_edges
+        counts = np.diff(ee.ptr)
+        self.n_pad = np.array([next_pow2(c) if c else 0 for c in counts], dtype=np.int64)
+        self.n_levels = np.array(
+            [int(p).bit_length() if p else 0 for p in self.n_pad], dtype=np.int64
+        )
+        self.max_levels = int(self.n_levels.max(initial=0))
+        block = self.n_pad * self.n_levels
+        self.edge_base = np.zeros(E + 1, dtype=np.int64)
+        np.cumsum(block, out=self.edge_base[1:])
+        T = int(self.edge_base[-1])
+        K = ctx.K
+        self.pos_flat = np.full(T, np.inf, dtype=np.float64)
+        self.cum_flat = np.zeros((T, N_COMBOS, K), dtype=np.float64)
+        self.has_bridges = build_bridges
+        # bridge[slot] for slot i-1 within a bucket at level l>=1 gives
+        # bl(i) = #(first i position-sorted elements) landing in the LEFT child
+        self.bridge = np.zeros(T, dtype=np.int32) if build_bridges else None
+        # O(1) whole-edge window aggregates for Lixel Sharing: inclusive
+        # prefix sums of Φ in raw time order, per edge.
+        self.time_cum = np.cumsum(phi, axis=0, dtype=np.float64) if len(phi) else phi
+        self._ptr = ee.ptr
+        self.index_bytes = (
+            self.pos_flat.nbytes
+            + self.cum_flat.nbytes
+            + (self.bridge.nbytes if build_bridges else 0)
+            + self.time_cum.nbytes
+        )
+
+        for e in range(E):
+            n = int(counts[e])
+            if n == 0:
+                continue
+            npad = int(self.n_pad[e])
+            nlev = int(self.n_levels[e])
+            lo = int(ee.ptr[e])
+            pos = np.full(npad, np.inf, dtype=np.float64)
+            pos[:n] = ee.pos[lo : lo + n]
+            ph = np.zeros((npad, N_COMBOS, K), dtype=np.float64)
+            ph[:n] = phi[lo : lo + n]
+            base = int(self.edge_base[e])
+            ranks = np.arange(npad, dtype=np.int64)
+            for lev in range(nlev):
+                bucket = ranks >> lev
+                order = np.lexsort((pos, bucket))
+                bsize = 1 << lev
+                bptr = np.arange(0, npad + 1, bsize)
+                cs = segmented_cumsum(ph[order], bptr)
+                sl = base + lev * npad
+                self.pos_flat[sl : sl + npad] = pos[order]
+                self.cum_flat[sl : sl + npad] = cs
+                if build_bridges and lev >= 1:
+                    to_left = (((ranks[order] >> (lev - 1)) & 1) == 0).astype(np.int64)
+                    blc = segmented_cumsum(to_left, bptr)
+                    self.bridge[sl : sl + npad] = blc.astype(np.int32)
+
+    # ------------------------------------------------------------------ LS
+    def window_edge_totals(self, edges: np.ndarray, t: float) -> np.ndarray:
+        """Whole-edge aggregates over the split window: [n, 2(left/right), 4, K].
+
+        O(1) per edge — the root-node shortcut Lixel Sharing relies on (§6).
+        """
+        edges = np.asarray(edges, dtype=np.int64)
+        lo, mid, hi = window_rank_ranges(self.ee, edges, t, self.ctx.b_t)
+        base = self._ptr[edges]
+
+        def prefix(c):
+            # time_cum is a *global* inclusive cumsum; differences of two
+            # prefixes within one edge cancel everything before the edge.
+            idx = base + c - 1
+            val = self.time_cum[np.maximum(idx, 0)]
+            return np.where((idx >= 0)[:, None, None], val, 0.0)
+
+        p_lo, p_mid, p_hi = prefix(lo), prefix(mid), prefix(hi)
+        return np.stack([p_mid - p_lo, p_hi - p_mid], axis=1)
+
+    def dominated_moments(self, edges: np.ndarray, t: float, side: int) -> np.ndarray:
+        """LS root-node shortcut: spatial moment vectors M [n, k_s] such that
+        F_e(q) = Q_s(d(q, v_side)) · M for a dominated edge (§6.2)."""
+        ctx = self.ctx
+        totals = self.window_edge_totals(edges, t)  # [n, 2, 4, K]
+        qt = (ctx.qt_left(t), ctx.qt_right(t))
+        n = totals.shape[0]
+        M = np.zeros((n, ctx.k_s))
+        for w in (0, 1):
+            A = totals[:, w, side * 2 + w].reshape(n, ctx.k_s, ctx.k_t)
+            M += A @ qt[w]
+        return M
+
+    # --------------------------------------------------------------- queries
+    def eval_atoms(self, atoms: AtomSet, t: float, *, cascade: bool = True) -> np.ndarray:
+        """Σ K_s·K_t per atom for the window [t-b_t, t+b_t]; float64 [M]."""
+        M = atoms.m
+        if M == 0:
+            return np.zeros(0)
+        ctx = self.ctx
+        uniq, inv = np.unique(atoms.edge, return_inverse=True)
+        lo_u, mid_u, hi_u = window_rank_ranges(self.ee, uniq, t, ctx.b_t)
+        qt = (ctx.qt_left(t), ctx.qt_right(t))
+        out = np.zeros(M)
+        engine = self._decompose_cascade if (cascade and self.has_bridges) else self._decompose_search
+        for w in (0, 1):
+            r_lo = (lo_u if w == 0 else mid_u)[inv]
+            r_hi = (mid_u if w == 0 else hi_u)[inv]
+            q_full = (atoms.qs[:, :, None] * qt[w][None, :]).reshape(M, -1)
+            combo = atoms.side_feat.astype(np.int64) * 2 + w
+            out += engine(atoms, r_lo, r_hi, combo, q_full)
+        return out
+
+    # ---- shared: dot an interval of a bucket with the query vector --------
+    def _interval_dot(self, idx, seg_lo, i_lo, i_hi, combo, q_full):
+        c = combo[idx]
+        i_hi = np.maximum(i_hi, i_lo)
+
+        def pref(i):
+            v = self.cum_flat[np.maximum(i - 1, 0), c]
+            return np.where((i > seg_lo)[:, None], v, 0.0)
+
+        mom = pref(i_hi) - pref(i_lo)
+        return np.einsum("mk,mk->m", q_full[idx], mom)
+
+    # ---- engine 1: per-bucket binary search --------------------------------
+    def _decompose_search(self, atoms, r_lo, r_hi, combo, q_full):
+        M = atoms.m
+        eid = atoms.edge
+        npad = self.n_pad[eid]
+        base = self.edge_base[eid]
+        out = np.zeros(M)
+        l = r_lo.astype(np.int64).copy()
+        r = r_hi.astype(np.int64).copy()
+        for lev in range(self.max_levels):
+            active = l < r
+            if not active.any():
+                break
+            for side in (0, 1):
+                if side == 0:
+                    emit = active & ((l & 1) == 1)
+                    b = l
+                else:
+                    emit = active & ((r & 1) == 1)
+                    b = r - 1
+                idx = np.nonzero(emit)[0]
+                if len(idx):
+                    seg_lo = base[idx] + lev * npad[idx] + (b[idx] << lev)
+                    seg_hi = seg_lo + (1 << lev)
+                    out[idx] += self._bucket_moment(atoms, idx, seg_lo, seg_hi, combo, q_full)
+            l = np.where(active & ((l & 1) == 1), l + 1, l) >> 1
+            r = np.where(active & ((r & 1) == 1), r - 1, r) >> 1
+        return out
+
+    def _bucket_moment(self, atoms, idx, seg_lo, seg_hi, combo, q_full):
+        n = len(idx)
+        i_hi = segmented_searchsorted(
+            self.pos_flat, seg_lo, seg_hi, atoms.pos_hi[idx], np.ones(n, bool)
+        )
+        i_lo1 = segmented_searchsorted(
+            self.pos_flat, seg_lo, seg_hi, atoms.pos_lo1[idx], atoms.lo1_right[idx]
+        )
+        i_lo2 = segmented_searchsorted(
+            self.pos_flat, seg_lo, seg_hi, atoms.pos_lo2[idx], np.zeros(n, bool)
+        )
+        i_lo = np.maximum(i_lo1, i_lo2)
+        return self._interval_dot(idx, seg_lo, i_lo, i_hi, combo, q_full)
+
+    # ---- engine 2: fractional cascading ------------------------------------
+    # Top-down two-boundary-path walk. State per atom: current level, the two
+    # path nodes (bucket ids), and for each path the three cascaded insertion
+    # ranks (hi, lo1, lo2), each *local* to the path node. The three bounds
+    # are binary-searched once, at the root; every further level is pure
+    # gathers through the `bridge` table.
+    def _decompose_cascade(self, atoms, r_lo, r_hi, combo, q_full):
+        M = atoms.m
+        eid = atoms.edge
+        npad = self.n_pad[eid]
+        nlev = self.n_levels[eid]
+        base = self.edge_base[eid]
+        out = np.zeros(M)
+
+        top = np.maximum(nlev - 1, 0)
+        seg_lo = base + top * npad
+        seg_hi = seg_lo + npad
+        j_hi = segmented_searchsorted(
+            self.pos_flat, seg_lo, seg_hi, atoms.pos_hi, np.ones(M, bool)
+        )
+        j_lo1 = segmented_searchsorted(
+            self.pos_flat, seg_lo, seg_hi, atoms.pos_lo1, atoms.lo1_right
+        )
+        j_lo2 = segmented_searchsorted(
+            self.pos_flat, seg_lo, seg_hi, atoms.pos_lo2, np.zeros(M, bool)
+        )
+        root_loc = np.stack([j_hi, j_lo1, j_lo2]) - seg_lo[None, :]  # [3, M]
+
+        l = r_lo.astype(np.int64)
+        r = r_hi.astype(np.int64)
+        lev = top.copy()  # per-atom current level
+        node = np.zeros((2, M), np.int64)  # path node (bucket id at `lev`)
+        loc = np.stack([root_loc, root_loc.copy()])  # [2, 3, M]
+        merged = np.ones(M, bool)
+        alive = (l < r) & (nlev > 0)
+        # path p alive flags (after split, tracked separately)
+        palive = np.stack([alive.copy(), alive.copy()])
+
+        def emit(mask, which, at_lev, at_node, at_loc):
+            idx = np.nonzero(mask)[0]
+            if not len(idx):
+                return
+            s_lo = base[idx] + at_lev[idx] * npad[idx] + (at_node[idx] << at_lev[idx])
+            i_hi = s_lo + at_loc[0][idx]
+            i_lo = s_lo + np.maximum(at_loc[1][idx], at_loc[2][idx])
+            out[idx] += self._interval_dot(idx, s_lo, i_lo, i_hi, combo, q_full)
+
+        def cascade(mask, p, child_is_right):
+            """Move path p's ranks from its node into a child; update node."""
+            idx = np.nonzero(mask)[0]
+            if not len(idx):
+                return
+            nf = base[idx] + lev[idx] * npad[idx] + (node[p][idx] << lev[idx])
+            for k in range(3):
+                i = loc[p, k][idx]
+                bl = np.where(i > 0, self.bridge[nf + np.maximum(i - 1, 0)], 0)
+                loc[p, k][idx] = np.where(child_is_right[idx], i - bl, bl)
+            node[p][idx] = (node[p][idx] << 1) + child_is_right[idx]
+
+        def sibling_loc(mask, p, sib_is_right):
+            """Ranks for the sibling child of path p's node (before descent)."""
+            idx = np.nonzero(mask)[0]
+            res = np.zeros((3, M), np.int64)
+            if not len(idx):
+                return res
+            nf = base[idx] + lev[idx] * npad[idx] + (node[p][idx] << lev[idx])
+            for k in range(3):
+                i = loc[p, k][idx]
+                bl = np.where(i > 0, self.bridge[nf + np.maximum(i - 1, 0)], 0)
+                res[k][idx] = np.where(sib_is_right[idx], i - bl, bl)
+            return res
+
+        for _ in range(self.max_levels):
+            act = palive[0] | palive[1]
+            if not act.any():
+                break
+            bs = np.int64(1) << lev
+            half = bs >> 1
+            a0 = node[0] * bs  # merged/left-path node range start
+            # --- merged phase -------------------------------------------
+            m_act = merged & palive[0]
+            exact = m_act & (a0 == l) & (a0 + bs == r)
+            emit(exact, 0, lev, node[0], loc[0])
+            palive[0] &= ~exact
+            palive[1] &= ~exact
+            m_act &= ~exact
+            can_desc = m_act & (lev > 0)
+            go_left = can_desc & (r <= a0 + half)
+            go_right = can_desc & (l >= a0 + half)
+            split = can_desc & ~go_left & ~go_right
+            # split: right path takes the right child; copy state then descend
+            if split.any():
+                idx = np.nonzero(split)[0]
+                node[1][idx] = node[0][idx]
+                for k in range(3):
+                    loc[1, k][idx] = loc[0, k][idx]
+                merged[idx] = False
+            cascade(go_left | split, 0, np.zeros(M, bool))
+            cascade(go_right, 0, np.ones(M, bool))
+            cascade(split, 1, np.ones(M, bool))
+            # un-merged right path mirrors node updates only where merged still
+            node[1] = np.where(merged, node[0], node[1])
+            # --- split phase: left boundary path (interval [l, node_end)) ---
+            s_act = ~merged & palive[0] & ~split  # split handled next round
+            if s_act.any():
+                full = s_act & (a0 == l)
+                emit(full, 0, lev, node[0], loc[0])
+                palive[0] &= ~full
+                rest = s_act & ~full & (lev > 0)
+                in_left = rest & (l < a0 + half)
+                # emit right child (fully covered) then descend left
+                sl = sibling_loc(in_left, 0, np.ones(M, bool))
+                emit(in_left, 0, lev - 1, (node[0] << 1) + 1, sl)
+                cascade(in_left, 0, np.zeros(M, bool))
+                in_right = rest & ~in_left
+                cascade(in_right, 0, np.ones(M, bool))
+            # --- split phase: right boundary path (interval [node_start, r)) -
+            r_act = ~merged & palive[1] & ~split
+            if r_act.any():
+                a1 = node[1] * bs
+                full = r_act & (a1 + bs == r)
+                emit(full, 1, lev, node[1], loc[1])
+                palive[1] &= ~full
+                rest = r_act & ~full & (lev > 0)
+                in_right = rest & (r > a1 + half)
+                sl = sibling_loc(in_right, 1, np.zeros(M, bool))
+                emit(in_right, 1, lev - 1, node[1] << 1, sl)
+                cascade(in_right, 1, np.ones(M, bool))
+                in_left = rest & ~in_right
+                cascade(in_left, 1, np.zeros(M, bool))
+            moved = (m_act & (lev > 0)) | (~merged & (palive[0] | palive[1]) & (lev > 0))
+            lev = np.where(moved, lev - 1, lev)
+        return out

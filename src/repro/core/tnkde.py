@@ -1,0 +1,267 @@
+"""TN-KDE driver (paper Algorithm 1 + Algorithm 5).
+
+Ties the pieces together: lixelization, SPS shortest-path sharing, candidate
+pruning, Lixel Sharing classification, atom planning, and one of the four
+solutions:
+
+  solution='sps'   index-free direct evaluation            (§3.2 baseline)
+  solution='ada'   per-window linear index                 (§3.2, SOTA)
+  solution='rfs'   range forest (static, exact)            (§4)
+  solution='drfs'  dynamic range forest (streaming, ~exact) (§5)
+
+``query(ts)`` answers a *batch* of online time windows (the paper's multiple
+temporal KDE scenario, §8.2): build once, query many.
+
+The per-edge loop batches atoms across query edges and flushes them through
+the index in large vectorized blocks — the same batching the distributed
+(shard_map) and Pallas paths use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .ada import AggregateDistanceIndex
+from .aggregation import build_event_moments
+from .drfs import DynamicRangeForest
+from .events import Events, group_events_by_edge
+from .kernels_math import get_kernel
+from .lixel_sharing import (
+    classify_candidates,
+    dominated_contribution,
+    recover_from_diff2,
+)
+from .network import RoadNetwork, build_lixels
+from .plan import build_atoms, build_edge_geometry
+from .rfs import RangeForest
+from .shortest_path import adjacency_csr, bounded_dijkstra
+from .sps import sps_eval_edge
+
+__all__ = ["TNKDE", "QueryStats"]
+
+
+@dataclasses.dataclass
+class QueryStats:
+    build_seconds: float = 0.0
+    query_seconds: float = 0.0
+    sp_seconds: float = 0.0
+    n_atoms: int = 0
+    n_pairs_dominated: int = 0
+    n_pairs_out: int = 0
+    n_pairs_normal: int = 0
+    index_bytes: int = 0
+
+
+class TNKDE:
+    def __init__(
+        self,
+        net: RoadNetwork,
+        events: Events,
+        *,
+        g: float = 10.0,
+        b_s: float = 1000.0,
+        b_t: float = 86400.0,
+        spatial_kernel: str = "triangular",
+        temporal_kernel: str = "triangular",
+        solution: str = "rfs",
+        lixel_sharing: bool = False,
+        cascade: bool = True,
+        drfs_depth: int = 8,
+        drfs_h0: Optional[int] = None,
+        drfs_exact_leaf: bool = False,
+        edge_block: int = 128,
+        atom_flush: int = 400_000,
+    ):
+        if solution not in ("sps", "ada", "rfs", "drfs"):
+            raise ValueError(f"unknown solution {solution!r}")
+        if lixel_sharing and solution == "sps":
+            raise ValueError("lixel sharing needs an aggregation index (ada/rfs/drfs)")
+        t0 = _time.perf_counter()
+        self.net = net
+        self.g = g
+        self.solution = solution
+        self.ls = lixel_sharing
+        self.cascade = cascade
+        self.drfs_h0 = drfs_h0
+        self.drfs_exact_leaf = drfs_exact_leaf
+        self.edge_block = edge_block
+        self.atom_flush = atom_flush
+        self.lix = build_lixels(net, g)
+        self.ee = group_events_by_edge(net, events)
+        ks = get_kernel(spatial_kernel)
+        kt = get_kernel(temporal_kernel)
+        self.ctx, phi = build_event_moments(net, self.ee, ks, kt, b_s, b_t)
+        self.index = None
+        if solution == "rfs":
+            self.index = RangeForest(net, self.ee, self.ctx, phi, build_bridges=cascade)
+        elif solution == "drfs":
+            self.index = DynamicRangeForest(net, self.ee, self.ctx, phi, depth=drfs_depth)
+        elif solution == "ada":
+            self.index = AggregateDistanceIndex(net, self.ee, self.ctx)
+        self._phi_dim = phi.shape[-1] if phi.size else self.ctx.K
+        self._adj = adjacency_csr(net)
+        # per-edge event extremes for window-independent LS classification
+        E = net.n_edges
+        self.ev_min_pos = np.full(E, np.inf)
+        self.ev_max_pos = np.full(E, -np.inf)
+        counts = np.diff(self.ee.ptr)
+        eo = np.repeat(np.arange(E), counts)
+        if self.ee.n:
+            np.minimum.at(self.ev_min_pos, eo, self.ee.pos)
+            np.maximum.at(self.ev_max_pos, eo, self.ee.pos)
+        self.stats = QueryStats(build_seconds=_time.perf_counter() - t0)
+        if self.index is not None and hasattr(self.index, "index_bytes"):
+            self.stats.index_bytes = self.index.index_bytes
+
+    # ------------------------------------------------------------------ API
+    @property
+    def n_lixels(self) -> int:
+        return self.lix.n_lixels
+
+    def insert(self, events: Events) -> None:
+        """Streaming insertion (DRFS only, §5)."""
+        if self.solution != "drfs":
+            raise ValueError("insert() requires solution='drfs'")
+        net = self.net
+        pos = np.clip(events.pos, 0.0, net.edge_len[events.edge_id])
+        from .aggregation import MomentContext  # noqa: F401 (doc pointer)
+
+        ctx = self.ctx
+        lens = net.edge_len[events.edge_id]
+        u_c = pos / lens
+        sig = lens / ctx.b_s
+        psi_c = ctx.ks.e_vec(u_c, sig)
+        psi_d = ctx.ks.e_vec(1.0 - u_c, sig)
+        v_l = (ctx.t_max - events.time) / ctx.t_span
+        v_r = (events.time - ctx.t_min) / ctx.t_span
+        tau_l = ctx.kt.e_vec(v_l, ctx.sigma_t)
+        tau_r = ctx.kt.e_vec(v_r, ctx.sigma_t)
+        n = events.n
+
+        def outer(a, b):
+            return (a[:, :, None] * b[:, None, :]).reshape(n, -1)
+
+        phi = np.stack(
+            [outer(psi_c, tau_l), outer(psi_c, tau_r), outer(psi_d, tau_l), outer(psi_d, tau_r)],
+            axis=1,
+        )
+        self.index.insert(events.edge_id.astype(np.int64), pos, events.time, phi)
+        # keep the planner's event view (candidate pruning, self-edge flags,
+        # LS extremes) in sync with the streamed index
+        from .events import merge_edge_events
+
+        self.ee = merge_edge_events(net, self.ee, events)
+        np.minimum.at(self.ev_min_pos, events.edge_id, pos)
+        np.maximum.at(self.ev_max_pos, events.edge_id, pos)
+
+    def query(self, ts: Sequence[float]) -> np.ndarray:
+        """KDE values for every lixel, for each window center in ts: [W, L]."""
+        ts = list(map(float, ts))
+        t0 = _time.perf_counter()
+        W = len(ts)
+        L = self.lix.n_lixels
+        F = np.zeros((W, L))
+        net, lix, ee, ctx = self.net, self.lix, self.ee, self.ctx
+        E = net.n_edges
+        radius_pad = float(net.edge_len.max())
+        pend_atoms: List = []
+        pend_count = 0
+        dominated_work: List = []  # (geom, side, candidate cols) triples
+
+        def flush():
+            nonlocal pend_atoms, pend_count
+            if not pend_atoms:
+                return
+            from .plan import AtomSet
+
+            atoms = AtomSet.concat(pend_atoms)
+            self.stats.n_atoms += atoms.m
+            for w, t in enumerate(ts):
+                vals = self.index.eval_atoms(
+                    atoms,
+                    t,
+                    cascade=self.cascade,
+                    h0=self.drfs_h0,
+                    exact_leaf_scan=self.drfs_exact_leaf,
+                ) if self.solution == "drfs" else self.index.eval_atoms(
+                    atoms, t, cascade=self.cascade
+                ) if self.solution == "rfs" else self.index.eval_atoms(atoms, t)
+                np.add.at(F[w], atoms.lixel, vals)
+            pend_atoms = []
+            pend_count = 0
+
+        for blk_lo in range(0, E, self.edge_block):
+            blk = np.arange(blk_lo, min(blk_lo + self.edge_block, E))
+            verts = np.unique(
+                np.concatenate([net.edge_src[blk], net.edge_dst[blk]])
+            )
+            t_sp = _time.perf_counter()
+            rows = bounded_dijkstra(
+                net, verts, ctx.b_s + radius_pad + 1.0, adj=self._adj
+            )
+            self.stats.sp_seconds += _time.perf_counter() - t_sp
+            vmap = {int(v): i for i, v in enumerate(verts)}
+            for a in blk:
+                ra = rows[vmap[int(net.edge_src[a])]]
+                rb = rows[vmap[int(net.edge_dst[a])]]
+                geom = build_edge_geometry(
+                    net, lix, ee, int(a), ctx.b_s, np.stack([ra, rb])
+                )
+                l_a = geom.x.shape[0]
+                if l_a == 0:
+                    continue
+                sl = slice(geom.lix_base, geom.lix_base + l_a)
+                if self.solution == "sps":
+                    for w, t in enumerate(ts):
+                        F[w, sl] += sps_eval_edge(geom, ee, ctx, t)
+                    continue
+                mask = None
+                if self.ls:
+                    dom_c, dom_d, out, normal = classify_candidates(
+                        geom, ctx, self.ev_min_pos, self.ev_max_pos
+                    )
+                    self.stats.n_pairs_dominated += int(dom_c.sum() + dom_d.sum())
+                    self.stats.n_pairs_out += int(out.sum())
+                    self.stats.n_pairs_normal += int(normal.sum())
+                    mask = normal
+                    for side, dmask in ((0, dom_c), (1, dom_d)):
+                        cols = np.nonzero(dmask)[0]
+                        if len(cols):
+                            # defer: one batched dominated_moments per window
+                            dominated_work.append((geom, side, cols))
+                atoms = build_atoms(geom, ctx, mask)
+                if atoms.m:
+                    pend_atoms.append(atoms)
+                    pend_count += atoms.m
+                if pend_count >= self.atom_flush:
+                    flush()
+        flush()
+        # ---- Lixel Sharing: dominated edges, batched across the network ----
+        # one dominated_moments call per (window, side) instead of per edge —
+        # the per-edge Δ² accumulation stays (it is O(1) amortized per edge).
+        if dominated_work:
+            for side in (0, 1):
+                items = [(g, cols) for g, s, cols in dominated_work if s == side]
+                if not items:
+                    continue
+                all_edges = np.concatenate([g.cand[cols] for g, cols in items])
+                offs = np.cumsum([0] + [len(c) for _, c in items])
+                for w, t in enumerate(ts):
+                    M_all = self.index.dominated_moments(all_edges, t, side)
+                    for (g, cols), lo, hi in zip(items, offs[:-1], offs[1:]):
+                        l_a = g.x.shape[0]
+                        diff2 = np.zeros(l_a + 2)
+                        direct = np.zeros(l_a)
+                        dominated_contribution(
+                            g, ctx, side, cols, M_all[lo:hi], diff2, direct
+                        )
+                        F[w, g.lix_base : g.lix_base + l_a] += (
+                            recover_from_diff2(diff2, l_a) + direct
+                        )
+        self.stats.query_seconds += _time.perf_counter() - t0
+        if self.index is not None and hasattr(self.index, "index_bytes"):
+            self.stats.index_bytes = self.index.index_bytes  # ADA builds lazily
+        return F

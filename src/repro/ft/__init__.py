@@ -1,0 +1,2 @@
+from .elastic import ElasticPlan, plan_degraded_mesh  # noqa: F401
+from .watchdog import StepWatchdog, PreemptionHandler  # noqa: F401

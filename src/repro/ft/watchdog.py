@@ -1,0 +1,67 @@
+"""Straggler / stall detection and preemption handling.
+
+StepWatchdog keeps a rolling window of step wall-times; a step beyond
+``zmax`` sigmas (or ``hard_timeout``) flags a straggler — at fleet scale the
+launcher responds by snapshotting + requesting a hot-spare swap of the slow
+slice. PreemptionHandler turns SIGTERM (the cloud's 30s warning) into a
+final synchronous checkpoint + clean exit, so restarts lose zero steps.
+"""
+from __future__ import annotations
+
+import signal
+import threading
+import time
+from collections import deque
+from typing import Callable, Deque, Optional
+
+__all__ = ["StepWatchdog", "PreemptionHandler"]
+
+
+class StepWatchdog:
+    def __init__(self, window: int = 50, zmax: float = 4.0, hard_timeout: float = 600.0):
+        self.times: Deque[float] = deque(maxlen=window)
+        self.zmax = zmax
+        self.hard_timeout = hard_timeout
+        self.flags = 0
+        self._t0: Optional[float] = None
+
+    def step_start(self):
+        self._t0 = time.perf_counter()
+
+    def step_end(self) -> bool:
+        """Record a step; returns True if this step looked like a straggler."""
+        dt = time.perf_counter() - self._t0
+        straggler = False
+        if dt > self.hard_timeout:
+            straggler = True
+        elif len(self.times) >= 10:
+            mean = sum(self.times) / len(self.times)
+            var = sum((t - mean) ** 2 for t in self.times) / len(self.times)
+            std = max(var**0.5, 1e-6, 0.05 * mean)
+            straggler = (dt - mean) / std > self.zmax
+        self.times.append(dt)
+        self.flags += int(straggler)
+        return straggler
+
+
+class PreemptionHandler:
+    """SIGTERM -> on_preempt() (checkpoint) -> exit-intent flag."""
+
+    def __init__(self, on_preempt: Callable[[], None]):
+        self.requested = threading.Event()
+        self._cb = on_preempt
+        self._installed = False
+
+    def install(self):
+        def handler(signum, frame):
+            self.requested.set()
+
+        signal.signal(signal.SIGTERM, handler)
+        self._installed = True
+
+    def poll(self) -> bool:
+        """Call between steps; runs the checkpoint callback once if preempted."""
+        if self.requested.is_set():
+            self._cb()
+            return True
+        return False

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers:
+
+  tree_query       — the RFS/DRFS merge-tree range query (paper Alg. 2)
+  minplus          — blocked (min,+) matmul for batched shortest paths
+  flash_attention  — LM-side blocked attention (train/prefill hot spot)
+
+Each kernel ships with a pure-jnp oracle (ref.py) and a jit wrapper (ops.py);
+interpret=True sweeps validate them on CPU (TPU is the target).
+"""
+from . import ops, ref  # noqa: F401

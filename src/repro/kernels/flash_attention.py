@@ -1,0 +1,117 @@
+"""Flash attention (forward) — Pallas TPU kernel.
+
+The LM-side FLOPs hot spot (train/prefill attention at 4k-32k). Standard
+online-softmax streaming over KV tiles:
+
+  grid = (B*H, Sq/TQ, Sk/TK); the KV axis is the innermost (sequential) grid
+  dimension; running (max m, sum l, accumulator o) live in VMEM scratch and
+  are rescaled per KV tile. Causal masking is two-tier: whole KV tiles beyond
+  the causal frontier are skipped with pl.when (no FLOPs), the diagonal tile
+  applies an element mask. GQA maps q-head h to kv-head h // (H // Hkv) in
+  the BlockSpec index map — K/V are never materialized per q-head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal, tk_count):
+    kt = pl.program_id(2)
+
+    @pl.when(kt == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qt = pl.program_id(1)
+    tq = q_ref.shape[1]
+    tkk = k_ref.shape[1]
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)  # [TQ, D]
+        k = k_ref[0].astype(jnp.float32)  # [TK, D]
+        v = v_ref[0].astype(jnp.float32)  # [TK, D]
+        s = (q @ k.T) * scale  # [TQ, TK]
+        if causal:
+            rows = qt * tq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = kt * tkk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]  # [TQ, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)  # [TQ, TK]
+        corr = jnp.exp(m_prev - m_new)  # [TQ, 1]
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + p @ v
+        m_ref[...] = m_new
+
+    if causal:
+        # skip KV tiles entirely above the causal frontier
+        @pl.when(kt * tkk <= (qt + 1) * tq - 1)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(kt == tk_count - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "tq", "tk", "interpret", "scale")
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # [B, H, S, D]
+    k: jnp.ndarray,  # [B, Hkv, S, D]
+    v: jnp.ndarray,  # [B, Hkv, S, D]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    tq: int = 128,
+    tk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0
+    rep = H // Hkv
+    scale = float(D**-0.5) if scale is None else float(scale)
+    tq = min(tq, S)
+    tk = min(tk, S)
+    assert S % tq == 0 and S % tk == 0, "pad sequence to tile multiples"
+    bh = B * H
+    qf = q.reshape(bh, S, D)
+    grid = (bh, S // tq, S // tk)
+    from jax.experimental.pallas import tpu as pltpu
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, tk_count=S // tk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec(
+                (1, tk, D), lambda b, i, j: ((b // H) * Hkv + (b % H) // rep, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, tk, D), lambda b, i, j: ((b // H) * Hkv + (b % H) // rep, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, k.reshape(B * Hkv, S, D), v.reshape(B * Hkv, S, D))
+    return out.reshape(B, H, S, D)

@@ -1,0 +1,64 @@
+"""Blocked (min, +) matrix product — Pallas TPU kernel.
+
+The relaxation step of batched multi-source Bellman-Ford shortest paths
+(repro.core.shortest_path.minplus_bellman_ford): out = min_k (a[i,k] + b[k,j]).
+
+Tiling: classic three-loop matmul structure. Grid (M/TM, N/TN, K/TK); the
+K-axis is the innermost (sequential) grid dimension so the output tile stays
+resident in VMEM and accumulates with jnp.minimum — the (min, +) semiring
+analogue of an MXU accumulator (the adds+mins run on the VPU; the data path
+and reuse pattern are identical to a blocked matmul).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["minplus_matmul_pallas"]
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+
+    a = a_ref[...]  # [TM, TK]
+    b = b_ref[...]  # [TK, TN]
+    # (min,+) contraction over the K tile
+    cand = jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+    o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk", "interpret"))
+def minplus_matmul_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    tm: int = 128,
+    tn: int = 128,
+    tk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """out[i, j] = min_k a[i, k] + b[k, j]; pads to tile multiples with +inf."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    tm, tn, tk = min(tm, m) or 1, min(tn, n) or 1, min(tk, k) or 1
+    mp, np_, kp = -(-m // tm) * tm, -(-n // tn) * tn, -(-k // tk) * tk
+    ap = jnp.full((mp, kp), jnp.inf, a.dtype).at[:m, :k].set(a)
+    bp = jnp.full((kp, np_), jnp.inf, b.dtype).at[:k, :n].set(b)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(mp // tm, np_ // tn, kp // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]

@@ -1,0 +1,34 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (the kernel
+body executes step-by-step on CPU — semantics identical to TPU). On a real
+TPU set REPRO_PALLAS_INTERPRET=0 (or pass interpret=False).
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .minplus import minplus_matmul_pallas
+from .tree_query import tree_query_pallas
+
+__all__ = ["minplus_matmul", "tree_query", "flash_attention", "INTERPRET"]
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def minplus_matmul(a: jnp.ndarray, b: jnp.ndarray, **kw) -> jnp.ndarray:
+    kw.setdefault("interpret", INTERPRET)
+    return minplus_matmul_pallas(a, b, **kw)
+
+
+def tree_query(*args, **kw) -> jnp.ndarray:
+    kw.setdefault("interpret", INTERPRET)
+    return tree_query_pallas(*args, **kw)
+
+
+def flash_attention(q, k, v, **kw) -> jnp.ndarray:
+    kw.setdefault("interpret", INTERPRET)
+    return flash_attention_pallas(q, k, v, **kw)

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the semantic ground truth the Pallas kernels are tested
+against with ``interpret=True`` shape/dtype sweeps (tests/test_kernels_*).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["minplus_matmul", "tree_query", "flash_attention"]
+
+
+def minplus_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(min, +) matrix product: out[i, j] = min_k a[i, k] + b[k, j].
+
+    The relaxation step of batched multi-source Bellman-Ford
+    (repro.core.shortest_path.minplus_bellman_ford).
+    """
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def tree_query(
+    pos: jnp.ndarray,  # [G, LVL, NPAD] position-sorted bucket tables (+inf pad)
+    cum: jnp.ndarray,  # [G, LVL, NPAD, K] inclusive per-bucket prefix moments
+    r_lo: jnp.ndarray,  # [G, Q] time-rank interval lo (within [0, NPAD])
+    r_hi: jnp.ndarray,  # [G, Q] time-rank interval hi
+    pos_hi: jnp.ndarray,  # [G, Q] upper position bound (inclusive, 'right')
+    pos_lo1: jnp.ndarray,  # [G, Q] lower bound 1
+    lo1_right: jnp.ndarray,  # [G, Q] bool: lower bound 1 is exclusive ('right')
+    pos_lo2: jnp.ndarray,  # [G, Q] lower bound 2 (inclusive, 'left')
+    q_vec: jnp.ndarray,  # [G, Q, K] query coefficient vectors
+) -> jnp.ndarray:
+    """Batched merge-tree range query (the RFS inner loop, paper Alg. 2).
+
+    For each query: canonically decompose the rank interval [r_lo, r_hi) over
+    the level-ℓ buckets (size 2^ℓ, level ℓ stored at pos[:, ℓ]); inside each
+    emitted bucket select events with position in (lo, hi] bounds via binary
+    search and dot the prefix-moment difference with q_vec. Returns [G, Q].
+    """
+    G, LVL, NPAD = pos.shape
+    K = cum.shape[-1]
+    Q = r_lo.shape[1]
+
+    def search(p_row, lo, hi, val, right):
+        # binary search in p_row[lo:hi] (ascending), fixed trip count
+        def body(_, lh):
+            l, h = lh
+            m = (l + h) // 2
+            v = p_row[m]
+            go = jnp.where(right, v <= val, v < val) & (l < h)
+            return jnp.where(go, m + 1, l), jnp.where(go | (l >= h), h, m)
+
+        steps = max(int(NPAD).bit_length(), 1)
+        l, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+        return l
+
+    def one_group(p_g, c_g, rl_g, rh_g, ph_g, pl1_g, l1r_g, pl2_g, qv_g):
+        def one_query(rl, rh, ph, pl1, l1r, pl2, qv):
+            def level_body(lev, state):
+                l, r, acc = state
+                p_row = jax.lax.dynamic_index_in_dim(p_g, lev, 0, keepdims=False)
+                c_lvl = jax.lax.dynamic_index_in_dim(c_g, lev, 0, keepdims=False)
+
+                def bucket_val(b, on):
+                    seg_lo = b << lev
+                    seg_hi = seg_lo + (1 << lev)
+                    seg_hi = jnp.minimum(seg_hi, NPAD)
+                    i_hi = search(p_row, seg_lo, seg_hi, ph, True)
+                    i_l1 = search(p_row, seg_lo, seg_hi, pl1, l1r)
+                    i_l2 = search(p_row, seg_lo, seg_hi, pl2, False)
+                    i_lo = jnp.maximum(i_l1, i_l2)
+                    i_hi = jnp.maximum(i_hi, i_lo)
+
+                    def pref(i):
+                        v = c_lvl[jnp.maximum(i - 1, 0)]
+                        return jnp.where(i > seg_lo, v, jnp.zeros((K,), c_lvl.dtype))
+
+                    mom = pref(i_hi) - pref(i_lo)
+                    return jnp.where(on, qv @ mom, 0.0)
+
+                active = l < r
+                emit_l = active & ((l & 1) == 1)
+                acc = acc + bucket_val(l, emit_l)
+                l2 = jnp.where(emit_l, l + 1, l)
+                emit_r = (l2 < r) & ((r & 1) == 1)
+                acc = acc + bucket_val(r - 1, emit_r)
+                r2 = jnp.where(emit_r, r - 1, r)
+                return l2 >> 1, r2 >> 1, acc
+
+            _, _, acc = jax.lax.fori_loop(
+                0, LVL, level_body, (rl.astype(jnp.int32), rh.astype(jnp.int32), 0.0)
+            )
+            return acc
+
+        return jax.vmap(one_query)(rl_g, rh_g, ph_g, pl1_g, l1r_g, pl2_g, qv_g)
+
+    return jax.vmap(one_group)(pos, cum, r_lo, r_hi, pos_hi, pos_lo1, lo1_right, pos_lo2, q_vec)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # [B, H, S, D]
+    k: jnp.ndarray,  # [B, Hkv, S, D]
+    v: jnp.ndarray,  # [B, Hkv, S, D]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Reference attention (materializes logits; GQA via head grouping)."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    rep = H // Hkv
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    scale = (D ** -0.5) if scale is None else scale
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)

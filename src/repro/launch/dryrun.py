@@ -1,0 +1,372 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first init)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline raw material.
+
+For each cell this produces (JSON per cell under --out):
+  * compile proof: .lower().compile() success on the requested mesh,
+  * memory_analysis() — per-device bytes (weights/temp/args/outputs),
+  * cost_analysis() — HLO FLOPs / bytes of the full (scan-over-layers) step,
+  * collective byte tally parsed from the compiled HLO,
+  * a single-layer cost lowering (scan bodies are counted ONCE by XLA's cost
+    model — launch/roofline.py multiplies per-layer cost by the trip count;
+    see DESIGN.md "roofline methodology").
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out runs/dryrun
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, runnable_cells
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import abstract_params, abstract_tree, get_model, input_specs
+from repro.sharding.rules import PROFILES, logical_sharding
+from repro.train.optimizer import AdamWState
+from repro.train.train_step import make_train_step
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*?\s(f32|bf16|f16|s32|s8|u32|pred|f64|s64)\[([0-9,]*)\]"
+)
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "s8": 1, "u32": 4, "pred": 1, "f64": 8, "s64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    out = {}
+    total = 0
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        op, dt, dims = m.group(1), m.group(2), m.group(3)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * DTYPE_BYTES[dt]
+        out[op] = out.get(op, 0) + b
+        total += b
+    out["total"] = total
+    return out
+
+
+def shardings_for(axes_tree, shapes_tree, mesh, rules):
+    return jax.tree.map(
+        lambda ax, sh: logical_sharding(sh.shape, ax, mesh, rules),
+        axes_tree,
+        shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def batch_sharding(specs, mesh, rules):
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels", "mask", "token"):
+            ax = ("act_batch", "act_seq")[: len(v.shape)]
+        elif k == "mrope_pos":
+            ax = ("act_batch", None, "act_seq")
+        elif k in ("frames", "embeds"):
+            ax = ("act_batch", "act_seq", "act_embed")
+        else:
+            ax = (None,) * len(v.shape)
+        out[k] = logical_sharding(v.shape, ax, mesh, rules)
+    return out
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    profile_train: str,
+    profile_serve: str,
+    remat: str = "full",
+    attn_impl: str = "auto",
+    layer_cost: bool = True,
+    decode_loop: str = "scan",
+):
+    import dataclasses
+
+    cfg = dataclasses.replace(get_config(arch), remat=remat, decode_loop=decode_loop)
+    shape = SHAPES[shape_name]
+    model = get_model(cfg)
+    rules = PROFILES[profile_train if shape.kind == "train" else profile_serve]
+    res = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+           "mesh": dict(mesh.shape), "profile": (profile_train if shape.kind == "train" else profile_serve)}
+    t0 = time.time()
+
+    params_s, axes = abstract_params(cfg)
+    p_shard = shardings_for(axes, params_s, mesh, rules)
+    specs = input_specs(cfg, shape)
+    b_shard = batch_sharding(specs, mesh, rules)
+
+    if shape.kind == "train":
+        step = make_train_step(model.loss_fn, cfg, mesh=mesh, rules=rules, attn_impl=attn_impl)
+        opt_s = jax.eval_shape(lambda p: AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+            nu=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+            master=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+        ), params_s)
+        o_shard = AdamWState(
+            step=NamedSharding(mesh, P()), mu=p_shard, nu=p_shard, master=p_shard
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = fn.lower(params_s, opt_s, specs)
+    elif shape.kind == "prefill":
+        if cfg.is_encdec:
+            from repro.models import encdec
+
+            def pf(params, batch):
+                enc_out = encdec.encode(params, cfg, batch["frames"], mesh, rules, attn_impl)
+                xk, xv = encdec.prefill_cross(params, cfg, enc_out)
+                logits = encdec.decode_train(params, cfg, batch["tokens"], enc_out, mesh, rules, attn_impl)
+                return logits[:, -1], (xk, xv)
+        else:
+            def pf(params, batch):
+                return model.prefill(params, batch, mesh=mesh, rules=rules, attn_impl=attn_impl)
+        fn = jax.jit(pf, in_shardings=(p_shard, b_shard), out_shardings=None)
+        lowered = fn.lower(params_s, specs)
+    else:  # decode
+        B = shape.global_batch
+        S = shape.seq_len
+        cache_s, cache_axes = abstract_tree(
+            lambda: (model.init_cache(B, S, jnp.bfloat16) if not cfg.is_encdec
+                     else model.init_cache(B, S, jnp.bfloat16, enc_seq=S))
+        )
+        c_shard = shardings_for(cache_axes, cache_s, mesh, rules)
+
+        def dec(params, token, cache, pos):
+            return model.decode_step(params, token, cache, pos, mesh=mesh, rules=rules)
+
+        fn = jax.jit(
+            dec,
+            in_shardings=(p_shard, b_shard["token"], c_shard, NamedSharding(mesh, P())),
+            out_shardings=(None, c_shard),
+            donate_argnums=(2,),
+        )
+        lowered = fn.lower(params_s, specs["token"], cache_s, jnp.int32(S - 1))
+    res["lower_s"] = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    res["compile_s"] = time.time() - t1
+    mem = compiled.memory_analysis()
+    res["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "bytes_per_device": int(
+            mem.argument_size_in_bytes + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+        ),
+    }
+    ca = compiled.cost_analysis() or {}
+    res["cost"] = {"flops": float(ca.get("flops", 0.0)), "bytes": float(ca.get("bytes accessed", 0.0))}
+    res["collectives"] = collective_bytes(compiled.as_text())
+
+    if layer_cost and not cfg.is_encdec:
+        try:
+            res["layer"] = lower_layer_cost(cfg, shape, mesh, rules, attn_impl)
+        except Exception as e:  # pragma: no cover
+            res["layer_error"] = f"{type(e).__name__}: {e}"
+    return res
+
+
+def lower_layer_cost(cfg: ModelConfig, shape: ShapeSpec, mesh, rules, attn_impl):
+    """Cost of ONE block with inner loops unrolled (roofline correction)."""
+    from repro.models import transformer as tr
+    from repro.models import rglru as rg
+    from repro.models import rwkv as rk
+    from repro.models.attention import attention
+    from repro.models.common import dtype_of
+    from repro.models.mlp import mlp as mlp_fn
+    from repro.models.moe import moe_block
+
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    dt = dtype_of(cfg.compute_dtype)
+    x_s = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+    x_shard = logical_sharding(x_s.shape, ("act_batch", "act_seq", "act_embed"), mesh, rules)
+
+    # build single-layer params abstractly
+    from repro.models.common import KeyGen, split_tree
+
+    def init_one():
+        kg = KeyGen(jax.random.key(0))
+        if cfg.family == "rwkv":
+            return split_tree(tr._init_rwkv_layer(kg, cfg, dt))
+        if cfg.family == "hybrid":
+            return split_tree(tr._init_hybrid_position(kg, cfg, dt, "attn"))
+        return split_tree(tr._init_dense_layer(kg, cfg, dt))
+
+    from repro.models.registry import abstract_tree as _abs
+
+    lp_s, lp_axes = _abs(init_one)
+    lp_shard = shardings_for(lp_axes, lp_s, mesh, rules)
+    impl = "blocked_unroll" if (shape.kind != "decode" and S > 4096) else "dense"
+
+    def layer_fn(lp, x):
+        if cfg.family == "rwkv":
+            # projections only; the token recurrence is added analytically
+            from repro.models.common import rms_norm
+
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            st = (jnp.zeros((B, cfg.d_model), x.dtype),
+                  jnp.zeros((B, cfg.d_model // cfg.rwkv_head_size, cfg.rwkv_head_size, cfg.rwkv_head_size), jnp.float32))
+            a, _ = rk.time_mix(lp["tm"], h, cfg, st, chunk=max(S, 1))
+            x = x + a
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            c, _ = rk.channel_mix(lp["cm"], h, cfg, jnp.zeros((B, cfg.d_model), x.dtype))
+            return x + c
+        from repro.models.common import rms_norm
+
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if cfg.family == "hybrid":
+            a, _ = attention(lp["attn"], h, cfg, None, causal=True, window=cfg.local_window, impl=impl)
+        else:
+            rope = tr._rope_for(cfg, jnp.arange(S))
+            a, _ = attention(lp["attn"], h, cfg, rope, causal=cfg.attn_kind == "causal", impl=impl)
+        x = x + a
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = moe_block(lp["mlp"], h, cfg, mesh, rules)
+        else:
+            m = mlp_fn(lp["mlp"], h, cfg)
+        return x + m
+
+    fwd = jax.jit(layer_fn, in_shardings=(lp_shard, x_shard), out_shardings=x_shard)
+    compiled = fwd.lower(lp_s, x_s).compile()
+    ca = compiled.cost_analysis() or {}
+    f_f = float(ca.get("flops", 0.0))
+    f_b = float(ca.get("bytes accessed", 0.0))
+    f_c = collective_bytes(compiled.as_text())
+    if shape.kind != "train":
+        return {"flops": f_f, "bytes": f_b, "collectives": f_c, "impl": impl}
+
+    # train: the step differentiates the layer; with remat='full' the
+    # backward replays the forward, so per-layer cost = fwd + (replay + vjp).
+    def fwdbwd(lp, x, ct):
+        y, pull = jax.vjp(lambda lp, x: layer_fn(lp, x), lp, x)
+        return pull(ct)
+
+    fb = jax.jit(
+        fwdbwd,
+        in_shardings=(lp_shard, x_shard, x_shard),
+        # grads land in the sharded optimizer state (reduce-scatter), exactly
+        # like the real train step — without this the isolated layer shows a
+        # replicated full-weight all-reduce that never happens in training
+        out_shardings=(lp_shard, x_shard),
+    )
+    compiled2 = fb.lower(lp_s, x_s, x_s).compile()
+    ca2 = compiled2.cost_analysis() or {}
+    g_f = float(ca2.get("flops", 0.0))
+    g_b = float(ca2.get("bytes accessed", 0.0))
+    g_c = collective_bytes(compiled2.as_text())
+    return {
+        "flops": g_f + f_f,
+        "bytes": g_b + f_b,
+        "collectives": {k: f_c.get(k, 0) + g_c.get(k, 0) for k in set(f_c) | set(g_c)},
+        "impl": impl,
+        "fwd_flops": f_f,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--profile-train", default="train")
+    ap.add_argument("--profile-serve", default="serve")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--attn-impl", default="auto")
+    ap.add_argument("--no-layer-cost", action="store_true")
+    ap.add_argument("--decode-loop", default="scan", choices=["scan", "fori"])
+    ap.add_argument(
+        "--layer-cost-only", action="store_true",
+        help="refresh only the `layer` record of existing cell JSONs",
+    )
+    args = ap.parse_args(argv)
+
+    cells = runnable_cells() if args.all else [(args.arch, args.shape)]
+    if args.layer_cost_only:
+        import dataclasses as _dc
+
+        for arch, shape in cells:
+            for mp in ({"single": [False], "multi": [True], "both": [False, True]}[args.mesh]):
+                tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+                path = os.path.join(args.out, tag + ".json")
+                if not os.path.exists(path):
+                    continue
+                with open(path) as f:
+                    res = json.load(f)
+                if not res.get("ok") or get_config(arch).is_encdec:
+                    continue
+                mesh = make_production_mesh(multi_pod=mp)
+                kind = SHAPES[shape].kind
+                prof = (args.profile_train if kind == "train" else args.profile_serve) + ("_pod" if mp else "")
+                cfg = _dc.replace(get_config(arch), remat=args.remat)
+                try:
+                    res["layer"] = lower_layer_cost(cfg, SHAPES[shape], mesh, PROFILES[prof], args.attn_impl)
+                    print(f"[layer OK] {tag}: flops={res['layer']['flops']:.3g}")
+                except Exception as e:
+                    res["layer_error"] = f"{type(e).__name__}: {e}"
+                    print(f"[layer FAIL] {tag}: {e}")
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+        return 0
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh = make_production_mesh(multi_pod=mp)
+            tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+            pt = args.profile_train + ("_pod" if mp else "")
+            ps = args.profile_serve + ("_pod" if mp else "")
+            try:
+                res = lower_cell(
+                    arch, shape, mesh,
+                    profile_train=pt, profile_serve=ps,
+                    remat=args.remat, attn_impl=args.attn_impl,
+                    layer_cost=not args.no_layer_cost,
+                    decode_loop=args.decode_loop,
+                )
+                res["ok"] = True
+                print(f"[OK] {tag}: compile={res['compile_s']:.1f}s "
+                      f"mem/dev={res['memory']['bytes_per_device']/2**30:.2f}GiB "
+                      f"flops={res['cost']['flops']:.3g} coll={res['collectives']['total']:.3g}B")
+            except Exception as e:
+                res = {"arch": arch, "shape": shape, "mesh": "pod2" if mp else "pod1",
+                       "ok": False, "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                failures += 1
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(res, f, indent=1)
+    print(f"done; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

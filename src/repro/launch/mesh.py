@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (dryrun.py sets XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (v5e pod) — or 2 pods = 512 chips with a 'pod'
+    axis for hierarchical data parallelism."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Whatever this host has (tests / examples): (data, model)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh(
+        (n // mp, mp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,138 @@
+"""End-to-end trainer: data pipeline -> jit'd train step -> checkpoints,
+with the fleet behaviors wired in (auto-resume, preemption, watchdog,
+deterministic restart).
+
+Runs anywhere: examples/train_lm.py drives it with a reduced config on this
+CPU container; on a pod the same entrypoint runs under the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --reduce \
+      --steps 300 --batch 8 --seq 256 --ckpt-dir runs/train
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager, latest_step, restore_checkpoint
+from repro.configs import get_config, reduce_for_smoke
+from repro.data.synthetic import TokenPipeline
+from repro.ft.watchdog import PreemptionHandler, StepWatchdog
+from repro.models.registry import get_model
+from repro.sharding.rules import PROFILES
+from repro.train.optimizer import adamw_init
+from repro.train.train_step import make_train_step
+
+__all__ = ["run_training", "main"]
+
+
+def run_training(
+    cfg,
+    *,
+    steps: int,
+    global_batch: int,
+    seq_len: int,
+    lr: float = 3e-4,
+    warmup: int = 50,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 100,
+    mesh=None,
+    profile: str = "train",
+    seed: int = 0,
+    log_every: int = 10,
+    log_fn=print,
+):
+    model = get_model(cfg)
+    rules = PROFILES[profile] if mesh is not None else None
+    pipe = TokenPipeline(cfg.vocab, seq_len, global_batch, seed=seed)
+    step_fn = jax.jit(
+        make_train_step(model.loss_fn, cfg, mesh=mesh, rules=rules, lr=lr, warmup=warmup),
+        donate_argnums=(0, 1),
+    )
+    params, _ = model.init(jax.random.key(seed))
+    opt = adamw_init(params)
+    start = 0
+    mgr = CheckpointManager(ckpt_dir, every=ckpt_every) if ckpt_dir else None
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        skel = {"params": params, "opt": opt}
+        tree, start, extras = restore_checkpoint(ckpt_dir, skel)
+        params, opt = tree["params"], tree["opt"]
+        log_fn(f"[train] resumed from step {start}")
+    wd = StepWatchdog()
+    pre = PreemptionHandler(
+        on_preempt=lambda: mgr and mgr.maybe_save(cur_step, {"params": params, "opt": opt}, force=True)
+    )
+    pre.install()
+    losses = []
+    cur_step = start
+    for cur_step in range(start, steps):
+        batch = pipe.batch(cur_step)  # pure fn of step: restart-deterministic
+        wd.step_start()
+        params, opt, metrics = step_fn(params, opt, batch)
+        straggler = wd.step_end()
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if cur_step % log_every == 0 or cur_step == steps - 1:
+            log_fn(
+                f"[train] step {cur_step} loss {loss:.4f} ce {float(metrics['ce']):.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} lr {float(metrics['lr']):.2e}"
+                + (" [straggler]" if straggler else "")
+            )
+        if mgr:
+            mgr.maybe_save(cur_step + 1, {"params": params, "opt": opt})
+        if pre.poll():
+            log_fn("[train] preempted — checkpointed and exiting")
+            break
+    if mgr:
+        mgr.maybe_save(cur_step + 1, {"params": params, "opt": opt}, force=True)
+        mgr.wait()
+    return params, opt, losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduce", action="store_true", help="smoke-size the config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--d-model", type=int, default=None, help="override width")
+    ap.add_argument("--layers", type=int, default=None)
+    args = ap.parse_args(argv)
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduce_for_smoke(cfg)
+    if args.d_model:
+        cfg = dataclasses.replace(
+            cfg, d_model=args.d_model, head_dim=max(args.d_model // cfg.n_heads, 8)
+        )
+    if args.layers:
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
+    t0 = time.time()
+    _, _, losses = run_training(
+        cfg,
+        steps=args.steps,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        lr=args.lr,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+    )
+    print(
+        f"[train] done: {args.steps} steps in {time.time()-t0:.1f}s; "
+        f"loss {losses[0]:.3f} -> {losses[-1]:.3f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import attention, common, mlp, moe, registry, rglru, rwkv, transformer  # noqa: F401

@@ -1,0 +1,200 @@
+"""Attention: GQA/MQA/MHA with RoPE / M-RoPE / QK-norm / sliding window,
+memory-bounded blocked softmax for long prefill, and KV-cache decode.
+
+Three execution paths, one math:
+  * ``impl='dense'``  — materialized logits (short sequences; exact oracle)
+  * ``impl='blocked'``— nested-scan online softmax (pure jnp flash): memory
+    O(Tq x Tk) tiles, used for >=8k prefill so the 32k dry-run fits HBM.
+    (FLOPs inside scans are under-counted by cost_analysis; the roofline
+    module adds the analytic 4·B·H·S²·D/2 term — see launch/roofline.py.)
+  * ``repro.kernels.flash_attention`` — the Pallas TPU kernel (deployment).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, Annotated, apply_rope, mk, rms_norm, rotary
+
+NEG_INF = -1e30
+
+
+def init_attention(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict[str, Annotated]:
+    d, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    p = {
+        "wq": mk(kg, (d, H, hd), ("embed_fsdp", "heads", "head_dim"), dtype=dtype),
+        "wk": mk(kg, (d, Kv, hd), ("embed_fsdp", "kv_heads", "head_dim"), dtype=dtype),
+        "wv": mk(kg, (d, Kv, hd), ("embed_fsdp", "kv_heads", "head_dim"), dtype=dtype),
+        "wo": mk(kg, (H, hd, d), ("heads", "head_dim", "embed_fsdp"), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk(kg, (H, hd), ("heads", "head_dim"), dtype=dtype, zeros=True)
+        p["bk"] = mk(kg, (Kv, hd), ("kv_heads", "head_dim"), dtype=dtype, zeros=True)
+        p["bv"] = mk(kg, (Kv, hd), ("kv_heads", "head_dim"), dtype=dtype, zeros=True)
+    if cfg.qk_norm:
+        p["q_norm"] = mk(kg, (hd,), ("head_dim",), dtype=jnp.float32, zeros=True)
+        p["k_norm"] = mk(kg, (hd,), ("head_dim",), dtype=jnp.float32, zeros=True)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, rope: Optional[Tuple]):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope is not None:
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _dense_attn(q, k, v, *, causal, window, q_off=0, k_off=0):
+    B, Sq, H, D = q.shape
+    Kv = k.shape[2]
+    rep = H // Kv
+    scale = D**-0.5
+    qh = q.reshape(B, Sq, Kv, rep, D)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qh, k).astype(jnp.float32) * scale
+    rows = q_off + jnp.arange(Sq)[:, None]
+    cols = k_off + jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones_like(logits, bool)
+    if causal:
+        mask &= (rows >= cols)[None, None, None]
+    if window:
+        mask &= (rows - cols < window)[None, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D)
+
+
+def _blocked_attn(q, k, v, *, causal, window, tq=2048, tk=2048, unroll=False):
+    """Online-softmax over (query-chunk x kv-chunk) tiles; jnp flash."""
+    B, S, H, D = q.shape
+    Kv = k.shape[2]
+    rep = H // Kv
+    scale = D**-0.5
+    nq, nk = -(-S // tq), -(-S // tk)
+    pad_q = nq * tq - S
+    pad_k = nk * tk - S
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qs = qp.reshape(B, nq, tq, Kv, rep, D)
+    ks = kp.reshape(B, nk, tk, Kv, D)
+    vs = vp.reshape(B, nk, tk, Kv, D)
+
+    def q_step(qi, q_blk):
+        m = jnp.full((B, tq, Kv, rep), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, tq, Kv, rep), jnp.float32)
+        acc = jnp.zeros((B, tq, Kv, rep, D), jnp.float32)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = ks[:, kj]
+            v_blk = vs[:, kj]
+            s = jnp.einsum("bqhrd,bkhd->bqhrk", q_blk, k_blk).astype(jnp.float32) * scale
+            rows = qi * tq + jnp.arange(tq)[:, None]
+            cols = kj * tk + jnp.arange(tk)[None, :]
+            ok = (rows < S) & (cols < S)
+            if causal:
+                ok &= rows >= cols
+            if window:
+                ok &= rows - cols < window
+            s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+            m2 = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = l * corr + p.sum(-1)
+            acc2 = acc * corr[..., None] + jnp.einsum("bqhrk,bkhd->bqhrd", p.astype(v_blk.dtype), v_blk)
+            return (m2, l2, acc2), None
+
+        if unroll:
+            carry = (m, l, acc)
+            for kj in range(nk):
+                carry, _ = kv_step(carry, kj)
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m, l, acc), jnp.arange(nk))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    if unroll:
+        outs = [q_step(qi, qs[:, qi]) for qi in range(nq)]
+        out = jnp.stack(outs, 1)
+    else:
+        out = jax.lax.map(lambda qi: q_step(qi, qs[:, qi]), jnp.arange(nq))
+        out = jnp.moveaxis(out, 0, 1)
+    out = out.reshape(B, nq * tq, H, D)[:, :S]
+    return out.astype(q.dtype)
+
+
+def attention(
+    p,
+    x,
+    cfg: ModelConfig,
+    rope,
+    *,
+    causal=True,
+    window=0,
+    impl: str = "auto",
+):
+    q, k, v = _qkv(p, x, cfg, rope)
+    S = x.shape[1]
+    if impl == "auto":
+        impl = "blocked" if S > 4096 else "dense"
+    if impl == "dense":
+        out = _dense_attn(q, k, v, causal=causal, window=window)
+    elif impl == "blocked":
+        out = _blocked_attn(q, k, v, causal=causal, window=window)
+    elif impl == "blocked_unroll":
+        out = _blocked_attn(q, k, v, causal=causal, window=window, unroll=True)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), causal=causal
+        ).transpose(0, 2, 1, 3)
+    else:
+        raise ValueError(impl)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+
+
+def decode_attention(
+    p, x, cfg: ModelConfig, rope, cache_k, cache_v, write_pos, *, valid_len=None
+):
+    """One-token decode against a [B, S, Kv, D] cache; returns out + new cache.
+
+    ``write_pos`` is the slot receiving the new token (a ring-buffer index
+    for sliding-window caches). ``valid_len`` masks the populated prefix of
+    the cache (defaults to write_pos + 1 — the dense, non-ring case). The
+    cache may be sequence-sharded — the update is a dynamic_update_slice and
+    attention reduces over the sharded sequence dim with the partial-softmax
+    collectives SPMD inserts.
+    """
+    q, k_new, v_new = _qkv(p, x, cfg, rope)  # q [B,1,H,D]
+    B, _, H, D = q.shape
+    Kv = k_new.shape[2]
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype), (0, write_pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype), (0, write_pos, 0, 0))
+    rep = H // Kv
+    S = cache_k.shape[1]
+    if valid_len is None:
+        valid_len = write_pos + 1
+    qh = q.reshape(B, 1, Kv, rep, D)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qh, cache_k).astype(jnp.float32) * (D**-0.5)
+    cols = jnp.arange(S)[None, :]
+    ok = cols < valid_len
+    logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", w.astype(cache_v.dtype), cache_v).reshape(B, 1, H, D)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (cache_k, cache_v)

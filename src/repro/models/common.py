@@ -1,0 +1,142 @@
+"""Shared model plumbing: annotated parameters, norms, rotary embeddings.
+
+Parameters are plain nested dicts of jnp arrays. Every leaf is created
+through ``mk`` which records *logical sharding axes* into a parallel tree —
+``split_tree`` separates (values, axes). Init functions are jit-traceable so
+launch/dryrun.py can materialize them abstractly with jax.eval_shape (no
+allocation for the 72B/235B configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "Annotated",
+    "mk",
+    "split_tree",
+    "rms_norm",
+    "layer_norm",
+    "rotary",
+    "apply_rope",
+    "dtype_of",
+    "KeyGen",
+    "REMAT_POLICIES",
+    "maybe_remat",
+]
+
+#: activation-checkpoint policies applied to the PER-LAYER scan body (the
+#: MaxText pattern — rematting the whole loss would make the scan save full
+#: attention residuals per layer; per-layer remat keeps only block inputs).
+REMAT_POLICIES = {
+    "none": "none",
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    return jax.checkpoint(fn, policy=REMAT_POLICIES[remat])
+
+
+@dataclasses.dataclass
+class Annotated:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+class KeyGen:
+    """Deterministic key splitter (avoids threading keys through every call)."""
+
+    def __init__(self, key):
+        self.key = key
+
+    def __call__(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+def mk(kg: KeyGen, shape, axes, *, dtype, scale: Optional[float] = None, zeros: bool = False) -> Annotated:
+    assert len(shape) == len(axes), (shape, axes)
+    if zeros:
+        return Annotated(jnp.zeros(shape, dtype), tuple(axes))
+    fan_in = shape[0] if len(shape) == 1 else shape[-2]
+    s = scale if scale is not None else fan_in**-0.5
+    return Annotated(jax.random.normal(kg(), shape, jnp.float32).astype(dtype) * s, tuple(axes))
+
+
+def split_tree(tree):
+    """(params, axes) from a tree with Annotated leaves."""
+    is_leaf = lambda x: isinstance(x, Annotated)
+    params = jax.tree.map(lambda a: a.value, tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda a: a.axes, tree, is_leaf=is_leaf)
+    return params, axes
+
+
+def rms_norm(x, gamma, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    nrm = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (nrm * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(dt)
+
+
+def rotary(positions, head_dim: int, theta: float, dtype=jnp.float32):
+    """[..., head_dim/2] cos/sin tables for the given integer positions."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, D]; cos/sin [..., S, 1, D/2] (broadcastable).
+
+    Rotation runs in fp32 and casts back — keeping the activation dtype
+    stable (scan carries must not silently promote to f32)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x32[..., :half], x32[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def mrope_positions(positions, sections: Tuple[int, ...], head_dim: int, theta: float):
+    """Qwen2-VL M-RoPE: the rotary feature dims are split into `sections`
+    (temporal / height / width), each rotated by its own position stream.
+    positions: [B, 3, S] (the stubbed frontend emits t/h/w ids; for pure text
+    all three streams are equal). Returns cos/sin [B, S, 1, head_dim/2]."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    outs_c, outs_s = [], []
+    off = 0
+    for i, sec in enumerate(sections):
+        p = positions[:, i, :].astype(jnp.float32)  # [B, S]
+        ang = p[..., None] * freqs[off : off + sec]
+        outs_c.append(jnp.cos(ang))
+        outs_s.append(jnp.sin(ang))
+        off += sec
+    cos = jnp.concatenate(outs_c, axis=-1)[:, :, None, :]
+    sin = jnp.concatenate(outs_s, axis=-1)[:, :, None, :]
+    return cos, sin

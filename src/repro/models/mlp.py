@@ -1,0 +1,28 @@
+"""Gated MLPs: SwiGLU (llama/qwen/granite/starcoder-style) and GeGLU (gemma)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Annotated, KeyGen, mk
+
+
+def init_mlp(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict[str, Annotated]:
+    d, f = cfg.d_model, cfg.d_ff
+    p = {
+        "w_up": mk(kg, (d, f), ("embed_fsdp", "mlp"), dtype=dtype),
+        "w_down": mk(kg, (f, d), ("mlp", "embed_fsdp"), dtype=dtype),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = mk(kg, (d, f), ("embed_fsdp", "mlp"), dtype=dtype)
+    return p
+
+
+def mlp(p, x, cfg: ModelConfig):
+    act = jax.nn.silu if cfg.act == "silu" else (lambda g: jax.nn.gelu(g, approximate=True))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * u if cfg.mlp_gated else act(u)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

@@ -1,0 +1,102 @@
+"""Mixture-of-Experts block (OLMoE / Qwen3-MoE style): top-k router with
+renormalized weights, sort-based capacity dispatch, expert-parallel FFN.
+
+Dispatch (DESIGN.md §3): tokens' (expert, slot) coordinates are computed with
+a flat sort + segmented rank; token activations are permutation-scattered
+into an [E·C, d] buffer that is *expert-sharded over the model axis*, so the
+scatter/gather lowers to the MoE all-to-all under SPMD. Static shapes
+throughout: capacity C = ceil(T·k/E · capacity_factor); overflow tokens drop
+(their combine weight contributes nothing — standard dropping MoE), matching
+the paper-pool configs' training recipe.
+
+Aux losses: switch-style load-balance loss + router z-loss, returned to the
+caller for the train loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Annotated, KeyGen, mk
+
+
+def init_moe(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict[str, Annotated]:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.d_expert
+    return {
+        "router": mk(kg, (d, E), ("embed_fsdp", "experts"), dtype=jnp.float32),
+        "w_gate": mk(kg, (E, d, f), ("experts", "embed_fsdp", "expert_mlp"), dtype=dtype),
+        "w_up": mk(kg, (E, d, f), ("experts", "embed_fsdp", "expert_mlp"), dtype=dtype),
+        "w_down": mk(kg, (E, f, d), ("experts", "expert_mlp", "embed_fsdp"), dtype=dtype),
+    }
+
+
+def moe_block(p, x, cfg: ModelConfig, mesh=None, rules=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    from repro.sharding.rules import constrain
+
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    xf = x.reshape(T, d)
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)  # [T, k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    # ---- aux losses (switch LB + z-loss) --------------------------------
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(top_e, E).sum(1) > 0).astype(jnp.float32), axis=0
+    )
+    frac_probs = probs.mean(0)
+    lb = E * jnp.sum(frac_tokens * frac_probs)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = cfg.router_aux_coef * lb + 1e-3 * z
+
+    # ---- sort-based capacity dispatch, per batch row ---------------------
+    # Dispatch happens independently inside every batch row, so the buffer is
+    # [B, E, C_row, d]: sharded over BOTH data (B) and model (E) — per-device
+    # footprint S*k*cf*d*2 bytes / (dp*tp), and the token->expert resharding
+    # lowers to the MoE all-to-all instead of a replicated global scatter.
+    # (Capacity is per (row, expert) — the standard subgroup-dispatch recipe.)
+    C = int(-(-S * k // E) * cfg.capacity_factor)
+    row_w = top_w.reshape(B, S, k)
+    row_e = top_e.reshape(B, S, k)
+
+    def dispatch_row(xr, er, wr):
+        # xr [S, d]; er/wr [S, k]
+        fe = er.reshape(-1)
+        fw = wr.reshape(-1)
+        ft = jnp.repeat(jnp.arange(S), k)
+        order = jnp.argsort(fe, stable=True)
+        es = fe[order]
+        idx = jnp.arange(S * k)
+        seg_start = jnp.searchsorted(es, jnp.arange(E), side="left")
+        rank = idx - seg_start[es]
+        keep = rank < C
+        slot = es * (C + 1) + jnp.minimum(rank, C)  # slot C = overflow sink
+        buf = jnp.zeros((E * (C + 1), d), xr.dtype)
+        buf = buf.at[slot].set(xr[ft[order]], mode="drop")
+        return buf.reshape(E, C + 1, d)[:, :C], (order, slot, keep, ft, fw)
+
+    buf, (order, slot, keep, ft, fw) = jax.vmap(dispatch_row)(xf.reshape(B, S, d), row_e, row_w)
+    buf = constrain(buf, ("act_batch", "experts", None, "act_embed"), mesh, rules)
+
+    # ---- expert FFN (E model-sharded, B data-sharded) --------------------
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    g = act(jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    yb = jnp.einsum("becf,efd->becd", g * u, p["w_down"])
+    yb = constrain(yb, ("act_batch", "experts", None, "act_embed"), mesh, rules)
+
+    # ---- combine: gather back + weighted sum over the k routes -----------
+    def combine_row(ybr, orderr, slotr, keepr, ftr, fwr):
+        flat = jnp.pad(ybr, ((0, 0), (0, 1), (0, 0))).reshape(E * (C + 1), d)
+        yk = jnp.where(keepr[:, None], flat[slotr], 0.0)
+        contrib = yk * fwr[orderr][:, None].astype(yk.dtype)
+        return jnp.zeros((S, d), x.dtype).at[ftr[orderr]].add(contrib)
+
+    out = jax.vmap(combine_row)(yb, order, slot, keep, ft, fw)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,126 @@
+"""Unified model API: (init, loss, prefill, decode, input_specs) per config.
+
+``input_specs(cfg, shape, reduced)`` returns ShapeDtypeStruct stand-ins for
+every input of the step function selected by the shape's kind — the
+dry-run's no-allocation contract. Modality frontends are STUBS per the
+assignment: whisper gets precomputed frame embeddings, qwen2-vl gets
+precomputed (text+patch) embeddings and M-RoPE position ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec, transformer
+from repro.models.common import dtype_of
+
+__all__ = ["ModelAPI", "get_model", "input_specs", "abstract_params"]
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.is_encdec:
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            loss_fn=lambda p, b, **kw: encdec.loss_fn(p, cfg, b, **kw),
+            prefill=None,  # handled specially (enc + cross kv); see dryrun
+            decode_step=lambda p, tok, cache, pos, **kw: encdec.decode_step(p, cfg, tok, cache, pos, **kw),
+            init_cache=lambda b, s, dtype=jnp.bfloat16, enc_seq=None: encdec.init_cache(
+                cfg, b, s, enc_seq or s, dtype
+            ),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        loss_fn=lambda p, b, **kw: transformer.loss_fn(p, cfg, b, **kw),
+        prefill=lambda p, b, **kw: transformer.prefill(
+            p, cfg, b.get("tokens"), embeds=b.get("embeds"), mrope_pos=b.get("mrope_pos"), **kw
+        ),
+        decode_step=lambda p, tok, cache, pos, **kw: transformer.decode_step(p, cfg, tok, cache, pos, **kw),
+        init_cache=lambda b, s, dtype=jnp.bfloat16: transformer.init_cache(cfg, b, s, dtype),
+    )
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """(ShapeDtypeStruct params, logical axes) without allocating anything.
+
+    The logical-axes tree holds python strings, which eval_shape cannot
+    return — they are captured out-of-band during the abstract trace."""
+    model = get_model(cfg)
+    captured = {}
+
+    def initp():
+        p, axes = model.init(jax.random.key(seed))
+        captured["axes"] = axes  # static strings; safe to capture mid-trace
+        return p
+
+    params_shapes = jax.eval_shape(initp)
+    return params_shapes, captured["axes"]
+
+
+def abstract_tree(fn):
+    """eval_shape a function returning (arrays_tree, static_axes_tree)."""
+    captured = {}
+
+    def run():
+        tree, axes = fn()
+        captured["axes"] = axes
+        return tree
+
+    shapes = jax.eval_shape(run)
+    return shapes, captured["axes"]
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeSpec, *, reduced: bool = False
+) -> Dict[str, Any]:
+    """ShapeDtypeStruct batch for the step function of this shape's kind."""
+    B = 8 if reduced else shape.global_batch
+    S = 128 if reduced else shape.seq_len
+    i32 = jnp.int32
+    cdt = dtype_of(cfg.compute_dtype)
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if cfg.mrope_sections is not None:
+            return {
+                "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt),
+                "mrope_pos": jax.ShapeDtypeStruct((B, 3, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if cfg.mrope_sections is not None:
+            return {
+                "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt),
+                "mrope_pos": jax.ShapeDtypeStruct((B, 3, S), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token against a seq_len cache
+    return {"token": jax.ShapeDtypeStruct((B,), i32)}

@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> [W_in branch: temporal conv(width 4) -> RG-LRU] ⊙ gelu(gate) -> W_out
+
+RG-LRU:  r_t = sigmoid(W_a y_t + b_a)       (recurrence gate)
+         i_t = sigmoid(W_x y_t + b_x)       (input gate)
+         a_t = exp(-c · softplus(Λ) · r_t)  (c = 8)
+         h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ y_t)
+
+Decode state: (conv tail [W-1], h) — O(1), which with the 1:2 local-attention
+pattern is why recurrentgemma-9b serves the 500k shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Annotated, KeyGen, mk
+
+C_RGLRU = 8.0
+
+
+def init_rglru(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict[str, Annotated]:
+    d, r = cfg.d_model, cfg.d_rnn
+    W = cfg.conv_width
+    return {
+        "w_in": mk(kg, (d, r), ("embed_fsdp", "rnn"), dtype=dtype),
+        "w_gate": mk(kg, (d, r), ("embed_fsdp", "rnn"), dtype=dtype),
+        "w_out": mk(kg, (r, d), ("rnn", "embed_fsdp"), dtype=dtype),
+        "conv_w": mk(kg, (W, r), (None, "rnn"), dtype=dtype, scale=0.3),
+        "conv_b": mk(kg, (r,), ("rnn",), dtype=dtype, zeros=True),
+        "w_a": mk(kg, (r, r), ("rnn", None), dtype=dtype),
+        "b_a": mk(kg, (r,), ("rnn",), dtype=jnp.float32, zeros=True),
+        "w_x": mk(kg, (r, r), ("rnn", None), dtype=dtype),
+        "b_x": mk(kg, (r,), ("rnn",), dtype=jnp.float32, zeros=True),
+        "lam": mk(kg, (r,), ("rnn",), dtype=jnp.float32, scale=0.65),
+    }
+
+
+def _conv1d(y, w, b, tail):
+    """Causal depthwise conv, width W; tail [B, W-1, r] carries across calls."""
+    W = w.shape[0]
+    ypad = jnp.concatenate([tail, y], axis=1)
+    out = sum(ypad[:, i : i + y.shape[1]] * w[i] for i in range(W))
+    return out + b, ypad[:, -(W - 1) :]
+
+
+def rglru_block(p, x, cfg: ModelConfig, state, *, chunk: int = 256):
+    """x [B, S, d]; state = {conv [B, W-1, r], h [B, r]}."""
+    B, S, d = x.shape
+    y = jnp.einsum("bsd,dr->bsr", x, p["w_in"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_gate"]))
+    y, conv_tail = _conv1d(y, p["conv_w"], p["conv_b"], state["conv"])
+    r_g = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", y, p["w_a"]) + p["b_a"])
+    i_g = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", y, p["w_x"]) + p["b_x"])
+    log_a = (-C_RGLRU * jax.nn.softplus(p["lam"]) * r_g).astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i_g * y).astype(jnp.float32) * jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+
+    nchunk = -(-S // chunk)
+    pad = nchunk * chunk - S
+    ap = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    gp = jnp.pad(gated, ((0, 0), (0, pad), (0, 0)))
+
+    def chunk_step(h, blk):
+        ab, gb = blk  # [B, chunk, r]
+        # associative scan inside the chunk: h_t = a_t h_{t-1} + g_t
+        def comb(c1, c2):
+            a1, g1 = c1
+            a2, g2 = c2
+            return a1 * a2, g1 * a2 + g2
+
+        a_acc, g_acc = jax.lax.associative_scan(comb, (ab, gb), axis=1)
+        hs = a_acc * h[:, None] + g_acc
+        return hs[:, -1], hs
+
+    h_fin, outs = jax.lax.scan(
+        chunk_step,
+        state["h"].astype(jnp.float32),
+        (
+            ap.reshape(B, nchunk, chunk, -1).transpose(1, 0, 2, 3),
+            gp.reshape(B, nchunk, chunk, -1).transpose(1, 0, 2, 3),
+        ),
+    )
+    hs = outs.transpose(1, 0, 2, 3).reshape(B, nchunk * chunk, -1)[:, :S]
+    out = jnp.einsum("bsr,rd->bsd", (hs.astype(x.dtype) * gate), p["w_out"])
+    return out, {"conv": conv_tail, "h": h_fin}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+    }

@@ -1,0 +1,150 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892): attention-free time mix with
+data-dependent decay + channel mix.
+
+Time mix (per head h, head size N): state S ∈ R^{N x N} evolves as
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)      (u = "bonus" for current token)
+with w_t = exp(-exp(ww_t)) a *data-dependent* per-channel decay (the Finch
+novelty vs RWKV-5's static decay), and token-shift interpolation on every
+projection input. The LoRA-style decay/mix generators are included.
+
+The recurrence runs as a lax.scan over chunks: projections for the whole
+sequence are dense einsums (parallel); only the O(S·H·N²) state update is
+sequential. Decode carries (shift_token, S) — O(1) per token, which is why
+rwkv6 serves the 500k-context shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Annotated, KeyGen, mk, rms_norm
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    assert cfg.d_model % cfg.rwkv_head_size == 0
+    return cfg.d_model // cfg.rwkv_head_size
+
+
+def init_time_mix(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict[str, Annotated]:
+    d = cfg.d_model
+    H, N = _n_heads(cfg), cfg.rwkv_head_size
+    lora = max(d // 16, 16)
+    p = {
+        # token-shift interpolation factors (mu) for r,k,v,g,w
+        "mu": mk(kg, (5, d), (None, "embed"), dtype=jnp.float32, zeros=True),
+        "wr": mk(kg, (d, d), ("embed_fsdp", "heads"), dtype=dtype),
+        "wk": mk(kg, (d, d), ("embed_fsdp", "heads"), dtype=dtype),
+        "wv": mk(kg, (d, d), ("embed_fsdp", "heads"), dtype=dtype),
+        "wg": mk(kg, (d, d), ("embed_fsdp", "heads"), dtype=dtype),
+        "wo": mk(kg, (d, d), ("heads", "embed_fsdp"), dtype=dtype),
+        # data-dependent decay: w = exp(-exp(base + lora))
+        "w_base": mk(kg, (d,), ("embed",), dtype=jnp.float32, zeros=True),
+        "w_a": mk(kg, (d, lora), ("embed_fsdp", None), dtype=dtype),
+        "w_b": mk(kg, (lora, d), (None, "embed_fsdp"), dtype=dtype),
+        "u": mk(kg, (H, N), ("heads", None), dtype=jnp.float32, zeros=True),
+        "ln_x": mk(kg, (d,), ("embed",), dtype=jnp.float32, zeros=True),
+    }
+    return p
+
+
+def init_channel_mix(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict[str, Annotated]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu": mk(kg, (2, d), (None, "embed"), dtype=jnp.float32, zeros=True),
+        "wk": mk(kg, (d, f), ("embed_fsdp", "mlp"), dtype=dtype),
+        "wv": mk(kg, (f, d), ("mlp", "embed_fsdp"), dtype=dtype),
+        "wr": mk(kg, (d, d), ("embed_fsdp", "embed"), dtype=dtype),
+    }
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t-1]; position 0 takes `last` (carry across chunks)."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(p, x, cfg: ModelConfig, state, *, chunk: int = 256, chunk_remat: bool = True):
+    """x [B, S, d]; state = (x_last [B, d], S [B, H, N, N]). Returns (out, state).
+
+    chunk_remat: checkpoint each chunk step so the WKV backward holds one
+    chunk's per-token residuals (state [B,H,N,N] per token!) instead of the
+    whole sequence's — the difference between ~43 GB and ~3 GB per layer at
+    S=4096 (see EXPERIMENTS.md §Perf / rwkv6 iteration log)."""
+    B, S, d = x.shape
+    H, N = _n_heads(cfg), cfg.rwkv_head_size
+    x_last, S0 = state
+    xs = _token_shift(x, x_last)
+    mu = jax.nn.sigmoid(p["mu"])  # [5, d]
+    xr, xk, xv, xg, xw = ((x + mu[i] * (xs - x)).astype(x.dtype) for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, N)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, N)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    ww = p["w_base"] + jnp.einsum("bsd,dl,le->bse", xw.astype(jnp.float32), p["w_a"].astype(jnp.float32), p["w_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(ww.clip(-20, 10))).reshape(B, S, H, N)  # decay in (0,1)
+    u = p["u"]
+
+    nchunk = -(-S // chunk)
+    pad = nchunk * chunk - S
+    if pad:
+        # pad decay with 1.0 (identity) so trailing pad steps keep the state:
+        # S_pad = 1 * S + 0 — the carried state must survive for prefill.
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (r, k, v))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+
+    rc = r.reshape(B, nchunk, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nchunk, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    wc = w.reshape(B, nchunk, chunk, H, N).transpose(1, 0, 2, 3, 4)
+
+    def chunk_step(S_carry, blk):
+        rb, kb, vb, wb = blk  # [B, chunk, H, N]
+
+        def tok(Sc, t):
+            rt, kt, vt, wt = t
+            kv = kt[..., :, None] * vt[..., None, :]  # [B, H, N, N]
+            ot = jnp.einsum("bhn,bhnm->bhm", rt, Sc + u[None, :, :, None] * kv)
+            Sc = wt[..., :, None] * Sc + kv
+            return Sc, ot
+
+        Sc, outs = jax.lax.scan(
+            tok,
+            S_carry,
+            (
+                rb.transpose(1, 0, 2, 3),
+                kb.transpose(1, 0, 2, 3),
+                vb.transpose(1, 0, 2, 3),
+                wb.transpose(1, 0, 2, 3),
+            ),
+        )
+        return Sc, outs.transpose(1, 0, 2, 3)  # [B, chunk, H, N]
+
+    step = jax.checkpoint(chunk_step) if (chunk_remat and S > 1) else chunk_step
+    S_fin, outs = jax.lax.scan(step, S0.astype(jnp.float32), (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nchunk * chunk, H, N)[:, :S]
+    out = rms_norm(out.reshape(B, S, d), p["ln_x"], cfg.norm_eps) * g.astype(out.dtype)
+    out = jnp.einsum("bse,ed->bsd", out.astype(x.dtype), p["wo"])
+    return out, (x[:, -1], S_fin)
+
+
+def channel_mix(p, x, cfg: ModelConfig, x_last):
+    xs = _token_shift(x, x_last)
+    mu = jax.nn.sigmoid(p["mu"])
+    xk = (x + mu[0] * (xs - x)).astype(x.dtype)
+    xr = (x + mu[1] * (xs - x)).astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    kv = jnp.einsum("bsf,fd->bsd", jnp.square(jax.nn.relu(k)), p["wv"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"])) * kv
+    return out.astype(x.dtype), x[:, -1]
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, N = _n_heads(cfg), cfg.rwkv_head_size
+    return {
+        "tm_x": jnp.zeros((batch, cfg.d_model), dtype),
+        "tm_S": jnp.zeros((batch, H, N, N), jnp.float32),
+        "cm_x": jnp.zeros((batch, cfg.d_model), dtype),
+    }

@@ -1,0 +1,514 @@
+"""Decoder-only LM assembly for every non-encdec family.
+
+Layers are *stacked* (leading axis = layer) and executed with lax.scan so the
+HLO stays compact enough to SPMD-partition 94-layer models across 512
+devices. Heterogeneous (hybrid) stacks scan over super-blocks — one period of
+the block pattern — with separate parameter stacks per pattern position.
+
+All activations pass through logical sharding constraints
+('act_batch','act_seq','act_embed'), which under the train profile gives
+Megatron-style sequence parallelism between blocks and TP inside them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rglru as rg
+from repro.models import rwkv as rk
+from repro.models.attention import attention, decode_attention, init_attention
+from repro.models.common import (
+    Annotated,
+    KeyGen,
+    dtype_of,
+    maybe_remat,
+    mk,
+    mrope_positions,
+    rms_norm,
+    rotary,
+    split_tree,
+)
+from repro.models.mlp import init_mlp, mlp
+from repro.models.moe import init_moe, moe_block
+from repro.sharding.rules import ShardingRules, constrain
+
+ACT = ("act_batch", "act_seq", "act_embed")
+
+
+# --------------------------------------------------------------------- init
+def _init_dense_layer(kg, cfg, dtype):
+    return {
+        "ln1": mk(kg, (cfg.d_model,), ("embed",), dtype=jnp.float32, zeros=True),
+        "attn": init_attention(kg, cfg, dtype),
+        "ln2": mk(kg, (cfg.d_model,), ("embed",), dtype=jnp.float32, zeros=True),
+        "mlp": init_moe(kg, cfg, dtype) if cfg.family == "moe" else init_mlp(kg, cfg, dtype),
+    }
+
+
+def _init_rwkv_layer(kg, cfg, dtype):
+    return {
+        "ln1": mk(kg, (cfg.d_model,), ("embed",), dtype=jnp.float32, zeros=True),
+        "tm": rk.init_time_mix(kg, cfg, dtype),
+        "ln2": mk(kg, (cfg.d_model,), ("embed",), dtype=jnp.float32, zeros=True),
+        "cm": rk.init_channel_mix(kg, cfg, dtype),
+    }
+
+
+def _init_hybrid_position(kg, cfg, dtype, kind):
+    base = {
+        "ln1": mk(kg, (cfg.d_model,), ("embed",), dtype=jnp.float32, zeros=True),
+        "ln2": mk(kg, (cfg.d_model,), ("embed",), dtype=jnp.float32, zeros=True),
+        "mlp": init_mlp(kg, cfg, dtype),
+    }
+    if kind == "rec":
+        base["rec"] = rg.init_rglru(kg, cfg, dtype)
+    else:
+        base["attn"] = init_attention(kg, cfg, dtype)
+    return base
+
+
+def _stack(fn, n, kg, *args):
+    """Stack n independently initialized layer trees along axis 0."""
+    layers = [fn(kg, *args) for _ in range(n)]
+    is_leaf = lambda x: isinstance(x, Annotated)
+    return jax.tree.map(
+        lambda *ls: Annotated(
+            jnp.stack([l.value for l in ls]), ("layers",) + ls[0].axes
+        ),
+        *layers,
+        is_leaf=is_leaf,
+    )
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Any, Any]:
+    kg = KeyGen(key)
+    dtype = dtype_of(cfg.param_dtype)
+    tree: Dict[str, Any] = {
+        "embed": mk(
+            kg, (cfg.vocab, cfg.d_model), ("vocab", "embed_fsdp"),
+            dtype=dtype, scale=cfg.d_model**-0.5,
+        ),
+        "final_norm": mk(kg, (cfg.d_model,), ("embed",), dtype=jnp.float32, zeros=True),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = mk(kg, (cfg.d_model, cfg.vocab), ("embed_fsdp", "vocab"), dtype=dtype)
+    if cfg.family == "rwkv":
+        tree["ln0"] = mk(kg, (cfg.d_model,), ("embed",), dtype=jnp.float32, zeros=True)
+        tree["layers"] = _stack(_init_rwkv_layer, cfg.n_layers, kg, cfg, dtype)
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        n_super = cfg.n_layers // len(pat)
+        assert n_super * len(pat) == cfg.n_layers or True
+        rem = cfg.n_layers - n_super * len(pat)
+        tree["pattern"] = [
+            _stack(functools.partial(_init_hybrid_position, kind=pat[i]), n_super, kg, cfg, dtype)
+            for i in range(len(pat))
+        ]
+        tree["tail"] = [
+            _init_hybrid_position(kg, cfg, dtype, pat[i]) for i in range(rem)
+        ]
+    else:
+        tree["layers"] = _stack(_init_dense_layer, cfg.n_layers, kg, cfg, dtype)
+    return split_tree(tree)
+
+
+# ------------------------------------------------------------------- blocks
+def _dense_block(lp, x, cfg, rope, mesh, rules, attn_impl, window):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    h = constrain(h, ACT, mesh, rules)
+    a, _ = attention(lp["attn"], h, cfg, rope, causal=cfg.attn_kind == "causal", window=window, impl=attn_impl)
+    x = x + constrain(a, ACT, mesh, rules)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    aux = 0.0
+    if cfg.family == "moe":
+        m, aux = moe_block(lp["mlp"], h, cfg, mesh, rules)
+    else:
+        m = mlp(lp["mlp"], h, cfg)
+    x = x + constrain(m, ACT, mesh, rules)
+    return x, aux
+
+
+def _forward_blocks(params, cfg: ModelConfig, x, rope, mesh, rules, attn_impl):
+    """Run all blocks over the full sequence (train / prefill trunk)."""
+    aux_total = 0.0
+    if cfg.family == "rwkv":
+        B = x.shape[0]
+
+        def body(x, lp):
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            st = (jnp.zeros((B, cfg.d_model), x.dtype), jnp.zeros((B, cfg.d_model // cfg.rwkv_head_size, cfg.rwkv_head_size, cfg.rwkv_head_size), jnp.float32))
+            a, _ = rk.time_mix(lp["tm"], h, cfg, st, chunk_remat=cfg.rwkv_chunk_remat)
+            x = x + constrain(a, ACT, mesh, rules)
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            c, _ = rk.channel_mix(lp["cm"], h, cfg, jnp.zeros((B, cfg.d_model), x.dtype))
+            x = x + constrain(c, ACT, mesh, rules)
+            return x, 0.0
+
+        x, _ = jax.lax.scan(maybe_remat(body, cfg.remat), x, params["layers"])
+        return x, aux_total
+    if cfg.family == "hybrid":
+        B = x.shape[0]
+        pat = cfg.block_pattern
+
+        def super_block(carry, lps):
+            x = carry
+            for i, kind in enumerate(pat):
+                lp = lps[i]
+                h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                if kind == "rec":
+                    a, _ = rg.rglru_block(lp["rec"], h, cfg, rg.init_rglru_state(cfg, B, x.dtype))
+                else:
+                    a, _ = attention(lp["attn"], h, cfg, rope, causal=True, window=cfg.local_window, impl="dense" if x.shape[1] <= 4096 else "blocked")
+                x = x + constrain(a, ACT, mesh, rules)
+                h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                x = x + constrain(mlp(lp["mlp"], h, cfg), ACT, mesh, rules)
+            return x, 0.0
+
+        x, _ = jax.lax.scan(maybe_remat(super_block, cfg.remat), x, params["pattern"])
+
+        def tail_block(x, lp, kind):
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if kind == "rec":
+                a, _ = rg.rglru_block(lp["rec"], h, cfg, rg.init_rglru_state(cfg, B, x.dtype))
+            else:
+                a, _ = attention(lp["attn"], h, cfg, rope, causal=True, window=cfg.local_window, impl=attn_impl)
+            x = x + constrain(a, ACT, mesh, rules)
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            return x + constrain(mlp(lp["mlp"], h, cfg), ACT, mesh, rules)
+
+        for i, lp in enumerate(params.get("tail", [])):
+            fn = maybe_remat(lambda x, lp, k=pat[i]: tail_block(x, lp, k), cfg.remat)
+            x = fn(x, lp)
+        return x, aux_total
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _dense_block(lp, x, cfg, rope, mesh, rules, attn_impl, 0)
+        return (x, aux + a), None
+
+    (x, aux_total), _ = jax.lax.scan(
+        maybe_remat(body, cfg.remat), (x, jnp.float32(0.0)), params["layers"]
+    )
+    return x, aux_total
+
+
+def _rope_for(cfg: ModelConfig, positions, mrope_pos=None):
+    if cfg.family == "rwkv":
+        return None
+    if cfg.mrope_sections is not None and mrope_pos is not None:
+        return mrope_positions(mrope_pos, cfg.mrope_sections, cfg.hd, cfg.rope_theta)
+    cos, sin = rotary(positions, cfg.hd, cfg.rope_theta)
+    return cos[None, :, None, :], sin[None, :, None, :]
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens=None,
+    *,
+    embeds=None,
+    mrope_pos=None,
+    mesh=None,
+    rules: Optional[ShardingRules] = None,
+    attn_impl: str = "auto",
+):
+    """Full-sequence forward -> logits [B, S, V] (+ aux loss)."""
+    if embeds is None:
+        x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    else:
+        x = embeds.astype(dtype_of(cfg.compute_dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.family == "rwkv":
+        x = rms_norm(x, params["ln0"], cfg.norm_eps)
+    x = constrain(x, ACT, mesh, rules)
+    S = x.shape[1]
+    rope = _rope_for(cfg, jnp.arange(S), mrope_pos)
+    x, aux = _forward_blocks(params, cfg, x, rope, mesh, rules, attn_impl)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = constrain(logits, ("act_batch", "act_seq", "act_vocab"), mesh, rules)
+    return logits, aux
+
+
+def loss_fn(
+    params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    mesh=None,
+    rules=None,
+    attn_impl: str = "auto",
+):
+    logits, aux = forward(
+        params,
+        cfg,
+        batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        mrope_pos=batch.get("mrope_pos"),
+        mesh=mesh,
+        rules=rules,
+        attn_impl=attn_impl,
+    )
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    ce = jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ------------------------------------------------------------------ serving
+def prefill(
+    params,
+    cfg: ModelConfig,
+    tokens=None,
+    *,
+    embeds=None,
+    mrope_pos=None,
+    mesh=None,
+    rules: Optional[ShardingRules] = None,
+    attn_impl: str = "auto",
+):
+    """Full-prompt forward that also materializes the decode cache.
+
+    Returns (last-token logits [B, V], cache) with the same cache layout as
+    init_cache (attn K/V stacks, rwkv states, hybrid window caches).
+    """
+    if embeds is None:
+        x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    else:
+        x = embeds.astype(dtype_of(cfg.compute_dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.family == "rwkv":
+        x = rms_norm(x, params["ln0"], cfg.norm_eps)
+    x = constrain(x, ACT, mesh, rules)
+    B, S = x.shape[0], x.shape[1]
+    rope = _rope_for(cfg, jnp.arange(S), mrope_pos)
+    cache_dtype = dtype_of(cfg.compute_dtype)
+
+    if cfg.family == "rwkv":
+
+        def body(x, lp):
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            H, N = cfg.d_model // cfg.rwkv_head_size, cfg.rwkv_head_size
+            st0 = (jnp.zeros((B, cfg.d_model), x.dtype), jnp.zeros((B, H, N, N), jnp.float32))
+            a, (tm_x, tm_S) = rk.time_mix(lp["tm"], h, cfg, st0, chunk_remat=cfg.rwkv_chunk_remat)
+            x = x + constrain(a, ACT, mesh, rules)
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            c, cm_x = rk.channel_mix(lp["cm"], h, cfg, jnp.zeros((B, cfg.d_model), x.dtype))
+            x = x + constrain(c, ACT, mesh, rules)
+            return x, {"tm_x": tm_x, "tm_S": tm_S, "cm_x": cm_x}
+
+        x, cache = jax.lax.scan(body, x, params["layers"])
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        win = min(cfg.local_window or S, S)
+
+        def super_block(x, lps):
+            caches = {}
+            for i, kind in enumerate(pat):
+                lp = lps[i]
+                h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                if kind == "rec":
+                    a, ns = rg.rglru_block(lp["rec"], h, cfg, rg.init_rglru_state(cfg, B, x.dtype))
+                    caches[f"p{i}"] = ns
+                else:
+                    a, (k, v) = attention(
+                        lp["attn"], h, cfg, rope, causal=True, window=cfg.local_window,
+                        impl="dense" if S <= 4096 else "blocked",
+                    )
+                    caches[f"p{i}"] = {
+                        "k": k[:, S - win :].astype(cache_dtype),
+                        "v": v[:, S - win :].astype(cache_dtype),
+                    }
+                x = x + constrain(a, ACT, mesh, rules)
+                h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                x = x + constrain(mlp(lp["mlp"], h, cfg), ACT, mesh, rules)
+            return x, caches
+
+        x, cache = jax.lax.scan(super_block, x, params["pattern"])
+    else:
+
+        def body(x, lp):
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, (k, v) = attention(
+                lp["attn"], h, cfg, rope, causal=cfg.attn_kind == "causal", impl=attn_impl
+            )
+            x = x + constrain(a, ACT, mesh, rules)
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                m, _ = moe_block(lp["mlp"], h, cfg, mesh, rules)
+            else:
+                m = mlp(lp["mlp"], h, cfg)
+            x = x + constrain(m, ACT, mesh, rules)
+            cache = {"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)}
+            cache = jax.tree.map(
+                lambda c: constrain(
+                    c, ("cache_batch", "cache_seq", "kv_heads", "head_dim"), mesh, rules
+                ),
+                cache,
+            )
+            return x, cache
+
+        x, cache = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Decode cache pytree (+ logical axes for sharding)."""
+    hd, Kv, L = cfg.hd, cfg.n_kv, cfg.n_layers
+    cache_axes = ("layers", "cache_batch", "cache_seq", "kv_heads", "head_dim")
+    if cfg.family == "rwkv":
+        H, N = cfg.d_model // cfg.rwkv_head_size, cfg.rwkv_head_size
+        cache = {
+            "tm_x": jnp.zeros((L, batch, cfg.d_model), dtype),
+            "tm_S": jnp.zeros((L, batch, H, N, N), jnp.float32),
+            "cm_x": jnp.zeros((L, batch, cfg.d_model), dtype),
+        }
+        axes = {
+            "tm_x": ("layers", "cache_batch", "embed"),
+            "tm_S": ("layers", "cache_batch", "heads", None, None),
+            "cm_x": ("layers", "cache_batch", "embed"),
+        }
+        return cache, axes
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        n_super = cfg.n_layers // len(pat)
+        win = min(cfg.local_window or max_seq, max_seq)
+        cache, axes = {}, {}
+        for i, kind in enumerate(pat):
+            if kind == "rec":
+                cache[f"p{i}"] = {
+                    "conv": jnp.zeros((n_super, batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+                    "h": jnp.zeros((n_super, batch, cfg.d_rnn), jnp.float32),
+                }
+                axes[f"p{i}"] = {
+                    "conv": ("layers", "cache_batch", None, "rnn"),
+                    "h": ("layers", "cache_batch", "rnn"),
+                }
+            else:
+                cache[f"p{i}"] = {
+                    "k": jnp.zeros((n_super, batch, win, Kv, hd), dtype),
+                    "v": jnp.zeros((n_super, batch, win, Kv, hd), dtype),
+                }
+                axes[f"p{i}"] = {"k": cache_axes, "v": cache_axes}
+        return cache, axes
+    cache = {
+        "k": jnp.zeros((L, batch, max_seq, Kv, hd), dtype),
+        "v": jnp.zeros((L, batch, max_seq, Kv, hd), dtype),
+    }
+    return cache, {"k": cache_axes, "v": cache_axes}
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    token,  # [B] int32
+    cache,
+    pos,  # scalar int32: current length (write index)
+    *,
+    mesh=None,
+    rules=None,
+):
+    """One decode step for all decoder-only families -> (logits [B, V], cache)."""
+    x = params["embed"][token][:, None, :].astype(dtype_of(cfg.compute_dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.family == "rwkv":
+        x = rms_norm(x, params["ln0"], cfg.norm_eps)
+
+        def body(x, inp):
+            lp, st = inp
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, (tm_x, tm_S) = rk.time_mix(lp["tm"], h, cfg, (st["tm_x"], st["tm_S"]), chunk=1)
+            x = x + a
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            c, cm_x = rk.channel_mix(lp["cm"], h, cfg, st["cm_x"])
+            return x + c, {"tm_x": tm_x, "tm_S": tm_S, "cm_x": cm_x}
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        win = cache[f"p{[i for i,k in enumerate(pat) if k=='attn'][0]}"]["k"].shape[2]
+        rope = _rope_for(cfg, jnp.array([pos]))
+
+        def super_body(x, inp):
+            lps, sts = inp
+            new_sts = {}
+            for i, kind in enumerate(pat):
+                lp, st = lps[i], sts[f"p{i}"]
+                h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                if kind == "rec":
+                    a, ns = rg.rglru_block(lp["rec"], h, cfg, st, chunk=1)
+                else:
+                    # ring-buffer local attention cache (window win)
+                    wpos = pos % win
+                    a, (ck, cv) = decode_attention(
+                        lp["attn"], h, cfg, rope, st["k"], st["v"], wpos,
+                        valid_len=jnp.minimum(pos + 1, win),
+                    )
+                    ns = {"k": ck, "v": cv}
+                x = x + a
+                h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                x = x + mlp(lp["mlp"], h, cfg)
+                new_sts[f"p{i}"] = ns
+            return x, new_sts
+
+        x, new_cache = jax.lax.scan(super_body, x, (params["pattern"], cache))
+    else:
+        rope = _rope_for(cfg, jnp.array([pos]))
+
+        def block(x, lp, k_l, v_l):
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, (ck, cv) = decode_attention(lp["attn"], h, cfg, rope, k_l, v_l, pos)
+            x = x + a
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                m, _ = moe_block(lp["mlp"], h, cfg, mesh, rules)
+            else:
+                m = mlp(lp["mlp"], h, cfg)
+            return x + m, ck, cv
+
+        if cfg.decode_loop == "fori":
+            # carry the stacked cache through a fori_loop: while-loop carries
+            # buffer-alias in XLA, so the [L, B, S, Kv, D] cache updates in
+            # place instead of being copied through scan xs/ys (§Perf:
+            # qwen2-vl decode iteration log).
+            def body(i, carry):
+                x, ck, cv = carry
+                lp = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                    params["layers"],
+                )
+                k_l = jax.lax.dynamic_index_in_dim(ck, i, 0, keepdims=False)
+                v_l = jax.lax.dynamic_index_in_dim(cv, i, 0, keepdims=False)
+                x, k_l, v_l = block(x, lp, k_l, v_l)
+                ck = jax.lax.dynamic_update_index_in_dim(ck, k_l, i, 0)
+                cv = jax.lax.dynamic_update_index_in_dim(cv, v_l, i, 0)
+                return x, ck, cv
+
+            x, ck, cv = jax.lax.fori_loop(
+                0, cfg.n_layers, body, (x, cache["k"], cache["v"])
+            )
+            new_cache = {"k": ck, "v": cv}
+        else:
+
+            def body(x, inp):
+                lp, st = inp
+                x, ck, cv = block(x, lp, st["k"], st["v"])
+                return x, {"k": ck, "v": cv}
+
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,1 @@
+from .rules import ShardingRules, logical_sharding, PROFILES  # noqa: F401

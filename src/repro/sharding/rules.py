@@ -1,0 +1,144 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter / activation is annotated with *logical* axis names; a
+profile maps logical names to mesh axes. ``logical_sharding`` resolves the
+map against a concrete mesh and silently drops mesh axes that do not divide
+the dimension (e.g. MQA's kv_heads=1 under a 16-way model axis stays
+replicated) — the fallback that makes one rule set serve all ten
+architectures.
+
+Profiles (DESIGN.md §3):
+  train     — FSDP(ZeRO-3) over 'data' on the embed dim of every weight,
+              TP over 'model' on heads/mlp/vocab/experts; activations
+              batch→data, seq→model (Megatron-style sequence parallelism).
+  serve     — weights TP over 'model' only (replicated over 'data' so the
+              batch can shard there); KV cache batch→data, seq→model
+              (context-parallel decode).
+  multi-pod — same, with batch over ('pod','data'): the pod axis is pure DP
+              with hierarchical gradient reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "PROFILES", "logical_sharding", "logical_spec"]
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Dict[str, Axes]
+
+    def get(self, logical: Optional[str]) -> Axes:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+
+_TRAIN = {
+    # weights: FSDP over data on the "long" embed dim + TP over model
+    "embed_fsdp": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "rnn": "model",
+    "embed": None,
+    # activations
+    "act_batch": "data",
+    "act_seq": "model",  # sequence parallelism for the residual stream
+    "act_embed": None,
+    "act_heads": "model",
+    "act_vocab": "model",
+    # decode cache (unused in train)
+    "cache_batch": "data",
+    "cache_seq": "model",
+    "layers": None,
+}
+
+_SERVE = dict(_TRAIN)
+_SERVE.update(
+    {
+        "embed_fsdp": None,  # weights replicated over data for batch-DP serving
+        # MoE expert weights are ~all of a big MoE's params — replicating
+        # them over 'data' at serve time costs 29 GiB/dev on qwen3-235b.
+        # Shard d_expert over 'data' instead: experts x model, d_expert x
+        # data = fully sharded weights; the FFN contraction psums over data.
+        "expert_mlp": "data",
+        "act_seq": "model",
+        "cache_batch": "data",
+        "cache_seq": "model",
+    }
+)
+
+_TRAIN_POD = dict(_TRAIN)
+_TRAIN_POD.update({"act_batch": ("pod", "data"), "cache_batch": ("pod", "data")})
+
+_SERVE_POD = dict(_SERVE)
+_SERVE_POD.update({"act_batch": ("pod", "data"), "cache_batch": ("pod", "data")})
+
+PROFILES: Dict[str, ShardingRules] = {
+    "train": ShardingRules(_TRAIN),
+    "serve": ShardingRules(_SERVE),
+    "train_pod": ShardingRules(_TRAIN_POD),
+    "serve_pod": ShardingRules(_SERVE_POD),
+}
+
+
+def _normalize(ax: Axes) -> Tuple[str, ...]:
+    if ax is None:
+        return ()
+    if isinstance(ax, str):
+        return (ax,)
+    return tuple(ax)
+
+
+def logical_spec(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: ShardingRules,
+) -> P:
+    """PartitionSpec for one array, dropping non-dividing / absent axes."""
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        picked = []
+        prod = 1
+        for ax in _normalize(rules.get(name)):
+            if ax in used or ax not in mesh.shape:
+                continue
+            size = mesh.shape[ax]
+            if dim % (prod * size) == 0:
+                picked.append(ax)
+                prod *= size
+        used.update(picked)
+        out.append(tuple(picked) if len(picked) > 1 else (picked[0] if picked else None))
+    return P(*out)
+
+
+def logical_sharding(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: ShardingRules,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(shape, logical_axes, mesh, rules))
+
+
+def constrain(x, logical_axes, mesh: Mesh, rules: ShardingRules):
+    """with_sharding_constraint by logical names (no-op off-mesh)."""
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, logical_sharding(x.shape, logical_axes, mesh, rules)
+    )

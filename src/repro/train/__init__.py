@@ -1,0 +1,2 @@
+from .optimizer import AdamWState, adamw_init, adamw_update, clip_by_global_norm, wsd_schedule  # noqa: F401
+from .train_step import make_train_step  # noqa: F401

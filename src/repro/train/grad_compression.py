@@ -1,0 +1,55 @@
+"""Error-feedback int8 gradient compression for the cross-pod axis.
+
+At fleet scale the inter-pod links (DCN / optical) are ~10x slower than
+within-pod ICI, so the cross-pod leg of the gradient all-reduce dominates.
+Standard remedy (1-bit Adam / EF-SGD lineage): reduce full precision within
+the pod, then all-reduce *across pods* in int8 with a shared scale and an
+error-feedback residual so quantization bias never accumulates.
+
+``compressed_tree_allreduce`` runs inside a shard_map whose manual axis is
+'pod' (the hierarchical train step in launch/train.py sets that up with
+auto={'data','model'} so XLA still auto-partitions the model math)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_allreduce", "compressed_tree_allreduce"]
+
+
+def quantize_int8(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_allreduce(x: jnp.ndarray, residual: jnp.ndarray, axis: str):
+    """mean-all-reduce(x + residual) over `axis` with int8 payload.
+
+    Returns (reduced fp32 mean, new local residual). Must run under shard_map
+    with `axis` manual. The scale is pmax-shared so the int8 payloads sum
+    exactly; each member keeps what its own quantization dropped (EF).
+    """
+    y = x.astype(jnp.float32) + residual
+    scale = jax.lax.pmax(jnp.max(jnp.abs(y)) / 127.0 + 1e-12, axis)
+    q = quantize_int8(y, scale)
+    new_residual = y - dequantize_int8(q, scale)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    return total.astype(jnp.float32) * scale / n, new_residual
+
+
+def compressed_tree_allreduce(grads: Any, residuals: Any, axis: str):
+    """Leaf-wise compressed mean-reduction; returns (grads, residuals)."""
+    pairs = jax.tree.map(lambda g, r: compressed_allreduce(g, r, axis), grads, residuals)
+    g2 = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    r2 = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    return g2, r2
+
+
+def init_residuals(grads_shape: Any):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_shape)

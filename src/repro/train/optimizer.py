@@ -1,0 +1,97 @@
+"""AdamW from scratch (no optax in this container): fp32 master weights +
+moments, decoupled weight decay, global-norm clipping, WSD schedule.
+
+The optimizer state inherits each parameter's logical sharding (ZeRO: the
+fp32 master copy and both moments are FSDP-sharded exactly like the weight),
+so a 72B AdamW state (~864 GB fp32) spreads across the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm", "wsd_schedule"]
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    mu: Any  # fp32 tree
+    nu: Any  # fp32 tree
+    master: Any  # fp32 master weights tree
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        # jnp.array copies — fp32 params must not alias the master weights
+        # (both trees are donated to the train step)
+        master=jax.tree.map(lambda p: jnp.array(p, dtype=jnp.float32), params),
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def wsd_schedule(
+    base_lr: float, warmup: int = 200, stable: int = 10_000, decay: int = 2_000
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Warmup-Stable-Decay (the modern default for continually-resumed runs —
+    checkpoint/restart never lands mid-cosine)."""
+
+    def lr(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(s / max(warmup, 1), 1.0)
+        d = jnp.clip((stable + decay - s) / max(decay, 1), 0.0, 1.0)
+        return base_lr * w * d
+
+    return lr
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    *,
+    lr_fn: Callable,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+    param_dtype=jnp.bfloat16,
+) -> Tuple[Any, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    lr = lr_fn(step)
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / c1
+        vhat = v2 / c2
+        w2 = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w)
+        return m2, v2, w2
+
+    flat_g = jax.tree.leaves(grads)
+    tdef = jax.tree.structure(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_w = jax.tree.leaves(state.master)
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    mu = jax.tree.unflatten(tdef, [o[0] for o in out])
+    nu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    master = jax.tree.unflatten(tdef, [o[2] for o in out])
+    params = jax.tree.map(lambda w: w.astype(param_dtype), master)
+    return params, AdamWState(step, mu, nu, master), {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,87 @@
+"""The jit'd training step: loss -> grads -> (optionally compressed) reduce ->
+AdamW, with remat policy knobs and hierarchical multi-pod gradient handling.
+
+Standard (single-pod / pjit) path: batch is sharded over 'data' (and 'pod');
+XLA reduce-scatters gradients into the FSDP layout automatically. The
+``pod_compression`` option reroutes the *cross-pod* gradient reduction
+through int8 error-feedback compression (see grad_compression.py) — within a
+pod the reduction stays full precision; across pods traffic drops ~4x, the
+trick that keeps the slow inter-pod links off the critical path at fleet
+scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dtype_of
+from repro.train.optimizer import AdamWState, adamw_update, wsd_schedule
+
+__all__ = ["make_train_step"]
+
+
+def make_train_step(
+    loss_fn: Callable,
+    cfg: ModelConfig,
+    *,
+    mesh=None,
+    rules=None,
+    lr: float = 3e-4,
+    warmup: int = 200,
+    attn_impl: str = "auto",
+    pod_compression: bool = False,
+    pod_axis: str = "pod",
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Activation checkpointing happens *per layer* inside the model's scan
+    (cfg.remat) — rematting the whole loss would force the scan to save full
+    per-layer attention residuals.
+    """
+    lr_fn = wsd_schedule(lr, warmup=warmup)
+    pdt = dtype_of(cfg.param_dtype)
+
+    def loss(params, batch):
+        return loss_fn(params, batch, mesh=mesh, rules=rules, attn_impl=attn_impl)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        params, opt_state, om = adamw_update(
+            grads, opt_state, lr_fn=lr_fn, param_dtype=pdt
+        )
+        metrics = dict(metrics, loss=l, **om)
+        return params, opt_state, metrics
+
+    if not pod_compression or mesh is None or pod_axis not in mesh.shape:
+        return train_step
+
+    # ---- hierarchical multi-pod variant: manual over 'pod', auto inside ----
+    # Gradients stay pod-local (shard_map manual axis), the cross-pod leg is
+    # an int8 error-feedback all-reduce, then AdamW runs identically per pod.
+    from jax.sharding import PartitionSpec as P
+
+    from repro.train.grad_compression import compressed_tree_allreduce
+
+    def hier_step(params, opt_state, residuals, batch):
+        def body(params, opt_state, residuals, batch):
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+            grads, residuals = compressed_tree_allreduce(grads, residuals, pod_axis)
+            params, opt_state, om = adamw_update(grads, opt_state, lr_fn=lr_fn, param_dtype=pdt)
+            return params, opt_state, residuals, dict(metrics, loss=l, **om)
+
+        rep = P()  # params/opt replicated across pods; batch split over pod
+        fn = jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(rep, rep, rep, P(pod_axis)),
+            out_specs=(rep, rep, rep, rep),
+            check_vma=False,
+            axis_names=frozenset({pod_axis}),
+        )
+        return fn(params, opt_state, residuals, batch)
+
+    return hier_step

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
+# benches must see the real single-device CPU; only launch/dryrun.py forces
+# 512 placeholder devices (and it does so before importing jax).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,134 @@
+"""Exactness of every indexed solution against the SPS oracle (paper's 'our
+solutions ... still report exact values' claim), across kernel combinations
+including the non-polynomial ones of §7."""
+import numpy as np
+import pytest
+
+from repro.core import TNKDE
+from repro.core.events import Events
+from repro.data.spatial import make_events, make_network
+
+KW = dict(g=35.0, b_s=700.0, b_t=2.5 * 86400.0)
+TS = [3 * 86400.0, 7 * 86400.0 + 5000.0]
+
+
+@pytest.fixture(scope="module")
+def world():
+    net = make_network(80, 140, seed=3)
+    ev = make_events(net, 1200, seed=4, span_days=12)
+    return net, ev
+
+
+@pytest.fixture(scope="module")
+def reference(world):
+    net, ev = world
+    return TNKDE(net, ev, solution="sps", **KW).query(TS)
+
+
+KERNEL_PAIRS = [
+    ("triangular", "triangular"),
+    ("epanechnikov", "triangular"),
+    ("epanechnikov", "cosine"),
+    ("exponential", "triangular"),
+    ("cosine", "exponential"),
+    ("quartic", "uniform"),
+]
+
+
+@pytest.mark.parametrize("ks,kt", KERNEL_PAIRS)
+@pytest.mark.parametrize("solution", ["ada", "rfs"])
+def test_indexed_matches_oracle(world, ks, kt, solution):
+    net, ev = world
+    ref = TNKDE(
+        net, ev, solution="sps", spatial_kernel=ks, temporal_kernel=kt, **KW
+    ).query(TS)
+    got = TNKDE(
+        net, ev, solution=solution, spatial_kernel=ks, temporal_kernel=kt, **KW
+    ).query(TS)
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-9 * max(ref.max(), 1))
+
+
+def test_rfs_cascade_equals_search(world):
+    net, ev = world
+    a = TNKDE(net, ev, solution="rfs", cascade=True, **KW).query(TS)
+    b = TNKDE(net, ev, solution="rfs", cascade=False, **KW).query(TS)
+    np.testing.assert_allclose(a, b, rtol=1e-12)
+
+
+@pytest.mark.parametrize("solution", ["ada", "rfs", "drfs"])
+def test_lixel_sharing_exact(world, reference, solution):
+    net, ev = world
+    extra = dict(drfs_depth=7, drfs_exact_leaf=True) if solution == "drfs" else {}
+    m = TNKDE(net, ev, solution=solution, lixel_sharing=True, **KW, **extra)
+    got = m.query(TS)
+    assert m.stats.n_pairs_dominated > 0, "test setup should produce dominated edges"
+    assert m.stats.n_pairs_out > 0
+    np.testing.assert_allclose(
+        got, reference, rtol=1e-9, atol=1e-9 * reference.max()
+    )
+
+
+def test_drfs_exact_leaf_matches_oracle(world, reference):
+    net, ev = world
+    got = TNKDE(
+        net, ev, solution="drfs", drfs_depth=7, drfs_exact_leaf=True, **KW
+    ).query(TS)
+    np.testing.assert_allclose(got, reference, rtol=1e-9, atol=1e-9 * reference.max())
+
+
+def test_drfs_quantized_accuracy_increases(world, reference):
+    """Fig 20: accuracy rises with H0; >=85% at H0=2 scale-analog, ~exact deep."""
+    net, ev = world
+    accs = []
+    for h0 in (1, 2, 4, 7):
+        got = TNKDE(net, ev, solution="drfs", drfs_depth=7, drfs_h0=h0, **KW).query(TS)
+        acc = 1.0 - np.abs(got - reference).sum() / np.abs(reference).sum()
+        accs.append(acc)
+    assert all(b >= a - 5e-3 for a, b in zip(accs, accs[1:])), accs
+    assert accs[-1] > 0.99, accs
+
+
+def test_drfs_streaming_insert_exact(world, reference):
+    net, ev = world
+    order = np.argsort(ev.time, kind="stable")
+    half = ev.n // 2
+    e1 = Events(ev.edge_id[order[:half]], ev.pos[order[:half]], ev.time[order[:half]])
+    e2 = Events(ev.edge_id[order[half:]], ev.pos[order[half:]], ev.time[order[half:]])
+    m = TNKDE(net, e1, solution="drfs", drfs_depth=7, drfs_exact_leaf=True, **KW)
+    m.insert(e2)
+    got = m.query(TS)
+    np.testing.assert_allclose(got, reference, rtol=1e-9, atol=1e-9 * reference.max())
+
+
+def test_drfs_streaming_pending_unsealed(world, reference):
+    """Small insert stays in pending buffers (scanned, not sealed) — exact."""
+    net, ev = world
+    order = np.argsort(ev.time, kind="stable")
+    cut = ev.n - 40  # small tail → below the geometric seal threshold
+    e1 = Events(ev.edge_id[order[:cut]], ev.pos[order[:cut]], ev.time[order[:cut]])
+    e2 = Events(ev.edge_id[order[cut:]], ev.pos[order[cut:]], ev.time[order[cut:]])
+    m = TNKDE(net, e1, solution="drfs", drfs_depth=7, drfs_exact_leaf=True, **KW)
+    m.insert(e2)
+    assert m.index._n_pending == 40, "tail should remain unsealed"
+    got = m.query(TS)
+    np.testing.assert_allclose(got, reference, rtol=1e-9, atol=1e-9 * reference.max())
+
+
+def test_gaussian_chebyshev_converges(world):
+    """Beyond-paper: Chebyshev decomposition error converges with degree."""
+    net, ev = world
+    errs = []
+    for deg in (2, 4, 8):
+        from repro.core.kernels_math import chebyshev_kernel
+        import repro.core.kernels_math as km
+
+        km._REGISTRY[f"gch{deg}"] = lambda d=deg: km.gaussian_cheb(d)
+        ref = TNKDE(net, ev, solution="sps", spatial_kernel=f"gch{deg}", **KW).query(TS[:1])
+        got = TNKDE(net, ev, solution="rfs", spatial_kernel=f"gch{deg}", **KW).query(TS[:1])
+        # rfs must match its own polynomialization exactly...
+        np.testing.assert_allclose(got, ref, rtol=1e-8, atol=1e-8 * max(ref.max(), 1))
+        # ...and the polynomialization must converge to the true gaussian
+        x = np.linspace(0, 1, 1001)
+        errs.append(np.abs(km.gaussian_cheb(deg)(x) - np.exp(-(x**2))).max())
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 1e-6

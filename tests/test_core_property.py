@@ -1,0 +1,118 @@
+"""Hypothesis property tests on the core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import segmented_cumsum, segmented_searchsorted
+from repro.core.kernels_math import (
+    CosineKernel,
+    ExponentialKernel,
+    PolynomialKernel,
+    get_kernel,
+)
+from repro.core.lixel_sharing import add_arithmetic, lemma61_argmax, recover_from_diff2
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_segmented_searchsorted_matches_numpy(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    n_segs = data.draw(st.integers(1, 8))
+    lens = [data.draw(st.integers(0, 20)) for _ in range(n_segs)]
+    vals = np.concatenate([np.sort(rng.normal(size=l)) for l in lens]) if sum(lens) else np.zeros(0)
+    ptr = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    nq = data.draw(st.integers(1, 30))
+    seg = rng.integers(0, n_segs, nq)
+    q = rng.normal(size=nq)
+    # sprinkle exact ties to exercise left/right semantics
+    if sum(lens):
+        ties = rng.random(nq) < 0.3
+        q[ties] = vals[rng.integers(0, len(vals), ties.sum())]
+    right = rng.random(nq) < 0.5
+    got = segmented_searchsorted(vals, ptr[seg], ptr[seg + 1], q, right)
+    for i in range(nq):
+        s = vals[ptr[seg[i]] : ptr[seg[i] + 1]]
+        want = ptr[seg[i]] + np.searchsorted(s, q[i], side="right" if right[i] else "left")
+        assert got[i] == want
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 6), st.integers(0, 40))
+def test_segmented_cumsum_matches_loop(seed, n_segs, maxlen):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(0, maxlen + 1, n_segs)
+    ptr = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    x = rng.normal(size=(int(ptr[-1]), 3))
+    got = segmented_cumsum(x, ptr)
+    for s in range(n_segs):
+        seg = x[ptr[s] : ptr[s + 1]]
+        np.testing.assert_allclose(got[ptr[s] : ptr[s + 1]], np.cumsum(seg, axis=0))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 5))
+def test_kernel_decomposition_identity(seed, which):
+    """K((d_q + d_p)/b) == q_vec(d_q/b) . e_vec(d_p/s) for all kernels,
+    including negative query-side arguments (the same-edge cases)."""
+    rng = np.random.default_rng(seed)
+    k = [
+        get_kernel("triangular"),
+        get_kernel("epanechnikov"),
+        get_kernel("quartic"),
+        get_kernel("exponential"),
+        get_kernel("cosine"),
+    ][which - 1]
+    b = rng.uniform(0.5, 2000.0)
+    s = rng.uniform(0.1, 3000.0)
+    d_q = rng.uniform(-2 * s, b, size=32)
+    u = rng.uniform(0, 1, size=32)
+    lhs = k((d_q + u * s) / b)
+    rhs = np.einsum("ik,ik->i", k.q_vec(d_q / b, s / b), k.e_vec(u, s / b))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 6), st.integers(2, 50))
+def test_add_arithmetic_recovers(seed, n_aps, length):
+    rng = np.random.default_rng(seed)
+    diff2 = np.zeros(length + 2)
+    want = np.zeros(length)
+    for _ in range(n_aps):
+        i0 = int(rng.integers(0, length))
+        i1 = int(rng.integers(i0, length + 1))
+        a = float(rng.normal())
+        s = float(rng.normal())
+        add_arithmetic(diff2, np.array([i0]), np.array([i1]), np.array([a]), np.array([s]))
+        idx = np.arange(i0, i1)
+        want[idx] += a + (idx - i0) * s
+    np.testing.assert_allclose(recover_from_diff2(diff2, length), want, atol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31))
+def test_lemma_6_1_four_candidates(seed):
+    """Lemma 6.1: the max of d(q_i,v_c) - d(q_i,v_d) over lixels is attained
+    at one of the <=4 break positions (+ endpoints)."""
+    from repro.core.aggregation import build_event_moments
+    from repro.core.events import group_events_by_edge
+    from repro.core.network import build_lixels
+    from repro.core.plan import build_edge_geometry
+    from repro.core.shortest_path import adjacency_csr, bounded_dijkstra
+    from repro.data.spatial import make_events, make_network
+
+    rng = np.random.default_rng(seed)
+    net = make_network(30, 50, seed=seed % 1000)
+    ev = make_events(net, 200, seed=seed % 997)
+    lix = build_lixels(net, 25.0)
+    ee = group_events_by_edge(net, ev)
+    ks = get_kernel("triangular")
+    ctx, _ = build_event_moments(net, ee, ks, ks, 500.0, 86400.0)
+    adj = adjacency_csr(net)
+    a = int(rng.integers(0, net.n_edges))
+    va, vb = int(net.edge_src[a]), int(net.edge_dst[a])
+    rows = bounded_dijkstra(net, [va, vb], 500.0 + net.edge_len[a] + 1, adj=adj)
+    geom = build_edge_geometry(net, lix, ee, a, 500.0, rows)
+    for j in range(min(geom.cand.shape[0], 10)):
+        direct = (geom.d_c[:, j] - geom.d_d[:, j]).max()
+        lemma = lemma61_argmax(geom, j)
+        if np.isfinite(direct) and np.isfinite(lemma):
+            np.testing.assert_allclose(lemma, direct, rtol=1e-9, atol=1e-9)

@@ -1,0 +1,82 @@
+"""Unit tests: network / lixels / events / shortest paths / moments."""
+import numpy as np
+import pytest
+
+from repro.core.aggregation import build_event_moments, window_rank_ranges
+from repro.core.events import Events, group_events_by_edge, merge_edge_events
+from repro.core.kernels_math import get_kernel
+from repro.core.network import RoadNetwork, build_lixels
+from repro.core.shortest_path import adjacency_csr, bounded_dijkstra
+from repro.data.spatial import DATASETS, make_dataset, make_events, make_network
+
+
+def test_lixel_count_matches_definition():
+    net = RoadNetwork(4, [0, 1, 2], [1, 2, 3], [100.0, 95.0, 10.0])
+    lix = build_lixels(net, 10.0)
+    # L = sum ceil(len/g) (Def 3.2)
+    assert lix.n_lixels == 10 + 10 + 1
+    assert lix.count_on_edge(0) == 10
+    # centers: regular then short tail
+    np.testing.assert_allclose(lix.pos[:10], np.arange(10) * 10 + 5.0)
+    e1 = lix.pos[lix.edge_ptr[1] : lix.edge_ptr[2]]
+    np.testing.assert_allclose(e1[-1], (90 + 95) / 2)
+
+
+def test_events_grouped_time_sorted():
+    net = RoadNetwork(3, [0, 1], [1, 2], [50.0, 60.0])
+    ev = Events([1, 0, 1, 0], [10.0, 20.0, 30.0, 70.0], [5.0, 3.0, 1.0, 4.0])
+    ee = group_events_by_edge(net, ev)
+    assert ee.count(0) == 2 and ee.count(1) == 2
+    p0, t0 = ee.slice(0)
+    assert list(t0) == [3.0, 4.0]
+    np.testing.assert_allclose(p0[1], 50.0)  # clipped to edge length
+    ee2 = merge_edge_events(net, ee, Events([0], [5.0], [10.0]))
+    assert ee2.count(0) == 3
+
+
+def test_bounded_dijkstra_matches_unbounded_within_radius():
+    net = make_network(40, 70, seed=9)
+    adj = adjacency_csr(net)
+    full = bounded_dijkstra(net, [0, 5], 1e18, adj=adj)
+    bounded = bounded_dijkstra(net, [0, 5], 800.0, adj=adj)
+    mask = bounded < np.inf
+    np.testing.assert_allclose(bounded[mask], full[mask])
+    assert np.all(full[~mask] > 800.0 - 1e-9)
+
+
+def test_window_rank_ranges_sides():
+    net = RoadNetwork(2, [0], [1], [100.0])
+    ev = Events([0] * 5, [10, 20, 30, 40, 50], [1.0, 2.0, 2.0, 3.0, 4.0])
+    ee = group_events_by_edge(net, ev)
+    lo, mid, hi = window_rank_ranges(ee, np.array([0]), t=2.0, b_t=1.0)
+    # left window [1,2] inclusive -> events t=1,2,2 ; right (2,3] -> t=3
+    assert (int(lo[0]), int(mid[0]), int(hi[0])) == (0, 3, 4)
+
+
+def test_moment_context_shapes():
+    net = make_network(20, 30, seed=1)
+    ev = make_events(net, 100, seed=1)
+    ee = group_events_by_edge(net, ev)
+    ks, kt = get_kernel("epanechnikov"), get_kernel("cosine")
+    ctx, phi = build_event_moments(net, ee, ks, kt, 500.0, 3600.0)
+    assert phi.shape == (100, 4, ks.n_features * kt.n_features)
+    assert ctx.K == 3 * 2
+
+
+def test_dataset_calibration():
+    net, ev, meta = make_dataset("berkeley", scale=0.02, seed=0)
+    assert meta["V"] > 0 and meta["E"] > 0
+    # events-per-edge ratio within 2x of Table 3
+    assert 0.3 < meta["N_over_E"] / meta["table3"]["N_over_E"] < 3.0
+    assert set(DATASETS) == {"berkeley", "johns_creek", "san_francisco", "new_york"}
+
+
+def test_tnkde_rejects_bad_config():
+    net = make_network(20, 30, seed=1)
+    ev = make_events(net, 50, seed=1)
+    from repro.core import TNKDE
+
+    with pytest.raises(ValueError):
+        TNKDE(net, ev, solution="nope")
+    with pytest.raises(ValueError):
+        TNKDE(net, ev, solution="sps", lixel_sharing=True)

@@ -1,0 +1,66 @@
+"""Distributed (shard_map) TN-KDE on 8 host devices vs the host RFS result.
+
+Runs in a subprocess so the 8-device XLA_FLAGS override never leaks into the
+other tests' single-device world.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, sys.argv[1])
+    import numpy as np
+    import jax
+    from repro.core import TNKDE
+    from repro.core.distributed import DistributedTNKDE
+    from repro.data.spatial import make_network, make_events
+
+    net = make_network(60, 100, seed=11)
+    ev = make_events(net, 900, seed=12, span_days=10)
+    kw = dict(g=40.0, b_s=600.0, b_t=2.0 * 86400.0)
+    ts = [2 * 86400.0, 6 * 86400.0]
+    host = TNKDE(net, ev, solution="rfs", **kw)
+    ref = host.query(ts)
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    dist = DistributedTNKDE(host, mesh, axes=("data",))
+    got = dist.query(ts)
+    err = float(np.abs(got - ref).max() / max(ref.max(), 1e-9))
+    bal = dist.sf.time_ptr[:, -1]
+    print(json.dumps({
+        "err": err,
+        "n_shards": int(dist.sf.n_shards),
+        "shard_loads": [int(x) for x in bal],
+        "devices": len(jax.devices()),
+    }))
+    """
+)
+
+
+def test_sharded_matches_host(tmp_path):
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = tmp_path / "dist_kde.py"
+    script.write_text(SCRIPT)
+    out = subprocess.run(
+        [sys.executable, str(script), src],
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["devices"] == 8
+    assert res["n_shards"] == 4
+    # fp32 device path vs fp64 host path
+    assert res["err"] < 5e-4, res
+    # greedy balancing: no shard should hold more than 2x the mean event load
+    loads = np.array(res["shard_loads"], float)
+    assert loads.max() <= 2.0 * max(loads.mean(), 1.0), loads

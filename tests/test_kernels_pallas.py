@@ -1,0 +1,113 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+# ------------------------------------------------------------------ minplus
+@pytest.mark.parametrize("m,k,n", [(4, 4, 4), (16, 32, 8), (65, 33, 17), (128, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_minplus_matches_ref(m, k, n, dtype):
+    rng = np.random.default_rng(m * 1000 + n)
+    a = jnp.asarray(rng.uniform(0, 10, (m, k)), dtype)
+    b = jnp.asarray(rng.uniform(0, 10, (k, n)), dtype)
+    # sprinkle infs (unreachable)
+    a = a.at[rng.integers(0, m), rng.integers(0, k)].set(jnp.inf)
+    got = ops.minplus_matmul(a, b, tm=32, tn=32, tk=32)
+    want = ref.minplus_matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_minplus_bellman_ford_distances():
+    from repro.core.shortest_path import adjacency_csr, bounded_dijkstra, minplus_bellman_ford
+    from repro.data.spatial import make_network
+
+    net = make_network(30, 50, seed=7)
+    adj = jnp.asarray(net.dense_adjacency())
+    src = np.array([0, 3, 11])
+    init = np.full((3, net.n_vertices), np.inf)
+    init[np.arange(3), src] = 0.0
+    d_ref = bounded_dijkstra(net, src, 1e18, adj=adjacency_csr(net))
+    d_mp = minplus_bellman_ford(adj, jnp.asarray(init), rounds=net.n_vertices, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(d_mp), d_ref, rtol=1e-5)
+
+
+# --------------------------------------------------------------- tree_query
+def _random_forest(rng, G, n_events, K):
+    """Build merge-tree tables directly (mirrors rfs.py construction)."""
+    from repro.core.aggregation import next_pow2, segmented_cumsum
+
+    npad = next_pow2(n_events)
+    lvl = npad.bit_length()
+    pos = np.full((G, lvl, npad), np.inf, np.float64)
+    cum = np.zeros((G, lvl, npad, K))
+    raw = []
+    for g in range(G):
+        p = np.sort(rng.uniform(0, 100, n_events))[rng.permutation(n_events)]
+        f = rng.normal(size=(n_events, K))
+        raw.append((p, f))
+        pp = np.full(npad, np.inf)
+        pp[:n_events] = p
+        ff = np.zeros((npad, K))
+        ff[:n_events] = f
+        ranks = np.arange(npad)
+        for lev in range(lvl):
+            order = np.lexsort((pp, ranks >> lev))
+            bptr = np.arange(0, npad + 1, 1 << lev)
+            pos[g, lev] = pp[order]
+            cum[g, lev] = segmented_cumsum(ff[order], bptr)
+    return pos, cum, raw, npad
+
+
+@pytest.mark.parametrize("n_events,K,Q", [(5, 2, 7), (16, 4, 33), (21, 3, 130)])
+def test_tree_query_matches_bruteforce(n_events, K, Q):
+    rng = np.random.default_rng(n_events * 31 + Q)
+    G = 3
+    pos, cum, raw, npad = _random_forest(rng, G, n_events, K)
+    r_lo = rng.integers(0, n_events, (G, Q))
+    r_hi = rng.integers(0, n_events + 1, (G, Q))
+    r_hi = np.maximum(r_hi, r_lo)
+    ph = rng.uniform(0, 110, (G, Q))
+    pl1 = rng.uniform(-10, 100, (G, Q))
+    l1r = rng.random((G, Q)) < 0.5
+    pl2 = rng.uniform(-10, 60, (G, Q))
+    qv = rng.normal(size=(G, Q, K))
+
+    args = (pos, cum, r_lo, r_hi, ph, pl1, l1r, pl2, qv)
+    got = np.asarray(ops.tree_query(*[jnp.asarray(x) for x in args], tq=32))
+    want_ref = np.asarray(ref.tree_query(*[jnp.asarray(x) for x in args]))
+
+    # brute force oracle over the raw events
+    want = np.zeros((G, Q))
+    for g in range(G):
+        p, f = raw[g]
+        for q in range(Q):
+            sel = np.arange(n_events)
+            inrank = (sel >= r_lo[g, q]) & (sel < r_hi[g, q])
+            lo1_ok = (p > pl1[g, q]) if l1r[g, q] else (p >= pl1[g, q])
+            m = inrank & (p <= ph[g, q]) & lo1_ok & (p >= pl2[g, q])
+            want[g, q] = f[m].sum(axis=0) @ qv[g, q]
+    # ref/kernel run in fp32; oracle in fp64
+    np.testing.assert_allclose(want_ref, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize("b,h,hkv,s,d", [(1, 2, 2, 64, 16), (2, 4, 2, 128, 32), (1, 8, 1, 256, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, h, hkv, s, d, causal, dtype):
+    rng = np.random.default_rng(h * s + d)
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, tq=64, tk=64)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )

@@ -1,0 +1,177 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward/train step on CPU, shape checks, no NaNs — plus prefill/decode
+consistency against the full-sequence forward (the serving-path oracle)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, reduce_for_smoke
+from repro.models import encdec, transformer
+from repro.models.registry import get_model, input_specs
+from repro.configs.base import SHAPES
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _batch_for(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {}
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    elif cfg.mrope_sections is not None:
+        batch["embeds"] = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)) * 0.02, jnp.float32)
+        pos = np.broadcast_to(np.arange(S), (B, 3, S)).copy()
+        batch["mrope_pos"] = jnp.asarray(pos, jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    model = get_model(cfg)
+    params, axes = model.init(jax.random.key(0))
+    batch = _batch_for(cfg)
+    loss, metrics = model.loss_fn(params, batch)
+    assert np.isfinite(float(loss)), (arch, loss)
+    # gradient flows and is finite on every leaf
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert leaves, arch
+    for g in leaves:
+        assert np.all(np.isfinite(np.asarray(g, np.float32))), arch
+    # loss is in a sane range for random init: ~ln(vocab)
+    assert 0.3 * np.log(cfg.vocab) < float(metrics["ce"]) < 4.0 * np.log(cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if not ARCHS[a].is_encdec])
+def test_prefill_decode_matches_forward(arch):
+    """Serving oracle: prefill(prompt) + decode(next) == forward(prompt+next)."""
+    import dataclasses
+
+    cfg = reduce_for_smoke(get_config(arch))
+    if cfg.family == "moe":
+        # capacity drops are batch-size dependent by construction (dropping
+        # MoE); a no-drop capacity factor makes forward == prefill+decode
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.key(1))
+    B, S = 2, 12
+    rng = np.random.default_rng(3)
+    full = _batch_for(cfg, B=B, S=S + 1, seed=3)
+    prompt = {k: (v[:, :S] if v.ndim == 2 else v[:, :, :S] if k == "mrope_pos" else v[:, :S]) for k, v in full.items() if k != "labels"}
+    logits_full, _ = transformer.forward(
+        params, cfg, prompt.get("tokens"), embeds=prompt.get("embeds"),
+        mrope_pos=prompt.get("mrope_pos"), attn_impl="dense",
+    )
+    lp, cache = model.prefill(params, prompt, attn_impl="dense")
+    np.testing.assert_allclose(
+        np.asarray(lp, np.float32),
+        np.asarray(logits_full[:, -1], np.float32),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+    if cfg.mrope_sections is not None or cfg.is_encdec:
+        return  # decode takes token ids; embed-stub archs stop at prefill parity
+    # extend the cache and decode the next token
+    ext = _batch_for(cfg, B=B, S=S + 1, seed=3)
+    logits_ext, _ = transformer.forward(params, cfg, ext["tokens"], attn_impl="dense")
+    win = cfg.local_window if cfg.family == "hybrid" else 0
+
+    def pad_seq(c):
+        if c.ndim == 5 and c.shape[2] == S:  # [L, B, S, Kv, hd]
+            pad = (win or S + 4) - S if cfg.family == "hybrid" else 4
+            return jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return c
+
+    cache = jax.tree.map(pad_seq, cache)
+    logits_dec, _ = model.decode_step(params, ext["tokens"][:, S], cache, jnp.int32(S))
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(logits_ext[:, -1], np.float32),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+def test_encdec_decode_consistency():
+    cfg = reduce_for_smoke(get_config("whisper-tiny"))
+    params, _ = encdec.init_params(cfg, jax.random.key(2))
+    B, S = 2, 6
+    rng = np.random.default_rng(5)
+    frames = jnp.asarray(rng.normal(size=(B, 8, cfg.d_model)), jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    enc_out = encdec.encode(params, cfg, frames)
+    ref = encdec.decode_train(params, cfg, tokens, enc_out)
+    cache, _ = encdec.init_cache(cfg, B, S, 8, dtype=jnp.float32)
+    xk, xv = encdec.prefill_cross(params, cfg, enc_out)
+    cache["xk"], cache["xv"] = xk.astype(jnp.float32), xv.astype(jnp.float32)
+    for t in range(S):
+        logits, cache = encdec.decode_step(params, cfg, tokens[:, t], cache, jnp.int32(t))
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32), np.asarray(ref[:, -1], np.float32), rtol=2e-4, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_cover_all_runnable_shapes(arch):
+    cfg = get_config(arch)
+    for sname, spec in SHAPES.items():
+        if sname == "long_500k" and not cfg.subquadratic:
+            continue
+        specs = input_specs(cfg, spec, reduced=True)
+        assert specs, (arch, sname)
+        for v in specs.values():
+            assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+def test_param_counts_match_public_sizes():
+    """Closed-form param counts land near the published model sizes."""
+    expect = {
+        "granite-8b": 8.0e9,
+        "starcoder2-15b": 15.0e9,
+        "gemma-2b": 2.5e9,
+        "qwen2.5-3b": 3.0e9,
+        "qwen2-vl-72b": 72e9,
+        "olmoe-1b-7b": 6.9e9,
+        "qwen3-moe-235b-a22b": 235e9,
+        "rwkv6-3b": 3.1e9,
+        "recurrentgemma-9b": 9.0e9,
+    }
+    for aid, want in expect.items():
+        got = get_config(aid).param_count()
+        assert 0.6 < got / want < 1.45, (aid, got, want)
+
+
+def test_decode_fori_matches_scan():
+    """The in-place (fori) decode cache variant is bit-compatible with scan."""
+    import dataclasses
+
+    cfg = reduce_for_smoke(get_config("granite-8b"))
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.key(4))
+    B, S = 2, 10
+    rng = np.random.default_rng(8)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    _, cache = model.prefill(params, {"tokens": toks}, attn_impl="dense")
+    cache = jax.tree.map(
+        lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, 4), (0, 0), (0, 0)))
+        if c.ndim == 5 else c,
+        cache,
+    )
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab, (B,)), jnp.int32)
+    l_scan, c_scan = model.decode_step(params, nxt, cache, jnp.int32(S))
+    cfg2 = dataclasses.replace(cfg, decode_loop="fori")
+    model2 = get_model(cfg2)
+    l_fori, c_fori = model2.decode_step(params, nxt, cache, jnp.int32(S))
+    np.testing.assert_allclose(
+        np.asarray(l_scan, np.float32), np.asarray(l_fori, np.float32), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(c_scan["k"], np.float32), np.asarray(c_fori["k"], np.float32), rtol=1e-6
+    )

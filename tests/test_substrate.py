@@ -1,0 +1,180 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, FT logic,
+gradient compression, end-to-end reduced training (loss must fall)."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.synthetic import TokenPipeline
+from repro.ft.elastic import plan_degraded_mesh
+from repro.ft.watchdog import StepWatchdog
+from repro.train.optimizer import adamw_init, adamw_update, clip_by_global_norm, wsd_schedule
+
+
+def test_adamw_decreases_quadratic():
+    w = {"a": jnp.array([3.0, -2.0]), "b": jnp.array([[1.5]])}
+    opt = adamw_init(w)
+    lr_fn = wsd_schedule(0.1, warmup=1, stable=1000, decay=100)
+    loss = lambda p: jnp.sum(p["a"] ** 2) + jnp.sum(p["b"] ** 2)
+    l0 = float(loss(w))
+    for _ in range(50):
+        g = jax.grad(loss)(w)
+        w, opt, m = adamw_update(g, opt, lr_fn=lr_fn, weight_decay=0.0, param_dtype=jnp.float32)
+    assert float(loss(w)) < 0.1 * l0
+    assert int(opt.step) == 50
+
+
+def test_grad_clip():
+    g = {"x": jnp.full((4,), 100.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(gn), 200.0)
+    assert np.isclose(np.linalg.norm(np.asarray(clipped["x"])), 1.0, atol=1e-5)
+
+
+def test_pipeline_deterministic_and_seekable():
+    p1 = TokenPipeline(512, 64, 8, seed=3)
+    p2 = TokenPipeline(512, 64, 8, seed=3)
+    b5a = p1.batch(5)
+    _ = p1.batch(6)
+    b5b = p2.batch(5)  # seek directly — no state
+    np.testing.assert_array_equal(np.asarray(b5a["tokens"]), np.asarray(b5b["tokens"]))
+    assert not np.array_equal(np.asarray(p1.batch(7)["tokens"]), np.asarray(b5a["tokens"]))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(
+        np.asarray(b5a["tokens"])[:, 1:], np.asarray(b5a["labels"])[:, :-1]
+    )
+
+
+def test_pipeline_host_sharding():
+    full = TokenPipeline(512, 32, 8, seed=1)
+    parts = [TokenPipeline(512, 32, 8, seed=1, host_id=h, n_hosts=4) for h in range(4)]
+    assert all(p.local_batch == 2 for p in parts)
+    # hosts draw disjoint streams (different per-host seeds)
+    a = np.asarray(parts[0].batch(0)["tokens"])
+    b = np.asarray(parts[1].batch(0)["tokens"])
+    assert not np.array_equal(a, b)
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    tree = {"w": jnp.arange(6.0).reshape(2, 3), "o": {"m": jnp.ones((4,))}}
+    for step in (10, 20, 30, 40):
+        save_checkpoint(str(tmp_path), step, tree, extras={"s": step}, keep_last=2)
+    assert latest_step(str(tmp_path)) == 40
+    # retention pruned old steps
+    kept = sorted(os.listdir(tmp_path))
+    assert len([k for k in kept if k.startswith("step_")]) == 2
+    skel = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    got, step, extras = restore_checkpoint(str(tmp_path), skel)
+    assert step == 40 and extras["s"] == 40
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    tree = {"w": jnp.ones((2,))}
+    save_checkpoint(str(tmp_path), 10, tree)
+    # fake a torn save
+    os.makedirs(tmp_path / "step_000000020")
+    assert latest_step(str(tmp_path)) == 10
+
+
+def test_elastic_plans():
+    p = plan_degraded_mesh(512, model_parallel=16, old_data_parallel=16, old_pods=2)
+    assert p.mesh_shape == (2, 16, 16) and p.grad_accum == 1
+    p = plan_degraded_mesh(256, model_parallel=16, old_data_parallel=16, old_pods=2)
+    assert p.mesh_shape == (1, 16, 16) and p.grad_accum == 2  # half the DP -> 2 micro-steps
+    p = plan_degraded_mesh(160, model_parallel=16, old_data_parallel=16, old_pods=2)
+    assert p.mesh_shape == (10, 16) and p.grad_accum >= 3
+    with pytest.raises(ValueError):
+        plan_degraded_mesh(8, model_parallel=16)
+
+
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(window=20, zmax=3.0, hard_timeout=10.0)
+    import time as _t
+
+    for _ in range(12):
+        wd.step_start()
+        _t.sleep(0.002)
+        wd.step_end()
+    wd.step_start()
+    _t.sleep(0.2)
+    assert wd.step_end() is True
+
+
+def test_compressed_allreduce_error_feedback():
+    """int8 EF all-reduce: mean error shrinks vs no-feedback quantization."""
+    import subprocess, sys, textwrap, json
+
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys, json
+        sys.path.insert(0, sys.argv[1])
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.train.grad_compression import compressed_allreduce
+
+        mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(0)
+        xs = rng.normal(size=(4, 512)).astype(np.float32)
+        want = xs.mean(0)
+
+        def body(x, r):
+            out, nr = compressed_allreduce(x[0], r[0], "pod")
+            return out[None], nr[None]
+
+        fn = jax.jit(jax.shard_map(body, mesh=mesh,
+                                   in_specs=(P("pod"), P("pod")),
+                                   out_specs=(P("pod"), P("pod"))))
+        r = jnp.zeros((4, 512))
+        errs = []
+        # repeated reduction of the same tensor: EF residual should push the
+        # *accumulated* estimate toward exactness
+        acc = np.zeros(512)
+        for it in range(8):
+            out, r = fn(jnp.asarray(xs), r)
+            acc += np.asarray(out)[0]
+            errs.append(float(np.abs(acc / (it + 1) - want).mean()))
+        print(json.dumps({"first": errs[0], "last": errs[-1],
+                          "scale": float(np.abs(want).mean())}))
+        """
+    )
+    import tempfile
+
+    with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as f:
+        f.write(script)
+        path = f.name
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, path, src], capture_output=True, text=True, timeout=300
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["first"] < 0.02 * res["scale"] * 10  # int8 quant error bounded
+    assert res["last"] < res["first"]  # error feedback improves the average
+
+
+def test_end_to_end_training_loss_falls(tmp_path):
+    """Reduced qwen2.5: 60 steps on CPU; loss falls; resume is exact."""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.launch.train import run_training
+
+    cfg = reduce_for_smoke(get_config("qwen2.5-3b"))
+    logs = []
+    _, _, losses = run_training(
+        cfg, steps=60, global_batch=4, seq_len=64, lr=2e-3, warmup=10,
+        ckpt_dir=str(tmp_path), ckpt_every=30, log_fn=logs.append,
+    )
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.2, (losses[:5], losses[-5:])
+    # resume from step 60 checkpoint and continue 5 steps
+    _, _, more = run_training(
+        cfg, steps=65, global_batch=4, seq_len=64, lr=2e-3, warmup=10,
+        ckpt_dir=str(tmp_path), ckpt_every=1000, log_fn=logs.append,
+    )
+    assert len(more) == 5
+    assert any("resumed from step 60" in l for l in logs)
