@@ -1,28 +1,120 @@
-import sys, time
+"""KDE §Perf iteration ladder — and the machine-readable BENCH_kde.json.
+
+Rungs (berkeley x0.08 by default, 5 windows):
+
+  it0  rfs search          paper-faithful canonical decomposition (NumPy)
+  it1  rfs cascade         fractional cascading (beyond-paper)
+  it2  rfs search + LS     Lixel Sharing with batched dominated moments
+  it3  rfs jax             window-batched jit'd flat engine (all W windows
+                           per flush, device-resident heatmap) — must beat
+                           the NumPy rungs and scale sublinearly in W
+       ada / sps           per-window index rebuild / no index baselines
+
+Callable as a script or via ``run_ladder()`` (benchmarks/run.py uses it to
+emit BENCH_kde.json for PR-over-PR perf tracking).
+"""
+import json
+import sys
+import time
+
 sys.path.insert(0, "src")
 import numpy as np
+
 from repro.core import TNKDE
 from repro.data.spatial import make_dataset
+
 sys.path.insert(0, ".")
 from benchmarks.common import windows
 
-print("=== KDE §Perf iteration ladder (berkeley x0.08, 5 windows) ===")
-net, ev, meta = make_dataset("berkeley", scale=0.08, seed=0)
-ts, b_t = windows(ev, 5)
-print(f"|V|={meta['V']} |E|={meta['E']} N={meta['N']}")
 
-def run(tag, b_s, **kw):
-    t0 = time.perf_counter(); m = TNKDE(net, ev, g=50.0, b_s=b_s, b_t=b_t, **kw)
-    build = time.perf_counter() - t0
-    t0 = time.perf_counter(); F = m.query(ts); q = time.perf_counter() - t0
-    print(f"{tag:42s} b_s={int(b_s):5d} build={build:6.2f}s query={q:6.2f}s atoms={m.stats.n_atoms} dom={m.stats.n_pairs_dominated} out={m.stats.n_pairs_out}")
-    return F, q
+def run_ladder(scale=0.08, n_windows=5, b_s_list=(400.0, 2000.0), out_json=None,
+               w_scaling=(1, 2, 5)):
+    print(f"=== KDE §Perf iteration ladder (berkeley x{scale}, {n_windows} windows) ===")
+    net, ev, meta = make_dataset("berkeley", scale=scale, seed=0)
+    ts, b_t = windows(ev, n_windows)
+    print(f"|V|={meta['V']} |E|={meta['E']} N={meta['N']}")
+    rungs = []
 
-for b_s in (400.0, 2000.0):
-    ref, _ = run("it0 rfs search (paper-faithful)", b_s, solution="rfs", cascade=False)
-    F, _ = run("it1 rfs cascade (beyond-paper)", b_s, solution="rfs", cascade=True)
-    assert np.allclose(F, ref, rtol=1e-9)
-    F, _ = run("it2 rfs search + LS (batched moments)", b_s, solution="rfs", cascade=False, lixel_sharing=True)
-    assert np.allclose(F, ref, rtol=1e-8), np.abs(F-ref).max()
-    run("     ada (rebuild per window)", b_s, solution="ada")
-    run("     sps (no index)", b_s, solution="sps")
+    def run(tag, b_s, ts_run=ts, warmup=False, **kw):
+        t0 = time.perf_counter()
+        m = TNKDE(net, ev, g=50.0, b_s=b_s, b_t=b_t, **kw)
+        build = time.perf_counter() - t0
+        if warmup:
+            m.query(ts_run)  # populate the persistent jit cache (build-once,
+            # query-many scenario: steady-state query cost is what matters)
+            m.stats.n_atoms = 0
+        t0 = time.perf_counter()
+        F = m.query(ts_run)
+        q = time.perf_counter() - t0
+        print(
+            f"{tag:42s} b_s={int(b_s):5d} build={build:6.2f}s query={q:6.2f}s "
+            f"atoms={m.stats.n_atoms} dom={m.stats.n_pairs_dominated} out={m.stats.n_pairs_out}"
+        )
+        rungs.append(
+            dict(
+                rung=tag.strip(), b_s=b_s, W=len(ts_run),
+                build_seconds=round(build, 4), query_seconds=round(q, 4),
+                atoms=int(m.stats.n_atoms), engine=m.engine,
+            )
+        )
+        return F, q, m
+
+    for b_s in b_s_list:
+        ref, q_np, _ = run("it0 rfs search (paper-faithful)", b_s, solution="rfs",
+                           cascade=False, engine="numpy")
+        F, _, _ = run("it1 rfs cascade (beyond-paper)", b_s, solution="rfs",
+                      cascade=True, engine="numpy")
+        assert np.allclose(F, ref, rtol=1e-9)
+        F, _, _ = run("it2 rfs search + LS (batched moments)", b_s, solution="rfs",
+                      cascade=False, lixel_sharing=True, engine="numpy")
+        assert np.allclose(F, ref, rtol=1e-8), np.abs(F - ref).max()
+        F, q_jax, mj = run("it3 rfs jax (window-batched)", b_s, solution="rfs",
+                           cascade=True, engine="jax", warmup=True)
+        assert mj.engine == "jax", "jax engine unavailable"
+        assert np.allclose(F, ref, rtol=1e-8), np.abs(F - ref).max()
+        speedup = q_np / max(q_jax, 1e-9)
+        print(f"{'':42s} jax vs numpy-search speedup at W={len(ts)}: {speedup:.2f}x")
+        rungs[-1]["speedup_vs_numpy"] = round(speedup, 3)
+        run("     ada (rebuild per window)", b_s, solution="ada")
+        run("     sps (no index)", b_s, solution="sps")
+
+    # ---- W-scaling of the window-batched engine (sublinear per-window cost)
+    b_s = b_s_list[0]
+    mj = TNKDE(net, ev, g=50.0, b_s=b_s, b_t=b_t, solution="rfs", engine="jax")
+    scaling = []
+    for W in w_scaling:
+        ts_w, _ = windows(ev, W)
+        mj.query(ts_w)  # warm the (bucket, W) jit cache
+        t0 = time.perf_counter()
+        mj.query(ts_w)
+        q = time.perf_counter() - t0
+        scaling.append(dict(W=W, query_seconds=round(q, 4),
+                            per_window=round(q / W, 4)))
+        print(f"it3 W-scaling  W={W}  query={q:6.2f}s  per-window={q / W:6.3f}s")
+    rungs.append(dict(rung="it3 w-scaling", b_s=b_s, scaling=scaling))
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(
+                dict(dataset="berkeley", scale=scale,
+                     V=meta["V"], E=meta["E"], N=meta["N"], rungs=rungs),
+                f, indent=1,
+            )
+        print(f"wrote {out_json}")
+    return rungs
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.08)
+    ap.add_argument("--windows", type=int, default=5)
+    ap.add_argument("--json", default="BENCH_kde.json")
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
+    args = ap.parse_args()
+    if args.smoke:
+        run_ladder(scale=0.02, n_windows=2, b_s_list=(400.0,), out_json=args.json,
+                   w_scaling=(1, 2))
+    else:
+        run_ladder(scale=args.scale, n_windows=args.windows, out_json=args.json)

@@ -13,6 +13,12 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter on figure fns")
     ap.add_argument("--roofline-dir", default="runs/dryrun")
+    ap.add_argument(
+        "--kde-json",
+        default="BENCH_kde.json",
+        help="machine-readable ladder output for PR-over-PR perf tracking ('' disables)",
+    )
+    ap.add_argument("--kde-scale", type=float, default=0.08)
     args = ap.parse_args(argv)
 
     from benchmarks import figures
@@ -24,6 +30,10 @@ def main(argv=None) -> None:
             continue
         print(f"# -- {fn.__name__} --", flush=True)
         fn()
+    if args.kde_json and not args.only:
+        from benchmarks.perf_kde_ladder import run_ladder
+
+        run_ladder(scale=args.kde_scale, out_json=args.kde_json)
     # roofline summary rows if a dry-run directory exists
     try:
         import glob

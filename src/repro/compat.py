@@ -1,0 +1,55 @@
+"""JAX cross-version shims.
+
+The repo targets the modern sharding surface (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``check_vma=``) but must also run on
+jax 0.4.x, where shard_map lives in ``jax.experimental.shard_map`` with the
+``check_rep=`` / ``auto=`` spelling and meshes carry no axis types. Everything
+that touches a mesh or shard_map goes through this module so version drift is
+handled in exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence
+
+import jax
+
+__all__ = ["make_mesh", "shard_map"]
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:  # make_mesh predates axis_types
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    manual_axes: Optional[Iterable[str]] = None,
+    check: bool = False,
+):
+    """Version-portable ``shard_map``.
+
+    manual_axes: axes the body handles manually (None = all mesh axes).
+    check: replication/VMA checking (off by default — the bodies here use
+    ``psum`` on hand-specified specs the checker cannot always follow).
+    """
+    if hasattr(jax, "shard_map"):  # jax >= 0.6
+        kw = {"check_vma": check}
+        if manual_axes is not None:
+            kw["axis_names"] = frozenset(manual_axes)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map  # jax 0.4.x
+
+    kw = {"check_rep": check}
+    if manual_axes is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -36,6 +36,7 @@ __all__ = [
     "build_event_moments",
     "segmented_searchsorted",
     "window_rank_ranges",
+    "window_rank_ranges_multi",
     "next_pow2",
     "N_COMBOS",
 ]
@@ -199,3 +200,29 @@ def window_rank_ranges(
     r_mid = segmented_searchsorted(ee.time, lo_abs, hi_abs, qmid, np.ones(n, bool))
     r_hi = segmented_searchsorted(ee.time, lo_abs, hi_abs, qhi, np.ones(n, bool))
     return (r_lo - lo_abs, r_mid - lo_abs, r_hi - lo_abs)
+
+
+def window_rank_ranges_multi(
+    ee: EdgeEvents, edges: np.ndarray, ts: np.ndarray, b_t: float
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """``window_rank_ranges`` batched over W window centers in one sweep.
+
+    edges: [n], ts: [W] → each of (lo, mid, hi) is [W, n]. One vectorized
+    searchsorted pass over all W·n (edge, window) pairs instead of a Python
+    loop over windows — the multiple-temporal-KDE shape of §8.2.
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    ts = np.asarray(ts, dtype=np.float64)
+    n, W = len(edges), len(ts)
+    lo_abs = np.tile(ee.ptr[edges], W)
+    hi_abs = np.tile(ee.ptr[edges + 1], W)
+    t_rep = np.repeat(ts, n)
+    r_lo = segmented_searchsorted(ee.time, lo_abs, hi_abs, t_rep - b_t, np.zeros(W * n, bool))
+    r_mid = segmented_searchsorted(ee.time, lo_abs, hi_abs, t_rep, np.ones(W * n, bool))
+    r_hi = segmented_searchsorted(ee.time, lo_abs, hi_abs, t_rep + b_t, np.ones(W * n, bool))
+    shape = (W, n)
+    return (
+        (r_lo - lo_abs).reshape(shape),
+        (r_mid - lo_abs).reshape(shape),
+        (r_hi - lo_abs).reshape(shape),
+    )

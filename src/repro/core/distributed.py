@@ -10,9 +10,14 @@ Distribution scheme (DESIGN.md §3):
     work (descending first-fit) — the KDE analogue of straggler mitigation:
     no device owns all the heavy edges.
   * query atoms are routed to the shard that owns their edge, padded to the
-    per-shard max, and evaluated with the jit'd flat engine
-    (``jax_engine.eval_atoms_flat``); per-device partial heatmaps are
-    ``psum``-reduced over the data axes.
+    per-shard max, and evaluated with the *same* jit'd window-batched flat
+    engine the single-host path uses (``jax_engine.eval_atoms_flat``): one
+    shard_map call answers every (window, half) at once, and the per-device
+    partial [L, W] heatmaps are ``psum``-reduced over the data axes.
+
+Atoms come from ``TNKDE.edge_geometries()`` — the identical planning loop the
+host query runs — so the sharded and single-host paths share both the
+decomposition logic and the engine; only atom routing and the psum differ.
 
 ``DistributedTNKDE`` is mesh-agnostic: tests run it on 8 host devices;
 launch/dryrun.py lowers the same program for the production 16x16 and
@@ -22,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import numpy as np
 
@@ -30,10 +35,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from .aggregation import N_COMBOS
-from .jax_engine import FlatAtoms, FlatForest, eval_atoms_flat
-from .plan import AtomSet
-from .rfs import RangeForest
+from .jax_engine import FlatAtoms, FlatForest, WindowBatch, eval_atoms_flat
+from .plan import AtomSet, build_atoms
+from .rfs import RangeForest, make_window_batch
 
 __all__ = ["ShardedForest", "DistributedTNKDE", "assign_edges", "build_sharded", "pack_atoms"]
 
@@ -46,8 +53,10 @@ class ShardedForest:
     cum_flat: np.ndarray  # [S, Tmax, 4, K]
     edge_base: np.ndarray  # [S, E]  (rebased; 0 for edges not in shard)
     n_pad: np.ndarray  # [S, E]   (0 for edges not in shard)
+    n_lev: np.ndarray  # [S, E]
     time_flat: np.ndarray  # [S, Nmax] (+inf pad)
     time_ptr: np.ndarray  # [S, E+1]
+    bridge: np.ndarray  # [S, Tmax] i32 (zeros when the forest has no bridges)
     shard_of_edge: np.ndarray  # [E]
     max_levels: int
     search_steps: int
@@ -88,8 +97,13 @@ def build_sharded(rf: RangeForest, n_shards: int) -> ShardedForest:
     cum = np.zeros((n_shards, tmax, N_COMBOS, K), np.float32)
     base = np.zeros((n_shards, E), np.int64)
     npad = np.zeros((n_shards, E), np.int64)
+    nlev = np.zeros((n_shards, E), np.int64)
     times = np.full((n_shards, nmax), np.inf, np.float64)
     tptr = np.zeros((n_shards, E + 1), np.int64)
+    # the sharded engine runs cascade=False (f32-friendly canonical
+    # decomposition), so ship a 1-slot dummy bridge instead of replicating a
+    # Tmax-sized dead table to every device
+    bridge = np.zeros((n_shards, 1), np.int32)
     t_off = np.zeros(n_shards, np.int64)
     n_off = np.zeros(n_shards, np.int64)
     for e in range(E):
@@ -101,6 +115,7 @@ def build_sharded(rf: RangeForest, n_shards: int) -> ShardedForest:
             cum[s, t_off[s] : t_off[s] + blk] = rf.cum_flat[src : src + blk]
             base[s, e] = t_off[s]
             npad[s, e] = rf.n_pad[e]
+            nlev[s, e] = rf.n_levels[e]
             t_off[s] += blk
         c = int(counts[e])
         lo = int(rf.ee.ptr[e])
@@ -115,8 +130,10 @@ def build_sharded(rf: RangeForest, n_shards: int) -> ShardedForest:
         cum_flat=cum,
         edge_base=base,
         n_pad=npad,
+        n_lev=nlev,
         time_flat=times,
         time_ptr=tptr,
+        bridge=bridge,
         shard_of_edge=shard_of,
         max_levels=rf.max_levels,
         search_steps=steps,
@@ -124,10 +141,11 @@ def build_sharded(rf: RangeForest, n_shards: int) -> ShardedForest:
     )
 
 
-def pack_atoms(
-    sf: ShardedForest, atoms: AtomSet, combo: np.ndarray, q_full: np.ndarray
-) -> FlatAtoms:
-    """Route atoms to their edge's shard; pad each shard to the global max."""
+def pack_atoms(sf: ShardedForest, atoms: AtomSet) -> FlatAtoms:
+    """Route atoms to their edge's shard; pad each shard to the global max.
+
+    Window-independent — one packing serves every query window.
+    """
     S = sf.n_shards
     shard = sf.shard_of_edge[atoms.edge]
     order = np.argsort(shard, kind="stable")
@@ -146,8 +164,8 @@ def pack_atoms(
     return FlatAtoms(
         lixel=packed(atoms.lixel),
         edge=packed(atoms.edge),
-        combo=packed(combo.astype(np.int32)),
-        q_vec=packed(q_full.astype(np.float32), 0.0),
+        side_feat=packed(atoms.side_feat.astype(np.int32)),
+        qs=packed(atoms.qs.astype(np.float32), 0.0),
         pos_hi=packed(atoms.pos_hi.astype(np.float32), np.float32(-np.inf)),
         pos_lo1=packed(atoms.pos_lo1.astype(np.float32), np.float32(np.inf)),
         lo1_right=packed(atoms.lo1_right, False),
@@ -171,33 +189,10 @@ class DistributedTNKDE:
         self._fn = None
 
     def _collect_atoms(self) -> AtomSet:
-        """Run the host planner for every query edge (window-independent)."""
-        from .plan import build_atoms, build_edge_geometry
-        from .shortest_path import bounded_dijkstra
-
+        """Window-independent atoms from the *shared* host planner loop."""
         t = self.tnkde
-        net, lix, ee, ctx = t.net, t.lix, t.ee, t.ctx
-        radius = ctx.b_s + float(net.edge_len.max()) + 1.0
-        parts = []
-        E = net.n_edges
-        for blk_lo in range(0, E, t.edge_block):
-            blk = np.arange(blk_lo, min(blk_lo + t.edge_block, E))
-            verts = np.unique(np.concatenate([net.edge_src[blk], net.edge_dst[blk]]))
-            rows = bounded_dijkstra(net, verts, radius, adj=t._adj)
-            vmap_ = {int(v): i for i, v in enumerate(verts)}
-            for a in blk:
-                geom = build_edge_geometry(
-                    net,
-                    lix,
-                    ee,
-                    int(a),
-                    ctx.b_s,
-                    np.stack([rows[vmap_[int(net.edge_src[a])]], rows[vmap_[int(net.edge_dst[a])]]]),
-                )
-                atoms = build_atoms(geom, ctx)
-                if atoms.m:
-                    parts.append(atoms)
-        return AtomSet.concat(parts)
+        parts = [build_atoms(geom, t.ctx) for geom in t.edge_geometries()]
+        return AtomSet.concat([p for p in parts if p.m])
 
     def _shard_fn(self):
         if self._fn is not None:
@@ -207,59 +202,54 @@ class DistributedTNKDE:
         L = self.tnkde.n_lixels
         max_levels, search_steps = self.sf.max_levels, self.sf.search_steps
 
-        def shard_body(forest, fa, tw):
+        def shard_body(forest, fa, wb):
             forest = jax.tree.map(lambda x: x[0], forest)
             fa_local = jax.tree.map(lambda x: x[0], fa)
-            t_lo, t_hi, lo_right = tw
             vals = eval_atoms_flat(
                 forest,
                 fa_local,
-                t_lo,
-                t_hi,
-                lo_right,
+                wb,
                 max_levels=max_levels,
                 search_steps=search_steps,
-            )
-            f = jnp.zeros((L,), vals.dtype).at[fa_local.lixel].add(vals)
+                cascade=False,  # canonical decomposition: f32-friendly
+            )  # [Wh, M_local]
+            W = vals.shape[0] // 2
+            per_win = vals.reshape(W, 2, -1).sum(axis=1)  # fold window halves
+            f = jnp.zeros((L, W), vals.dtype).at[fa_local.lixel].add(per_win.T)
             return jax.lax.psum(f, axes)
 
-        dummy_forest = FlatForest(
-            pos_flat=None, cum_flat=None, edge_base=None, n_pad=None, time_flat=None, time_ptr=None
-        )
         in_specs = (
-            FlatForest(*(spec,) * 6),
-            FlatAtoms(*(spec,) * 9),
-            (P(), P(), P()),
+            FlatForest(*(spec,) * len(FlatForest._fields)),
+            FlatAtoms(*(spec,) * len(FlatAtoms._fields)),
+            WindowBatch(*(P(),) * len(WindowBatch._fields)),
         )
         self._fn = jax.jit(
-            jax.shard_map(shard_body, mesh=self.mesh, in_specs=in_specs, out_specs=P())
+            shard_map(shard_body, mesh=self.mesh, in_specs=in_specs, out_specs=P())
         )
         return self._fn
 
     def query(self, ts: Sequence[float]) -> np.ndarray:
-        """[W, L] heatmaps, evaluated across the mesh."""
+        """[W, L] heatmaps, evaluated across the mesh in one collective call."""
         t = self.tnkde
-        ctx = t.ctx
-        atoms = self.atoms
         fn = self._shard_fn()
         forest = FlatForest(
             pos_flat=jnp.asarray(self.sf.pos_flat),
             cum_flat=jnp.asarray(self.sf.cum_flat),
             edge_base=jnp.asarray(self.sf.edge_base),
             n_pad=jnp.asarray(self.sf.n_pad),
+            n_lev=jnp.asarray(self.sf.n_lev),
             time_flat=jnp.asarray(self.sf.time_flat.astype(np.float32)),
             time_ptr=jnp.asarray(self.sf.time_ptr),
+            bridge=jnp.asarray(self.sf.bridge),
         )
-        out = np.zeros((len(ts), t.n_lixels))
-        for w_i, tq in enumerate(ts):
-            qt = (ctx.qt_left(tq), ctx.qt_right(tq))
-            bounds = ((tq - ctx.b_t, tq, False), (tq, tq + ctx.b_t, True))
-            for w in (0, 1):
-                q_full = (atoms.qs[:, :, None] * qt[w][None, :]).reshape(atoms.m, -1)
-                combo = atoms.side_feat.astype(np.int64) * 2 + w
-                fa = pack_atoms(self.sf, atoms, combo, q_full)
-                fa = jax.tree.map(jnp.asarray, fa)
-                t_lo, t_hi, lo_r = bounds[w]
-                f = fn(forest, fa, (jnp.float32(t_lo), jnp.float32(t_hi), jnp.asarray(lo_r)))
-                out[w_i] += np.asarray(f, np.float64)
-        return out
+        fa = jax.tree.map(jnp.asarray, pack_atoms(self.sf, self.atoms))
+        t_lo, t_hi, lo_right, half, qt = make_window_batch(t.ctx, ts)
+        wb = WindowBatch(
+            t_lo=jnp.asarray(t_lo.astype(np.float32)),
+            t_hi=jnp.asarray(t_hi.astype(np.float32)),
+            lo_right=jnp.asarray(lo_right),
+            half=jnp.asarray(half),
+            qt=jnp.asarray(qt.astype(np.float32)),
+        )
+        f = fn(forest, fa, wb)
+        return np.asarray(f, np.float64).T

@@ -1,11 +1,36 @@
-"""JAX port of the RFS query engine (flat-table, ragged-atom form).
+"""JAX port of the RFS query engine (flat-table, ragged-atom, window-batched).
 
-Same algorithm as rfs.RangeForest._decompose_search, expressed as pure
-jax.numpy on the flat tables so it can run under jit / shard_map on
-TPU meshes. Scalar gathers only — memory stays O(M) regardless of table
-size (the Pallas ``tree_query`` kernel is the size-classed VMEM-resident
-accelerator for the same math; this engine is the general fallback and the
-distribution vehicle).
+Same algorithm as rfs.RangeForest, expressed as pure jax.numpy on the flat
+tables so it can run under jit / shard_map on TPU meshes. Scalar gathers only
+— memory stays O(W·M) regardless of table size (the Pallas ``tree_query``
+kernel is the size-classed VMEM-resident accelerator for the same math; this
+engine is the general fallback and the distribution vehicle).
+
+Window batching (the paper's multiple temporal KDE scenario, §8.2): one call
+answers all W query windows. Each window center t contributes two *half
+windows* ([t-b_t, t) and [t, t+b_t], the "doubled aggregations" of §3.3), so
+the batch axis below has Wh = 2·W entries. Everything that does not depend on
+the window — the atom's three position bounds, its spatial coefficient vector
+q_s, its edge block — is stored once per atom; only the time-rank interval
+and the temporal coefficient vector q_t vary along the Wh axis.
+
+Two engines, selected with the static ``cascade`` flag:
+
+  * ``cascade=False`` — canonical bucket decomposition with a per-bucket
+    binary search (the paper-faithful O(log²) path, identical to
+    rfs._decompose_search). All Wh windows share one jit'd level loop; the
+    time-rank searches run per EDGE, not per atom.
+  * ``cascade=True``  — prefix-path walks over the fractional-cascading
+    bridges (DESIGN.md §4): every half-window aggregate is a difference of
+    two *prefix* aggregates G(k) = Σ over ranks [0, k), and the three rank
+    boundaries of a window center (lo, mid, hi — mid shared by both halves)
+    each walk one root-to-leaf path emitting the fully-covered left
+    children. The position binary searches run **once per atom** in the
+    root bucket, window-independent, and collapse to two ranks there (the
+    bridge maps are monotone, so the max of the two lower bounds commutes
+    with cascading) — this is the hoist that makes window batching
+    sublinear in W: each boundary pays only two O(1) bridge gathers and one
+    paired prefix-moment gather per level.
 """
 from __future__ import annotations
 
@@ -15,7 +40,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["FlatForest", "FlatAtoms", "eval_atoms_flat"]
+__all__ = ["FlatForest", "FlatAtoms", "WindowBatch", "eval_atoms_flat"]
 
 
 class FlatForest(NamedTuple):
@@ -25,17 +50,19 @@ class FlatForest(NamedTuple):
     cum_flat: jnp.ndarray  # [T, 4, K] inclusive per-bucket prefix moments
     edge_base: jnp.ndarray  # [E] flat offset of each edge's block
     n_pad: jnp.ndarray  # [E] padded event count (power of two; 0 = no events)
+    n_lev: jnp.ndarray  # [E] level count (log2(n_pad) + 1; 0 = no events)
     time_flat: jnp.ndarray  # [N] per-edge time-sorted event times
     time_ptr: jnp.ndarray  # [E+1] event offsets
+    bridge: jnp.ndarray  # [T] i32 left-child counts (zeros if not built)
 
 
 class FlatAtoms(NamedTuple):
-    """Flattened window-resolved atoms (see plan.AtomSet)."""
+    """Flattened window-INDEPENDENT atoms (see plan.AtomSet)."""
 
     lixel: jnp.ndarray  # [M] output index
     edge: jnp.ndarray  # [M]
-    combo: jnp.ndarray  # [M] int32 in [0, 4): (side_feat, window half)
-    q_vec: jnp.ndarray  # [M, K]
+    side_feat: jnp.ndarray  # [M] i32 in {0, 1}: event features ψ_c / ψ_d
+    qs: jnp.ndarray  # [M, k_s] spatial coefficient vector
     pos_hi: jnp.ndarray  # [M]
     pos_lo1: jnp.ndarray  # [M]
     lo1_right: jnp.ndarray  # [M] bool
@@ -43,7 +70,20 @@ class FlatAtoms(NamedTuple):
     valid: jnp.ndarray  # [M] bool (padding mask)
 
 
+class WindowBatch(NamedTuple):
+    """Per-half-window query tables: Wh = 2 · n_window_centers entries."""
+
+    t_lo: jnp.ndarray  # [Wh] window-half lower time bound
+    t_hi: jnp.ndarray  # [Wh] upper bound (always inclusive)
+    lo_right: jnp.ndarray  # [Wh] bool: lower bound exclusive? (right halves)
+    half: jnp.ndarray  # [Wh] i32 temporal orientation (0 = left, 1 = right)
+    qt: jnp.ndarray  # [Wh, k_t] temporal coefficient vector
+
+
 def _seg_search(vals, seg_lo, seg_hi, q, right, steps: int):
+    """Branch-free binary search of q within vals[seg_lo:seg_hi], batched
+    over arbitrary leading dims (all args broadcast to a common shape)."""
+
     def body(_, lh):
         lo, hi = lh
         mid = (lo + hi) >> 1
@@ -55,70 +95,245 @@ def _seg_search(vals, seg_lo, seg_hi, q, right, steps: int):
     return lo
 
 
-@functools.partial(jax.jit, static_argnames=("max_levels", "search_steps"))
-def eval_atoms_flat(
-    forest: FlatForest,
-    atoms: FlatAtoms,
-    t_lo: jnp.ndarray,  # scalar window lower bound (time)
-    t_hi: jnp.ndarray,  # scalar upper bound
-    lo_right: jnp.ndarray,  # scalar bool: lower bound exclusive?
-    *,
-    max_levels: int,
-    search_steps: int,
-) -> jnp.ndarray:
-    """Per-atom aggregated Q·A over (time window × position interval): [M]."""
-    M = atoms.lixel.shape[0]
+def _rank_intervals(forest: FlatForest, atoms: FlatAtoms, wb: WindowBatch, steps: int):
+    """Per (half-window, atom) local time-rank interval [r_lo, r_hi): [Wh, M].
+
+    The searches run once per (half-window, EDGE) — atoms on the same event
+    edge share their rank interval, so the per-atom step is a cheap gather.
+    """
+    Wh = wb.t_lo.shape[0]
+    E = forest.time_ptr.shape[0] - 1
+    s_lo = jnp.broadcast_to(forest.time_ptr[:-1][None, :], (Wh, E)).astype(jnp.int32)
+    s_hi = jnp.broadcast_to(forest.time_ptr[1:][None, :], (Wh, E)).astype(jnp.int32)
+    q_lo = jnp.broadcast_to(wb.t_lo[:, None], (Wh, E))
+    q_hi = jnp.broadcast_to(wb.t_hi[:, None], (Wh, E))
+    lo_r = jnp.broadcast_to(wb.lo_right[:, None], (Wh, E))
+    r_lo = _seg_search(forest.time_flat, s_lo, s_hi, q_lo, lo_r, steps) - s_lo
+    r_hi = _seg_search(forest.time_flat, s_lo, s_hi, q_hi, jnp.ones((Wh, E), bool), steps) - s_lo
     eid = atoms.edge
-    base = forest.edge_base[eid]
-    npad = forest.n_pad[eid]
-    # time-rank range within each atom's edge
-    s_lo = forest.time_ptr[eid]
-    s_hi = forest.time_ptr[eid + 1]
-    r_lo = (
-        _seg_search(
-            forest.time_flat, s_lo, s_hi, jnp.full((M,), t_lo), jnp.full((M,), lo_right), search_steps
-        )
-        - s_lo
-    )
-    r_hi = (
-        _seg_search(
-            forest.time_flat, s_lo, s_hi, jnp.full((M,), t_hi), jnp.ones((M,), bool), search_steps
-        )
-        - s_lo
-    )
+    return r_lo[:, eid].astype(jnp.int32), r_hi[:, eid].astype(jnp.int32)
+
+
+def _pref_diff(table, combo, seg_lo, i_lo, i_hi, on):
+    """Masked per-bucket moment difference prefix(i_hi) - prefix(i_lo): [..., C].
+
+    table: [T, n_combo, C]; seg_lo/i_lo/i_hi/on broadcast to a common shape;
+    combo broadcasts into the gather. Emits moment VECTORS — engines
+    accumulate these across levels and contract with the factored query
+    (q_s ⊗ q_t) exactly once at the end, so the level loop stays pure
+    gathers and adds.
+    """
+    i_hi = jnp.maximum(i_hi, i_lo)
+
+    def pref(i):
+        v = table[jnp.maximum(i - 1, 0), combo]  # [..., C]
+        return jnp.where((i > seg_lo)[..., None], v, 0.0)
+
+    return jnp.where(on[..., None], pref(i_hi) - pref(i_lo), 0.0)
+
+
+def _contract(mom, atoms, wb, qt=None):
+    """Factored query contraction: Σ_st mom[..., s, t] q_s[m, s] q_t[w, t]."""
+    k_s = atoms.qs.shape[1]
+    k_t = wb.qt.shape[1]
+    qt = wb.qt if qt is None else qt
+    m4 = mom.reshape(mom.shape[:-1] + (k_s, k_t))
+    return jnp.einsum("wmst,ms,wt->wm", m4, atoms.qs, qt)
+
+
+def _mom0(forest, atoms, wb):
+    # derive the accumulator init from (possibly shard_map-varying) inputs so
+    # the fori_loop carry has consistent varying-manual-axes under shard_map
+    K = forest.cum_flat.shape[-1]
+    z = (atoms.qs[None, :, :1] * wb.qt[:, None, :1] * 0.0).astype(forest.cum_flat.dtype)
+    return z * jnp.zeros((1, 1, K), forest.cum_flat.dtype)
+
+
+# --------------------------------------------------------------------- search
+def _engine_search(forest, atoms, wb, combo, r_lo, r_hi, *, max_levels, search_steps):
+    """Canonical ≤2-buckets-per-level decomposition, binary search per bucket."""
+    Wh, M = r_lo.shape
+    eid = atoms.edge
+    base = jnp.broadcast_to(forest.edge_base[eid].astype(jnp.int32), (Wh, M))
+    npad = jnp.broadcast_to(forest.n_pad[eid].astype(jnp.int32), (Wh, M))
+    ph = jnp.broadcast_to(atoms.pos_hi, (Wh, M))
+    pl1 = jnp.broadcast_to(atoms.pos_lo1, (Wh, M))
+    l1r = jnp.broadcast_to(atoms.lo1_right, (Wh, M))
+    pl2 = jnp.broadcast_to(atoms.pos_lo2, (Wh, M))
+    ones = jnp.ones((Wh, M), bool)
 
     def level_body(lev, state):
-        l, r, acc = state
+        l, r, mom = state
+        lev = lev.astype(jnp.int32)
 
-        def bucket_val(b, on):
+        def bucket_mom(b, on):
             seg_lo = base + lev * npad + (b << lev)
             seg_hi = seg_lo + (1 << lev)
-            i_hi = _seg_search(forest.pos_flat, seg_lo, seg_hi, atoms.pos_hi, jnp.ones((M,), bool), search_steps)
-            i_l1 = _seg_search(forest.pos_flat, seg_lo, seg_hi, atoms.pos_lo1, atoms.lo1_right, search_steps)
-            i_l2 = _seg_search(forest.pos_flat, seg_lo, seg_hi, atoms.pos_lo2, jnp.zeros((M,), bool), search_steps)
-            i_lo = jnp.maximum(i_l1, i_l2)
-            i_hi = jnp.maximum(i_hi, i_lo)
-
-            def pref(i):
-                v = forest.cum_flat[jnp.maximum(i - 1, 0), atoms.combo]
-                return jnp.where((i > seg_lo)[:, None], v, 0.0)
-
-            mom = pref(i_hi) - pref(i_lo)
-            return jnp.where(on, jnp.sum(atoms.q_vec * mom, axis=1), 0.0)
+            i_hi = _seg_search(forest.pos_flat, seg_lo, seg_hi, ph, ones, search_steps)
+            i_l1 = _seg_search(forest.pos_flat, seg_lo, seg_hi, pl1, l1r, search_steps)
+            i_l2 = _seg_search(forest.pos_flat, seg_lo, seg_hi, pl2, ~ones, search_steps)
+            return _pref_diff(
+                forest.cum_flat, combo, seg_lo, jnp.maximum(i_l1, i_l2), i_hi, on
+            )
 
         active = l < r
         emit_l = active & ((l & 1) == 1)
-        acc = acc + bucket_val(l, emit_l)
+        mom = mom + bucket_mom(l, emit_l)
         l = jnp.where(emit_l, l + 1, l)
         emit_r = (l < r) & ((r & 1) == 1)
-        acc = acc + bucket_val(r - 1, emit_r)
+        mom = mom + bucket_mom(r - 1, emit_r)
         r = jnp.where(emit_r, r - 1, r)
-        return l >> 1, r >> 1, acc
+        return l >> 1, r >> 1, mom
 
-    l0 = r_lo.astype(jnp.int32)
-    r0 = r_hi.astype(jnp.int32)
-    # derive the accumulator init from a (possibly shard_map-varying) input so
-    # the fori_loop carry has consistent varying-manual-axes under shard_map
-    acc0 = (atoms.q_vec[:, 0] * 0.0).astype(forest.cum_flat.dtype)
-    _, _, acc = jax.lax.fori_loop(0, max_levels, level_body, (l0, r0, acc0))
-    return jnp.where(atoms.valid, acc, 0.0)
+    _, _, mom = jax.lax.fori_loop(
+        0, max_levels, level_body,
+        (r_lo.astype(jnp.int32), r_hi.astype(jnp.int32), _mom0(forest, atoms, wb)),
+    )
+    return _contract(mom, atoms, wb)
+
+
+# -------------------------------------------------------------------- cascade
+def _engine_cascade(forest, atoms, wb, *, max_levels, search_steps):
+    """Prefix-path walks over the cascade bridges, one per window BOUNDARY.
+
+    Requires the (left, right)-paired ``make_window_batch`` layout: window
+    center w owns rows 2w/2w+1 and contributes three rank boundaries
+    (lo, mid, hi) — the mid boundary is shared by both halves, so W centers
+    walk 3W paths instead of 4W. Each half-window aggregate is a prefix
+    difference: left = G(mid) - G(lo), right = G(hi) - G(mid).
+
+    Hoists (DESIGN.md §4):
+      * the position bounds are binary-searched once per atom in the ROOT
+        bucket — window independent. The two lower bounds collapse into one
+        rank there (bridge maps are monotone, so max commutes with
+        cascading), leaving TWO ranks to carry down each path.
+      * each walk step pays 2 bridge gathers + ONE paired prefix-moment
+        gather (`cum` viewed as [T, side, 2K] serves both window halves of
+        the boundary at once).
+    G(k) emits the fully-covered left children along the path of rank k
+    (plus the root when k == npad, hoisted before the loop; plus the leaf
+    itself when the path bottoms out on an odd rank). Shared path prefixes
+    of adjacent boundaries cancel exactly in floating point.
+    """
+    Wh = wb.t_lo.shape[0]
+    W = Wh // 2
+    M = atoms.edge.shape[0]
+    E = forest.time_ptr.shape[0] - 1
+    K = forest.cum_flat.shape[-1]
+    eid = atoms.edge
+    base = forest.edge_base[eid].astype(jnp.int32)  # [M]
+    npad = forest.n_pad[eid].astype(jnp.int32)
+    nlev = forest.n_lev[eid].astype(jnp.int32)
+    top = jnp.maximum(nlev - 1, 0)
+
+    # ---- per-(boundary, window, EDGE) time-rank search, gathered per atom --
+    t_b = jnp.stack([wb.t_lo[0::2], wb.t_hi[0::2], wb.t_hi[1::2]])  # [3, W]
+    right_b = jnp.stack(
+        [jnp.zeros((W,), bool), jnp.ones((W,), bool), jnp.ones((W,), bool)]
+    )
+    s_lo = jnp.broadcast_to(forest.time_ptr[:-1][None, None, :], (3, W, E)).astype(jnp.int32)
+    s_hi = jnp.broadcast_to(forest.time_ptr[1:][None, None, :], (3, W, E)).astype(jnp.int32)
+    r_b = (
+        _seg_search(
+            forest.time_flat, s_lo, s_hi,
+            jnp.broadcast_to(t_b[..., None], (3, W, E)),
+            jnp.broadcast_to(right_b[..., None], (3, W, E)), search_steps,
+        )
+        - s_lo
+    )
+    k = r_b[:, :, eid].astype(jnp.int32)  # [3, W, M]
+
+    # ---- hoisted, window-independent: root-bucket position searches --------
+    root_lo = base + top * npad
+    ones = jnp.ones((M,), bool)
+    j_hi = _seg_search(forest.pos_flat, root_lo, root_lo + npad, atoms.pos_hi, ones, search_steps)
+    j_l1 = _seg_search(forest.pos_flat, root_lo, root_lo + npad, atoms.pos_lo1, atoms.lo1_right, search_steps)
+    j_l2 = _seg_search(forest.pos_flat, root_lo, root_lo + npad, atoms.pos_lo2, ~ones, search_steps)
+    root_loc = (
+        jnp.stack([j_hi, jnp.maximum(j_l1, j_l2)]) - root_lo[None, :]
+    ).astype(jnp.int32)  # [2, M] (hi, lo) local ranks
+
+    # paired-combo view: row [i, side] = [K left-half | K right-half] moments
+    cum2 = forest.cum_flat.reshape(-1, 2, 2 * K)
+    side = atoms.side_feat.astype(jnp.int32)[None, None]  # [1, 1, M]
+    npb = npad[None, None]
+    bsb = base[None, None]
+    # root fully covered (k == npad): emit it with the hoisted root ranks
+    full0 = (npb > 0) & (k == npb)
+    s_root = root_lo[None, None]
+    mom = _pref_diff(
+        cum2, side, s_root,
+        s_root + root_loc[1][None, None], s_root + root_loc[0][None, None], full0,
+    )  # [3, W, M, 2K]
+    zero = jnp.zeros((3, W, M), jnp.int32)
+    state = (
+        top[None, None] + zero,  # lev
+        zero,  # node (bucket id at lev)
+        root_loc[:, None, None, :] + zero[None],  # [2, 3, W, M] local ranks
+        (npb > 0) & (k > 0) & ~full0,  # active
+        mom,
+    )
+
+    def step(_, state):
+        lev, node, loc, active, mom = state
+        a0 = node << lev
+        active = active & (k > a0)  # boundary landed on a node edge: done
+        half = (jnp.int32(1) << lev) >> 1
+        go_right = active & (lev > 0) & (k >= a0 + half)
+        nf = bsb + lev * npb + a0  # parent bucket flat offset
+
+        def to_left(i):
+            return jnp.where(i > 0, forest.bridge[nf + jnp.maximum(i - 1, 0)], 0)
+
+        bl = jnp.stack([to_left(loc[0]), to_left(loc[1])])
+        # one emission per step: the fully-covered LEFT child when stepping
+        # right, or the leaf itself when the path bottoms out on an odd rank
+        emit_leaf = active & (lev == 0)  # invariant: a0 < k <= a0+1 here
+        on = go_right | emit_leaf
+        s_emit = jnp.where(emit_leaf, nf, nf - npb)  # left child starts at a0
+        hi_loc = jnp.where(emit_leaf, loc[0], bl[0])
+        lo_loc = jnp.where(emit_leaf, loc[1], bl[1])
+        mom = mom + _pref_diff(cum2, side, s_emit, s_emit + lo_loc, s_emit + hi_loc, on)
+        desc = active & (lev > 0)
+        loc = jnp.where(desc[None], jnp.where(go_right[None], loc - bl, bl), loc)
+        node = jnp.where(desc, (node << 1) + go_right.astype(jnp.int32), node)
+        lev = jnp.where(desc, lev - 1, lev)
+        active = active & ~emit_leaf
+        return lev, node, loc, active, mom
+
+    *_, mom = jax.lax.fori_loop(0, max_levels, step, state)
+    # halves: left = G(mid) - G(lo) on the left-K block; right = G(hi) - G(mid)
+    val_l = _contract((mom[1] - mom[0])[..., :K], atoms, wb, wb.qt[0::2])
+    val_r = _contract((mom[2] - mom[1])[..., K:], atoms, wb, wb.qt[1::2])
+    return jnp.stack([val_l, val_r], axis=1).reshape(Wh, M)
+
+
+@functools.partial(jax.jit, static_argnames=("max_levels", "search_steps", "cascade"))
+def eval_atoms_flat(
+    forest: FlatForest,
+    atoms: FlatAtoms,
+    wb: WindowBatch,
+    *,
+    max_levels: int,
+    search_steps: int,
+    cascade: bool = False,
+) -> jnp.ndarray:
+    """Per-atom aggregated Q·A for every half-window: [Wh, M].
+
+    Callers reduce the Wh axis (sum the two halves of each window center) and
+    scatter the M axis onto lixels. ``cascade=True`` additionally requires
+    the (left, right)-paired row layout produced by ``make_window_batch``
+    (rows 2w / 2w+1 are the two halves of center w).
+    """
+    if cascade:
+        acc = _engine_cascade(
+            forest, atoms, wb, max_levels=max_levels, search_steps=search_steps
+        )
+    else:
+        combo = atoms.side_feat.astype(jnp.int32)[None, :] * 2 + wb.half[:, None]
+        r_lo, r_hi = _rank_intervals(forest, atoms, wb, search_steps)
+        acc = _engine_search(
+            forest, atoms, wb, combo, r_lo, r_hi,
+            max_levels=max_levels, search_steps=search_steps,
+        )
+    return jnp.where(atoms.valid[None, :], acc, 0.0)

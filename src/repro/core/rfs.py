@@ -42,12 +42,13 @@ from .aggregation import (
     segmented_cumsum,
     segmented_searchsorted,
     window_rank_ranges,
+    window_rank_ranges_multi,
 )
 from .events import EdgeEvents
 from .network import RoadNetwork
 from .plan import AtomSet
 
-__all__ = ["RangeForest"]
+__all__ = ["RangeForest", "FlatForestEngine", "make_window_batch"]
 
 
 class RangeForest:
@@ -122,37 +123,49 @@ class RangeForest:
                     self.bridge[sl : sl + npad] = blc.astype(np.int32)
 
     # ------------------------------------------------------------------ LS
-    def window_edge_totals(self, edges: np.ndarray, t: float) -> np.ndarray:
-        """Whole-edge aggregates over the split window: [n, 2(left/right), 4, K].
+    def window_edge_totals_multi(self, edges: np.ndarray, ts: np.ndarray) -> np.ndarray:
+        """Whole-edge aggregates over W split windows: [W, n, 2(l/r), 4, K].
 
-        O(1) per edge — the root-node shortcut Lixel Sharing relies on (§6).
+        O(1) per (edge, window) — the root-node shortcut Lixel Sharing relies
+        on (§6), swept over all windows in one vectorized pass.
         """
         edges = np.asarray(edges, dtype=np.int64)
-        lo, mid, hi = window_rank_ranges(self.ee, edges, t, self.ctx.b_t)
-        base = self._ptr[edges]
+        lo, mid, hi = window_rank_ranges_multi(self.ee, edges, ts, self.ctx.b_t)
+        base = self._ptr[edges][None, :]
 
         def prefix(c):
             # time_cum is a *global* inclusive cumsum; differences of two
             # prefixes within one edge cancel everything before the edge.
             idx = base + c - 1
             val = self.time_cum[np.maximum(idx, 0)]
-            return np.where((idx >= 0)[:, None, None], val, 0.0)
+            return np.where((idx >= 0)[..., None, None], val, 0.0)
 
         p_lo, p_mid, p_hi = prefix(lo), prefix(mid), prefix(hi)
-        return np.stack([p_mid - p_lo, p_hi - p_mid], axis=1)
+        return np.stack([p_mid - p_lo, p_hi - p_mid], axis=2)
+
+    def window_edge_totals(self, edges: np.ndarray, t: float) -> np.ndarray:
+        """Single-window form of :meth:`window_edge_totals_multi`: [n, 2, 4, K]."""
+        return self.window_edge_totals_multi(edges, np.array([float(t)]))[0]
+
+    def dominated_moments_multi(self, edges: np.ndarray, ts: np.ndarray, side: int) -> np.ndarray:
+        """LS root-node shortcut, window-batched: M [W, n, k_s] such that
+        F_e(q) = Q_s(d(q, v_side)) · M[w] for a dominated edge (§6.2)."""
+        ctx = self.ctx
+        ts = np.asarray(ts, dtype=np.float64)
+        totals = self.window_edge_totals_multi(edges, ts)  # [W, n, 2, 4, K]
+        W, n = totals.shape[:2]
+        qt = np.stack(
+            [[ctx.qt_left(t) for t in ts], [ctx.qt_right(t) for t in ts]], axis=1
+        )  # [W, 2, k_t]
+        M = np.zeros((W, n, ctx.k_s))
+        for w in (0, 1):
+            A = totals[:, :, w, side * 2 + w].reshape(W, n, ctx.k_s, ctx.k_t)
+            M += np.einsum("wnst,wt->wns", A, qt[:, w])
+        return M
 
     def dominated_moments(self, edges: np.ndarray, t: float, side: int) -> np.ndarray:
-        """LS root-node shortcut: spatial moment vectors M [n, k_s] such that
-        F_e(q) = Q_s(d(q, v_side)) · M for a dominated edge (§6.2)."""
-        ctx = self.ctx
-        totals = self.window_edge_totals(edges, t)  # [n, 2, 4, K]
-        qt = (ctx.qt_left(t), ctx.qt_right(t))
-        n = totals.shape[0]
-        M = np.zeros((n, ctx.k_s))
-        for w in (0, 1):
-            A = totals[:, w, side * 2 + w].reshape(n, ctx.k_s, ctx.k_t)
-            M += A @ qt[w]
-        return M
+        """Single-window form of :meth:`dominated_moments_multi`: [n, k_s]."""
+        return self.dominated_moments_multi(edges, np.array([float(t)]), side)[0]
 
     # --------------------------------------------------------------- queries
     def eval_atoms(self, atoms: AtomSet, t: float, *, cascade: bool = True) -> np.ndarray:
@@ -362,3 +375,194 @@ class RangeForest:
             moved = (m_act & (lev > 0)) | (~merged & (palive[0] | palive[1]) & (lev > 0))
             lev = np.where(moved, lev - 1, lev)
         return out
+
+
+# ===================================================================== JAX
+# Flat-forest adapter: promotes the jit'd window-batched engine
+# (jax_engine.eval_atoms_flat) to the default single-host query path.
+# jax imports stay inside the class so the NumPy paths never pay them.
+
+def _size_class(m: int, floor: int = 256) -> int:
+    """Pad the ragged atom count to an ⅛-octave size class so the jit cache
+    is keyed on O(log M) distinct shapes, never on the exact count. Above
+    ~8·floor atoms the padding waste is bounded by ~12%; below that the
+    ``floor`` granularity dominates (cache size matters more than waste
+    for small batches)."""
+    m = max(m, 1)
+    if m <= floor:
+        return floor
+    gran = max(next_pow2(m) // 8, floor)
+    return -(-m // gran) * gran
+
+
+def make_window_batch(ctx: MomentContext, ts) -> Tuple[np.ndarray, ...]:
+    """Host-side window tables for W centers → Wh = 2W half-window rows.
+
+    Row order is (w0 left, w0 right, w1 left, ...) so engines can fold the
+    two halves of a center with one reshape. Returns numpy arrays
+    (t_lo, t_hi, lo_right, half, qt) ready to become a jax_engine.WindowBatch.
+    """
+    ts = [float(t) for t in ts]
+    Wh = 2 * len(ts)
+    t_lo = np.empty(Wh)
+    t_hi = np.empty(Wh)
+    lo_right = np.zeros(Wh, bool)
+    half = np.zeros(Wh, np.int32)
+    qt = np.empty((Wh, ctx.k_t))
+    for w, t in enumerate(ts):
+        # left half [t-b_t, t]: inclusive lower bound; right half (t, t+b_t]
+        t_lo[2 * w], t_hi[2 * w] = t - ctx.b_t, t
+        qt[2 * w] = ctx.qt_left(t)
+        t_lo[2 * w + 1], t_hi[2 * w + 1] = t, t + ctx.b_t
+        lo_right[2 * w + 1] = True
+        half[2 * w + 1] = 1
+        qt[2 * w + 1] = ctx.qt_right(t)
+    return t_lo, t_hi, lo_right, half, qt
+
+
+_JIT_FLUSH = None  # persistent across FlatForestEngine instances: the jit
+# cache under it is keyed on (size class, Wh, L) shapes plus the static
+# (max_levels, search_steps, cascade) — repeated flushes never recompile.
+
+
+def _get_flush():
+    global _JIT_FLUSH
+    if _JIT_FLUSH is None:
+        import functools
+
+        import jax
+
+        from .jax_engine import eval_atoms_flat
+
+        @functools.partial(
+            jax.jit, static_argnames=("max_levels", "search_steps", "cascade")
+        )
+        def _flush(forest, fa, wb, heat, *, max_levels, search_steps, cascade):
+            vals = eval_atoms_flat(
+                forest, fa, wb,
+                max_levels=max_levels, search_steps=search_steps, cascade=cascade,
+            )  # [Wh, Mpad]
+            W = heat.shape[1]
+            per_win = vals.reshape(W, 2, -1).sum(axis=1)  # fold window halves
+            return heat.at[fa.lixel].add(per_win.T)  # scatter onto [L, W]
+
+        _JIT_FLUSH = _flush
+    return _JIT_FLUSH
+
+
+class FlatForestEngine:
+    """Device-resident window-batched query engine over a built RangeForest.
+
+    Solves the multiple-temporal-KDE hot loop (§8.2) on the accelerator: the
+    flat merge-tree tables live on device (float64 — exactness is part of the
+    paper's claim), atom flushes are padded into power-of-two size classes
+    and evaluated for *all* W windows in one jit'd call, scatter-accumulating
+    into a device-resident [L, W] heatmap that is transferred once per query.
+    """
+
+    def __init__(self, rf: RangeForest):
+        import jax
+        import jax.numpy as jnp
+
+        from .jax_engine import FlatForest
+
+        self._jax = jax
+        self._jnp = jnp
+        self.rf = rf
+        self.max_levels = max(rf.max_levels, 1)
+        npmax = max(int(rf.n_pad.max(initial=1)), 1)
+        nemax = max(int(np.diff(rf.ee.ptr).max(initial=1)), 1)
+        self.search_steps = max(int(np.ceil(np.log2(max(npmax, nemax) + 1))) + 1, 1)
+        self.cascade_ok = rf.has_bridges
+
+        def pad1(x, fill):
+            # gather-safe: flat tables must never be empty
+            if x.shape[0]:
+                return x
+            return np.full((1,) + x.shape[1:], fill, x.dtype)
+
+        bridge = rf.bridge if rf.bridge is not None else np.zeros(1, np.int32)
+        with jax.experimental.enable_x64():
+            self.forest = FlatForest(
+                pos_flat=jnp.asarray(pad1(rf.pos_flat, np.inf)),
+                cum_flat=jnp.asarray(pad1(rf.cum_flat, 0.0)),
+                edge_base=jnp.asarray(rf.edge_base[:-1]),
+                n_pad=jnp.asarray(rf.n_pad),
+                n_lev=jnp.asarray(rf.n_levels),
+                time_flat=jnp.asarray(pad1(rf.ee.time, np.inf)),
+                time_ptr=jnp.asarray(rf.ee.ptr),
+                bridge=jnp.asarray(pad1(bridge, 0)),
+            )
+        self.device_bytes = sum(
+            int(np.prod(x.shape)) * x.dtype.itemsize for x in self.forest
+        )
+
+    # ------------------------------------------------------------ per query
+    def window_batch(self, ctx: MomentContext, ts):
+        from .jax_engine import WindowBatch
+
+        t_lo, t_hi, lo_right, half, qt = make_window_batch(ctx, ts)
+        jnp = self._jnp
+        with self._jax.experimental.enable_x64():
+            return WindowBatch(
+                t_lo=jnp.asarray(t_lo),
+                t_hi=jnp.asarray(t_hi),
+                lo_right=jnp.asarray(lo_right),
+                half=jnp.asarray(half),
+                qt=jnp.asarray(qt),
+            )
+
+    def new_heatmap(self, n_lixels: int, n_windows: int):
+        with self._jax.experimental.enable_x64():
+            return self._jnp.zeros((n_lixels, n_windows))
+
+    def flush(self, heat, atoms: AtomSet, wb, *, cascade: bool = True):
+        """heat[L, W] += window-batched contributions of one atom block.
+
+        Atoms are partitioned into LEVEL classes (by their event edge's tree
+        depth, rounded up to multiples of 3) so shallow-edge atoms never walk
+        the deepest edge's level count — each class is a separate jit entry
+        with its own static ``max_levels``.
+        """
+        from .jax_engine import FlatAtoms
+
+        jnp = self._jnp
+        if atoms.m == 0:
+            return heat
+        nl = self.rf.n_levels[atoms.edge]
+        cls = np.minimum(-(-nl // 3) * 3, self.max_levels).astype(np.int64)
+        for c in np.unique(cls):
+            sel = np.nonzero(cls == c)[0]
+            m = len(sel)
+            mp = _size_class(m)
+
+            def pad(x, fill=0):
+                out = np.full((mp,) + x.shape[1:], fill, x.dtype)
+                out[:m] = x[sel]
+                return out
+
+            valid = np.zeros(mp, bool)
+            valid[:m] = True
+            with self._jax.experimental.enable_x64():
+                fa = FlatAtoms(
+                    lixel=jnp.asarray(pad(atoms.lixel)),
+                    edge=jnp.asarray(pad(atoms.edge)),
+                    side_feat=jnp.asarray(pad(atoms.side_feat.astype(np.int32))),
+                    qs=jnp.asarray(pad(atoms.qs)),
+                    pos_hi=jnp.asarray(pad(atoms.pos_hi, -np.inf)),
+                    pos_lo1=jnp.asarray(pad(atoms.pos_lo1, np.inf)),
+                    lo1_right=jnp.asarray(pad(atoms.lo1_right, False)),
+                    pos_lo2=jnp.asarray(pad(atoms.pos_lo2, np.inf)),
+                    valid=jnp.asarray(valid),
+                )
+                heat = _get_flush()(
+                    self.forest, fa, wb, heat,
+                    max_levels=int(c),
+                    search_steps=self.search_steps,
+                    cascade=bool(cascade and self.cascade_ok),
+                )
+        return heat
+
+    def to_numpy(self, heat) -> np.ndarray:
+        """Device [L, W] heatmap → host [W, L] float64."""
+        return np.asarray(heat, dtype=np.float64).T

@@ -15,6 +15,13 @@ temporal KDE scenario, §8.2): build once, query many.
 The per-edge loop batches atoms across query edges and flushes them through
 the index in large vectorized blocks — the same batching the distributed
 (shard_map) and Pallas paths use.
+
+``engine`` selects the flush backend for solution='rfs' (DESIGN.md §4):
+
+  engine='jax'    window-batched jit'd flat engine, all W windows per flush,
+                  device-resident [W, L] heatmap (the default when available)
+  engine='numpy'  the host reference path (one eval_atoms pass per window)
+  engine='auto'   'jax' for rfs, 'numpy' otherwise / on jax failure
 """
 from __future__ import annotations
 
@@ -67,6 +74,7 @@ class TNKDE:
         spatial_kernel: str = "triangular",
         temporal_kernel: str = "triangular",
         solution: str = "rfs",
+        engine: str = "auto",
         lixel_sharing: bool = False,
         cascade: bool = True,
         drfs_depth: int = 8,
@@ -77,6 +85,10 @@ class TNKDE:
     ):
         if solution not in ("sps", "ada", "rfs", "drfs"):
             raise ValueError(f"unknown solution {solution!r}")
+        if engine not in ("auto", "numpy", "jax"):
+            raise ValueError(f"unknown engine {engine!r}")
+        if engine == "jax" and solution != "rfs":
+            raise ValueError("engine='jax' accelerates the RFS flush (solution='rfs')")
         if lixel_sharing and solution == "sps":
             raise ValueError("lixel sharing needs an aggregation index (ada/rfs/drfs)")
         t0 = _time.perf_counter()
@@ -102,6 +114,24 @@ class TNKDE:
         elif solution == "ada":
             self.index = AggregateDistanceIndex(net, self.ee, self.ctx)
         self._phi_dim = phi.shape[-1] if phi.size else self.ctx.K
+        # ---- engine resolution: promote the jit'd flat engine for RFS ------
+        self.engine = "numpy"
+        self._fe = None
+        if solution == "rfs" and engine != "numpy":
+            try:
+                from .rfs import FlatForestEngine
+
+                self._fe = FlatForestEngine(self.index)
+                self.engine = "jax"
+            except Exception as e:
+                if engine == "jax":
+                    raise
+                # engine='auto': fall back to the host path, but loudly — a
+                # silent fallback would mask real engine bugs as slowness
+                import warnings
+
+                warnings.warn(f"jax engine unavailable, using numpy path: {e!r}")
+                self._fe = None
         self._adj = adjacency_csr(net)
         # per-edge event extremes for window-independent LS classification
         E = net.n_edges
@@ -157,6 +187,31 @@ class TNKDE:
         np.minimum.at(self.ev_min_pos, events.edge_id, pos)
         np.maximum.at(self.ev_max_pos, events.edge_id, pos)
 
+    def edge_geometries(self):
+        """Yield the window-independent EdgeGeometry of every query edge with
+        at least one lixel — the planning loop shared by the single-host and
+        distributed paths (SPS rows are computed per edge block)."""
+        net, lix, ee, ctx = self.net, self.lix, self.ee, self.ctx
+        E = net.n_edges
+        radius = ctx.b_s + float(net.edge_len.max()) + 1.0
+        for blk_lo in range(0, E, self.edge_block):
+            blk = np.arange(blk_lo, min(blk_lo + self.edge_block, E))
+            verts = np.unique(
+                np.concatenate([net.edge_src[blk], net.edge_dst[blk]])
+            )
+            t_sp = _time.perf_counter()
+            rows = bounded_dijkstra(net, verts, radius, adj=self._adj)
+            self.stats.sp_seconds += _time.perf_counter() - t_sp
+            vmap = {int(v): i for i, v in enumerate(verts)}
+            for a in blk:
+                ra = rows[vmap[int(net.edge_src[a])]]
+                rb = rows[vmap[int(net.edge_dst[a])]]
+                geom = build_edge_geometry(
+                    net, lix, ee, int(a), ctx.b_s, np.stack([ra, rb])
+                )
+                if geom.x.shape[0]:
+                    yield geom
+
     def query(self, ts: Sequence[float]) -> np.ndarray:
         """KDE values for every lixel, for each window center in ts: [W, L]."""
         ts = list(map(float, ts))
@@ -164,21 +219,35 @@ class TNKDE:
         W = len(ts)
         L = self.lix.n_lixels
         F = np.zeros((W, L))
+        if W == 0:
+            return F
         net, lix, ee, ctx = self.net, self.lix, self.ee, self.ctx
-        E = net.n_edges
-        radius_pad = float(net.edge_len.max())
         pend_atoms: List = []
         pend_count = 0
         dominated_work: List = []  # (geom, side, candidate cols) triples
+        use_jax = self.engine == "jax" and self._fe is not None
+        flush_cap = self.atom_flush
+        if use_jax:
+            # all W windows ride one device pass per flush; the heatmap stays
+            # device-resident until the end of the query. Blocks are capped so
+            # the walk state (O(W · M) per flush) stays within device memory.
+            wb = self._fe.window_batch(ctx, ts)
+            heat = self._fe.new_heatmap(L, W)
+            flush_cap = min(flush_cap, 200_000)
 
         def flush():
-            nonlocal pend_atoms, pend_count
+            nonlocal pend_atoms, pend_count, heat
             if not pend_atoms:
                 return
             from .plan import AtomSet
 
             atoms = AtomSet.concat(pend_atoms)
             self.stats.n_atoms += atoms.m
+            if use_jax:
+                heat = self._fe.flush(heat, atoms, wb, cascade=self.cascade)
+                pend_atoms = []
+                pend_count = 0
+                return
             for w, t in enumerate(ts):
                 vals = self.index.eval_atoms(
                     atoms,
@@ -193,64 +262,58 @@ class TNKDE:
             pend_atoms = []
             pend_count = 0
 
-        for blk_lo in range(0, E, self.edge_block):
-            blk = np.arange(blk_lo, min(blk_lo + self.edge_block, E))
-            verts = np.unique(
-                np.concatenate([net.edge_src[blk], net.edge_dst[blk]])
-            )
-            t_sp = _time.perf_counter()
-            rows = bounded_dijkstra(
-                net, verts, ctx.b_s + radius_pad + 1.0, adj=self._adj
-            )
-            self.stats.sp_seconds += _time.perf_counter() - t_sp
-            vmap = {int(v): i for i, v in enumerate(verts)}
-            for a in blk:
-                ra = rows[vmap[int(net.edge_src[a])]]
-                rb = rows[vmap[int(net.edge_dst[a])]]
-                geom = build_edge_geometry(
-                    net, lix, ee, int(a), ctx.b_s, np.stack([ra, rb])
+        for geom in self.edge_geometries():
+            l_a = geom.x.shape[0]
+            sl = slice(geom.lix_base, geom.lix_base + l_a)
+            if self.solution == "sps":
+                for w, t in enumerate(ts):
+                    F[w, sl] += sps_eval_edge(geom, ee, ctx, t)
+                continue
+            mask = None
+            if self.ls:
+                dom_c, dom_d, out, normal = classify_candidates(
+                    geom, ctx, self.ev_min_pos, self.ev_max_pos
                 )
-                l_a = geom.x.shape[0]
-                if l_a == 0:
-                    continue
-                sl = slice(geom.lix_base, geom.lix_base + l_a)
-                if self.solution == "sps":
-                    for w, t in enumerate(ts):
-                        F[w, sl] += sps_eval_edge(geom, ee, ctx, t)
-                    continue
-                mask = None
-                if self.ls:
-                    dom_c, dom_d, out, normal = classify_candidates(
-                        geom, ctx, self.ev_min_pos, self.ev_max_pos
-                    )
-                    self.stats.n_pairs_dominated += int(dom_c.sum() + dom_d.sum())
-                    self.stats.n_pairs_out += int(out.sum())
-                    self.stats.n_pairs_normal += int(normal.sum())
-                    mask = normal
-                    for side, dmask in ((0, dom_c), (1, dom_d)):
-                        cols = np.nonzero(dmask)[0]
-                        if len(cols):
-                            # defer: one batched dominated_moments per window
-                            dominated_work.append((geom, side, cols))
-                atoms = build_atoms(geom, ctx, mask)
-                if atoms.m:
-                    pend_atoms.append(atoms)
-                    pend_count += atoms.m
-                if pend_count >= self.atom_flush:
-                    flush()
+                self.stats.n_pairs_dominated += int(dom_c.sum() + dom_d.sum())
+                self.stats.n_pairs_out += int(out.sum())
+                self.stats.n_pairs_normal += int(normal.sum())
+                mask = normal
+                for side, dmask in ((0, dom_c), (1, dom_d)):
+                    cols = np.nonzero(dmask)[0]
+                    if len(cols):
+                        # defer: one batched dominated_moments sweep per side
+                        dominated_work.append((geom, side, cols))
+            atoms = build_atoms(geom, ctx, mask)
+            if atoms.m:
+                pend_atoms.append(atoms)
+                pend_count += atoms.m
+            if pend_count >= flush_cap:
+                flush()
         flush()
+        if use_jax:
+            F += self._fe.to_numpy(heat)
         # ---- Lixel Sharing: dominated edges, batched across the network ----
-        # one dominated_moments call per (window, side) instead of per edge —
+        # one dominated_moments sweep per side covering *all* windows (the
+        # rank searches and prefix gathers for the W windows share one pass);
         # the per-edge Δ² accumulation stays (it is O(1) amortized per edge).
         if dominated_work:
+            ts_arr = np.asarray(ts)
+            dm_multi = getattr(self.index, "dominated_moments_multi", None)
             for side in (0, 1):
                 items = [(g, cols) for g, s, cols in dominated_work if s == side]
                 if not items:
                     continue
                 all_edges = np.concatenate([g.cand[cols] for g, cols in items])
                 offs = np.cumsum([0] + [len(c) for _, c in items])
-                for w, t in enumerate(ts):
-                    M_all = self.index.dominated_moments(all_edges, t, side)
+                M_multi = (
+                    dm_multi(all_edges, ts_arr, side)
+                    if dm_multi is not None
+                    else np.stack(
+                        [self.index.dominated_moments(all_edges, t, side) for t in ts]
+                    )
+                )  # [W, n_edges, k_s]
+                for w in range(W):
+                    M_all = M_multi[w]
                     for (g, cols), lo, hi in zip(items, offs[:-1], offs[1:]):
                         l_a = g.x.shape[0]
                         diff2 = np.zeros(l_a + 2)

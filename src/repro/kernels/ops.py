@@ -25,6 +25,8 @@ def minplus_matmul(a: jnp.ndarray, b: jnp.ndarray, **kw) -> jnp.ndarray:
 
 
 def tree_query(*args, **kw) -> jnp.ndarray:
+    """Window-batched merge-tree range query: rank bounds / q_vec carry a
+    [G, W, Q] window axis; position bounds stay [G, Q] (see tree_query.py)."""
     kw.setdefault("interpret", INTERPRET)
     return tree_query_pallas(*args, **kw)
 

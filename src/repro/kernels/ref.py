@@ -23,24 +23,25 @@ def minplus_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 def tree_query(
     pos: jnp.ndarray,  # [G, LVL, NPAD] position-sorted bucket tables (+inf pad)
     cum: jnp.ndarray,  # [G, LVL, NPAD, K] inclusive per-bucket prefix moments
-    r_lo: jnp.ndarray,  # [G, Q] time-rank interval lo (within [0, NPAD])
-    r_hi: jnp.ndarray,  # [G, Q] time-rank interval hi
+    r_lo: jnp.ndarray,  # [G, W, Q] per-window time-rank interval lo
+    r_hi: jnp.ndarray,  # [G, W, Q] time-rank interval hi
     pos_hi: jnp.ndarray,  # [G, Q] upper position bound (inclusive, 'right')
     pos_lo1: jnp.ndarray,  # [G, Q] lower bound 1
     lo1_right: jnp.ndarray,  # [G, Q] bool: lower bound 1 is exclusive ('right')
     pos_lo2: jnp.ndarray,  # [G, Q] lower bound 2 (inclusive, 'left')
-    q_vec: jnp.ndarray,  # [G, Q, K] query coefficient vectors
+    q_vec: jnp.ndarray,  # [G, W, Q, K] query coefficient vectors
 ) -> jnp.ndarray:
-    """Batched merge-tree range query (the RFS inner loop, paper Alg. 2).
+    """Window-batched merge-tree range query (the RFS inner loop, Alg. 2).
 
-    For each query: canonically decompose the rank interval [r_lo, r_hi) over
-    the level-ℓ buckets (size 2^ℓ, level ℓ stored at pos[:, ℓ]); inside each
-    emitted bucket select events with position in (lo, hi] bounds via binary
-    search and dot the prefix-moment difference with q_vec. Returns [G, Q].
+    For each (window, query): canonically decompose the rank interval
+    [r_lo, r_hi) over the level-ℓ buckets (size 2^ℓ, level ℓ stored at
+    pos[:, ℓ]); inside each emitted bucket select events with position in
+    (lo, hi] bounds via binary search and dot the prefix-moment difference
+    with q_vec. The position bounds are shared by all W windows (only the
+    rank interval and query vector carry a window axis). Returns [G, W, Q].
     """
     G, LVL, NPAD = pos.shape
     K = cum.shape[-1]
-    Q = r_lo.shape[1]
 
     def search(p_row, lo, hi, val, right):
         # binary search in p_row[lo:hi] (ascending), fixed trip count
@@ -93,7 +94,10 @@ def tree_query(
             )
             return acc
 
-        return jax.vmap(one_query)(rl_g, rh_g, ph_g, pl1_g, l1r_g, pl2_g, qv_g)
+        def per_window(rl_w, rh_w, qv_w):
+            return jax.vmap(one_query)(rl_w, rh_w, ph_g, pl1_g, l1r_g, pl2_g, qv_w)
+
+        return jax.vmap(per_window)(rl_g, rh_g, qv_g)
 
     return jax.vmap(one_group)(pos, cum, r_lo, r_hi, pos_hi, pos_lo1, lo1_right, pos_lo2, q_vec)
 

@@ -1,21 +1,29 @@
 """Merge-tree range query — Pallas TPU kernel (the RFS/DRFS inner loop).
 
 This is the paper's Algorithm 2 (DualDetect) after the hardware adaptation of
-DESIGN.md §2: per (edge-group g, query q), canonically decompose the time-rank
-interval [r_lo, r_hi) into <= 2 buckets per level and, inside each bucket,
-select a position interval and dot the prefix-moment difference with the
-query vector.
+DESIGN.md §2: per (edge-group g, query q, window w), canonically decompose
+the time-rank interval [r_lo, r_hi) into <= 2 buckets per level and, inside
+each bucket, select a position interval and dot the prefix-moment difference
+with the query vector.
 
 TPU-native choices (vs the CPU pointer walk):
   * the per-bucket *binary search* becomes a **masked compare-count**:
-    rank(v) = Σ_j [seg_lo <= j < seg_hi][p_row[j] (<|<=) v]  — a VPU
-    comparison-reduction over the VMEM-resident level row. No data-dependent
-    control flow, no gather.
+    rank(v) = Σ_j [j in bucket][p_row[j] (<|<=) v] — a VPU comparison
+    -reduction over the VMEM-resident level row. No data-dependent control
+    flow, no gather.
   * the *prefix-moment gather* becomes a **one-hot × table matmul** on the
     MXU: onehot(i-1) @ cum_level  ([TQ, NPAD] @ [NPAD, K]).
   * one grid step owns one edge-group's whole table (BlockSpec brings
     [LVL, NPAD(, K)] into VMEM) and a TQ-tile of its queries, so the level
-    loop is a static Python unroll.
+    and window loops are static Python unrolls.
+
+Window batching (DESIGN.md §4): the W axis carries the per-window time-rank
+intervals and temporal-weighted query vectors; the position bounds are per
+query only. Per level the three compare masks and their per-bucket
+segment-counts (one [TQ, NPAD] @ [NPAD, NB] matmul each) are computed
+**once** and shared by every window — each window then pays only one-hot
+count gathers and the two prefix-moment matmuls for its own <= 2 buckets.
+That is the hoist that makes the per-window cost shrink as W grows.
 
 Callers bucket edges into groups of uniform padded size NPAD (size-classed
 batching) — see repro.core.distributed.
@@ -31,106 +39,122 @@ from jax.experimental import pallas as pl
 __all__ = ["tree_query_pallas"]
 
 
-def _kernel(pos_ref, cum_ref, rlo_ref, rhi_ref, bnd_ref, l1r_ref, qv_ref, o_ref, *, lvl, npad):
+def _kernel(pos_ref, cum_ref, rlo_ref, rhi_ref, bnd_ref, l1r_ref, qv_ref, o_ref, *, lvl, npad, nw):
     TQ = o_ref.shape[-1]
-    K = cum_ref.shape[-1]
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, npad), 1)  # [1, NPAD]
-    l = rlo_ref[0, :].astype(jnp.int32)  # [TQ]
-    r = rhi_ref[0, :].astype(jnp.int32)
     ph = bnd_ref[0, :, 0]
     pl1 = bnd_ref[0, :, 1]
     pl2 = bnd_ref[0, :, 2]
     l1r = l1r_ref[0, :] != 0
-    qv = qv_ref[0, :, :]  # [TQ, K]
-    acc = jnp.zeros((TQ,), jnp.float32)
+    ls = [rlo_ref[0, w, :].astype(jnp.int32) for w in range(nw)]  # each [TQ]
+    rs = [rhi_ref[0, w, :].astype(jnp.int32) for w in range(nw)]
+    accs = [jnp.zeros((TQ,), jnp.float32) for _ in range(nw)]
 
     for lev in range(lvl):
         p_row = pos_ref[0, lev, :]  # [NPAD]
         c_lvl = cum_ref[0, lev, :, :]  # [NPAD, K]
-        active = l < r
+        nb = npad >> lev
+        pr = p_row[None, :]
+        # ---- window-independent: compare masks + per-bucket counts (hoisted)
+        m_hi = (pr <= ph[:, None]).astype(jnp.float32)  # [TQ, NPAD]
+        m_l1 = jnp.where(
+            l1r[:, None], pr <= pl1[:, None], pr < pl1[:, None]
+        ).astype(jnp.float32)
+        m_l2 = (pr < pl2[:, None]).astype(jnp.float32)
+        iota_b = jax.lax.broadcasted_iota(jnp.int32, (1, nb), 1)  # [1, NB]
+        seg = ((iota.reshape(npad, 1) >> lev) == iota_b).astype(jnp.float32)  # [NPAD, NB]
+        cnt_hi = m_hi @ seg  # [TQ, NB] segment compare-counts (MXU)
+        cnt_l1 = m_l1 @ seg
+        cnt_l2 = m_l2 @ seg
 
-        def bucket_val(b, on):
-            seg_lo = (b << lev)[:, None]  # [TQ, 1]
-            seg_hi = jnp.minimum(seg_lo + (1 << lev), npad)
-            in_seg = (iota >= seg_lo) & (iota < seg_hi)  # [TQ, NPAD]
-            pr = p_row[None, :]
-            # masked compare-count ranks (replaces binary search)
-            i_hi = seg_lo[:, 0] + jnp.sum(in_seg & (pr <= ph[:, None]), axis=1)
-            c_l1 = jnp.sum(
-                in_seg & jnp.where(l1r[:, None], pr <= pl1[:, None], pr < pl1[:, None]),
-                axis=1,
-            )
-            c_l2 = jnp.sum(in_seg & (pr < pl2[:, None]), axis=1)
-            i_lo = seg_lo[:, 0] + jnp.maximum(c_l1, c_l2)
-            i_hi = jnp.maximum(i_hi, i_lo)
+        # ---- per-window: canonical climb using the shared counts ----------
+        for w in range(nw):
+            l, r = ls[w], rs[w]
+            qv = qv_ref[0, w, :, :]  # [TQ, K]
+            active = l < r
 
-            def pref(i):
-                oh = (iota == (i - 1)[:, None]) & (i > seg_lo[:, 0])[:, None]
-                return oh.astype(jnp.float32) @ c_lvl  # [TQ, K] (MXU)
+            def bucket_val(b, on):
+                ohb = (iota_b == b[:, None]).astype(jnp.float32)  # [TQ, NB]
+                seg_lo = b << lev
+                i_hi = seg_lo + jnp.sum(ohb * cnt_hi, axis=1).astype(jnp.int32)
+                c_l1 = jnp.sum(ohb * cnt_l1, axis=1).astype(jnp.int32)
+                c_l2 = jnp.sum(ohb * cnt_l2, axis=1).astype(jnp.int32)
+                i_lo = seg_lo + jnp.maximum(c_l1, c_l2)
+                i_hi = jnp.maximum(i_hi, i_lo)
 
-            mom = pref(i_hi) - pref(i_lo)
-            return jnp.where(on, jnp.sum(qv * mom, axis=1), 0.0)
+                def pref(i):
+                    oh = (iota == (i - 1)[:, None]) & (i > seg_lo)[:, None]
+                    return oh.astype(jnp.float32) @ c_lvl  # [TQ, K] (MXU)
 
-        emit_l = active & ((l & 1) == 1)
-        acc = acc + bucket_val(l, emit_l)
-        l = jnp.where(emit_l, l + 1, l)
-        emit_r = (l < r) & ((r & 1) == 1)
-        acc = acc + bucket_val(r - 1, emit_r)
-        r = jnp.where(emit_r, r - 1, r)
-        l, r = l >> 1, r >> 1
-    o_ref[0, :] = acc
+                mom = pref(i_hi) - pref(i_lo)
+                return jnp.where(on, jnp.sum(qv * mom, axis=1), 0.0)
+
+            emit_l = active & ((l & 1) == 1)
+            accs[w] = accs[w] + bucket_val(l, emit_l)
+            l = jnp.where(emit_l, l + 1, l)
+            emit_r = (l < r) & ((r & 1) == 1)
+            accs[w] = accs[w] + bucket_val(r - 1, emit_r)
+            r = jnp.where(emit_r, r - 1, r)
+            ls[w], rs[w] = l >> 1, r >> 1
+    o_ref[0, :, :] = jnp.stack(accs)
 
 
 @functools.partial(jax.jit, static_argnames=("tq", "interpret"))
 def tree_query_pallas(
     pos: jnp.ndarray,  # [G, LVL, NPAD] f32 (+inf padded)
     cum: jnp.ndarray,  # [G, LVL, NPAD, K] f32
-    r_lo: jnp.ndarray,  # [G, Q] i32
-    r_hi: jnp.ndarray,  # [G, Q] i32
-    pos_hi: jnp.ndarray,  # [G, Q] f32
+    r_lo: jnp.ndarray,  # [G, W, Q] i32 per-window time-rank interval lo
+    r_hi: jnp.ndarray,  # [G, W, Q] i32
+    pos_hi: jnp.ndarray,  # [G, Q] f32 (window-independent position bounds)
     pos_lo1: jnp.ndarray,  # [G, Q] f32
     lo1_right: jnp.ndarray,  # [G, Q] bool / i32
     pos_lo2: jnp.ndarray,  # [G, Q] f32
-    q_vec: jnp.ndarray,  # [G, Q, K] f32
+    q_vec: jnp.ndarray,  # [G, W, Q, K] f32
     *,
     tq: int = 128,
     interpret: bool = True,
 ) -> jnp.ndarray:
+    """Window-batched merge-tree range query: [G, W, Q]."""
     G, LVL, NPAD = pos.shape
     K = cum.shape[-1]
-    Q = r_lo.shape[1]
+    W, Q = r_lo.shape[1], r_lo.shape[2]
     tq = min(tq, Q) or 1
     qp = -(-Q // tq) * tq
 
     def padq(x, fill=0):
-        return jnp.full((G, qp) + x.shape[2:], fill, x.dtype).at[:, :Q].set(x)
+        out = jnp.full(x.shape[:-1] + (qp,), fill, x.dtype)
+        return out.at[..., :Q].set(x)
+
+    def padq_t(x, fill=0.0):  # pad axis -2 (trailing feature axis stays)
+        out = jnp.full(x.shape[:-2] + (qp, x.shape[-1]), fill, x.dtype)
+        return out.at[..., :Q, :].set(x)
 
     bounds = jnp.stack(
         [pos_hi.astype(jnp.float32), pos_lo1.astype(jnp.float32), pos_lo2.astype(jnp.float32)],
         axis=-1,
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, lvl=LVL, npad=NPAD),
+        functools.partial(_kernel, lvl=LVL, npad=NPAD, nw=W),
         grid=(G, qp // tq),
         in_specs=[
             pl.BlockSpec((1, LVL, NPAD), lambda g, q: (g, 0, 0)),
             pl.BlockSpec((1, LVL, NPAD, K), lambda g, q: (g, 0, 0, 0)),
-            pl.BlockSpec((1, tq), lambda g, q: (g, q)),
-            pl.BlockSpec((1, tq), lambda g, q: (g, q)),
+            pl.BlockSpec((1, W, tq), lambda g, q: (g, 0, q)),
+            pl.BlockSpec((1, W, tq), lambda g, q: (g, 0, q)),
             pl.BlockSpec((1, tq, 3), lambda g, q: (g, q, 0)),
             pl.BlockSpec((1, tq), lambda g, q: (g, q)),
-            pl.BlockSpec((1, tq, K), lambda g, q: (g, q, 0)),
+            pl.BlockSpec((1, W, tq, K), lambda g, q: (g, 0, q, 0)),
         ],
-        out_specs=pl.BlockSpec((1, tq), lambda g, q: (g, q)),
-        out_shape=jax.ShapeDtypeStruct((G, qp), jnp.float32),
+        out_specs=pl.BlockSpec((1, W, tq), lambda g, q: (g, 0, q)),
+        out_shape=jax.ShapeDtypeStruct((G, W, qp), jnp.float32),
         interpret=interpret,
     )(
         pos.astype(jnp.float32),
         cum.astype(jnp.float32),
         padq(r_lo.astype(jnp.int32)),
         padq(r_hi.astype(jnp.int32)),
-        padq(bounds, fill=0),
+        padq_t(bounds),
         padq(lo1_right.astype(jnp.int32)),
-        padq(q_vec.astype(jnp.float32)),
+        padq_t(q_vec.astype(jnp.float32)),
     )
-    return out[:, :Q]
+    return out[:, :, :Q]

@@ -6,6 +6,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
@@ -14,16 +16,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     axis for hierarchical data parallelism."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1):
     """Whatever this host has (tests / examples): (data, model)."""
     n = len(jax.devices())
     mp = max(1, min(model_parallel, n))
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((n // mp, mp), ("data", "model"))

@@ -64,6 +64,7 @@ def make_train_step(
     # an int8 error-feedback all-reduce, then AdamW runs identically per pod.
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map
     from repro.train.grad_compression import compressed_tree_allreduce
 
     def hier_step(params, opt_state, residuals, batch):
@@ -74,13 +75,12 @@ def make_train_step(
             return params, opt_state, residuals, dict(metrics, loss=l, **om)
 
         rep = P()  # params/opt replicated across pods; batch split over pod
-        fn = jax.shard_map(
+        fn = shard_map(
             body,
             mesh=mesh,
             in_specs=(rep, rep, rep, P(pod_axis)),
             out_specs=(rep, rep, rep, rep),
-            check_vma=False,
-            axis_names=frozenset({pod_axis}),
+            manual_axes={pod_axis},
         )
         return fn(params, opt_state, residuals, batch)
 

@@ -1,5 +1,8 @@
 """Hypothesis property tests on the core invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: `pip install .[test]`
 from hypothesis import given, settings, strategies as st
 
 from repro.core.aggregation import segmented_cumsum, segmented_searchsorted

@@ -1,0 +1,85 @@
+"""Window-batched JAX engine vs the NumPy RFS reference path.
+
+The engine promotion contract (ISSUE 1): ``engine='jax'`` must reproduce the
+host path to rtol=1e-6 across window counts, both decomposition engines
+(canonical search / cascade prefix-path), Lixel Sharing on/off, and multiple
+kernel families. The engine runs in float64 on device, so agreement is in
+practice ~1e-15; the rtol here is the acceptance bound, not the expectation.
+"""
+import numpy as np
+import pytest
+
+from repro.core import TNKDE
+from repro.data.spatial import make_events, make_network
+
+KW = dict(g=35.0, b_s=700.0, b_t=2.5 * 86400.0)
+TS5 = [2 * 86400.0, 4 * 86400.0, 5.5 * 86400.0, 7 * 86400.0, 9 * 86400.0]
+
+
+@pytest.fixture(scope="module")
+def world():
+    net = make_network(60, 100, seed=13)
+    ev = make_events(net, 800, seed=14, span_days=12)
+    return net, ev
+
+
+_REF_CACHE = {}
+
+
+def _reference(world, ks, kt, ls, ts):
+    key = (ks, kt, ls, len(ts))
+    if key not in _REF_CACHE:
+        net, ev = world
+        _REF_CACHE[key] = TNKDE(
+            net, ev, solution="rfs", engine="numpy", lixel_sharing=ls,
+            spatial_kernel=ks, temporal_kernel=kt, **KW
+        ).query(ts)
+    return _REF_CACHE[key]
+
+
+@pytest.mark.parametrize("ks,kt", [("triangular", "triangular"), ("epanechnikov", "cosine")])
+@pytest.mark.parametrize("cascade", [True, False])
+@pytest.mark.parametrize("ls", [False, True])
+@pytest.mark.parametrize("W", [1, 5])
+def test_jax_engine_matches_numpy(world, ks, kt, cascade, ls, W):
+    net, ev = world
+    ts = TS5[:W]
+    ref = _reference(world, ks, kt, ls, ts)
+    m = TNKDE(
+        net, ev, solution="rfs", engine="jax", cascade=cascade, lixel_sharing=ls,
+        spatial_kernel=ks, temporal_kernel=kt, **KW
+    )
+    assert m.engine == "jax"
+    got = m.query(ts)
+    assert got.shape == (W, ref.shape[1])
+    np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-9 * max(ref.max(), 1.0))
+
+
+def test_engine_auto_promotes_rfs(world):
+    net, ev = world
+    assert TNKDE(net, ev, solution="rfs", **KW).engine == "jax"
+    assert TNKDE(net, ev, solution="ada", **KW).engine == "numpy"
+
+
+def test_engine_jax_requires_rfs(world):
+    net, ev = world
+    with pytest.raises(ValueError):
+        TNKDE(net, ev, solution="ada", engine="jax", **KW)
+
+
+def test_jax_engine_empty_window(world):
+    """A window far outside the event span must come back exactly zero."""
+    net, ev = world
+    m = TNKDE(net, ev, solution="rfs", engine="jax", **KW)
+    F = m.query([100 * 86400.0])
+    assert F.shape[0] == 1
+    np.testing.assert_array_equal(F, np.zeros_like(F))
+
+
+def test_jax_engine_repeated_queries_consistent(world):
+    """The persistent jit cache must not leak state across queries."""
+    net, ev = world
+    m = TNKDE(net, ev, solution="rfs", engine="jax", **KW)
+    a = m.query(TS5[:2])
+    b = m.query(TS5[:2])
+    np.testing.assert_array_equal(a, b)

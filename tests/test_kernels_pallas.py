@@ -63,34 +63,36 @@ def _random_forest(rng, G, n_events, K):
     return pos, cum, raw, npad
 
 
-@pytest.mark.parametrize("n_events,K,Q", [(5, 2, 7), (16, 4, 33), (21, 3, 130)])
-def test_tree_query_matches_bruteforce(n_events, K, Q):
+@pytest.mark.parametrize("n_events,K,Q,W", [(5, 2, 7, 1), (16, 4, 33, 3), (21, 3, 130, 2)])
+def test_tree_query_matches_bruteforce(n_events, K, Q, W):
     rng = np.random.default_rng(n_events * 31 + Q)
     G = 3
     pos, cum, raw, npad = _random_forest(rng, G, n_events, K)
-    r_lo = rng.integers(0, n_events, (G, Q))
-    r_hi = rng.integers(0, n_events + 1, (G, Q))
+    # per-window rank intervals; position bounds shared across windows
+    r_lo = rng.integers(0, n_events, (G, W, Q))
+    r_hi = rng.integers(0, n_events + 1, (G, W, Q))
     r_hi = np.maximum(r_hi, r_lo)
     ph = rng.uniform(0, 110, (G, Q))
     pl1 = rng.uniform(-10, 100, (G, Q))
     l1r = rng.random((G, Q)) < 0.5
     pl2 = rng.uniform(-10, 60, (G, Q))
-    qv = rng.normal(size=(G, Q, K))
+    qv = rng.normal(size=(G, W, Q, K))
 
     args = (pos, cum, r_lo, r_hi, ph, pl1, l1r, pl2, qv)
     got = np.asarray(ops.tree_query(*[jnp.asarray(x) for x in args], tq=32))
     want_ref = np.asarray(ref.tree_query(*[jnp.asarray(x) for x in args]))
 
     # brute force oracle over the raw events
-    want = np.zeros((G, Q))
+    want = np.zeros((G, W, Q))
     for g in range(G):
         p, f = raw[g]
-        for q in range(Q):
-            sel = np.arange(n_events)
-            inrank = (sel >= r_lo[g, q]) & (sel < r_hi[g, q])
-            lo1_ok = (p > pl1[g, q]) if l1r[g, q] else (p >= pl1[g, q])
-            m = inrank & (p <= ph[g, q]) & lo1_ok & (p >= pl2[g, q])
-            want[g, q] = f[m].sum(axis=0) @ qv[g, q]
+        for w in range(W):
+            for q in range(Q):
+                sel = np.arange(n_events)
+                inrank = (sel >= r_lo[g, w, q]) & (sel < r_hi[g, w, q])
+                lo1_ok = (p > pl1[g, q]) if l1r[g, q] else (p >= pl1[g, q])
+                m = inrank & (p <= ph[g, q]) & lo1_ok & (p >= pl2[g, q])
+                want[g, w, q] = f[m].sum(axis=0) @ qv[g, w, q]
     # ref/kernel run in fp32; oracle in fp64
     np.testing.assert_allclose(want_ref, want, rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -117,9 +117,10 @@ def test_compressed_allreduce_error_feedback():
         sys.path.insert(0, sys.argv[1])
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.train.grad_compression import compressed_allreduce
 
-        mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("pod",))
         rng = np.random.default_rng(0)
         xs = rng.normal(size=(4, 512)).astype(np.float32)
         want = xs.mean(0)
@@ -128,9 +129,9 @@ def test_compressed_allreduce_error_feedback():
             out, nr = compressed_allreduce(x[0], r[0], "pod")
             return out[None], nr[None]
 
-        fn = jax.jit(jax.shard_map(body, mesh=mesh,
-                                   in_specs=(P("pod"), P("pod")),
-                                   out_specs=(P("pod"), P("pod"))))
+        fn = jax.jit(shard_map(body, mesh=mesh,
+                               in_specs=(P("pod"), P("pod")),
+                               out_specs=(P("pod"), P("pod"))))
         r = jnp.zeros((4, 512))
         errs = []
         # repeated reduction of the same tensor: EF residual should push the
