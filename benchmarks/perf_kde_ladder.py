@@ -10,8 +10,14 @@ Rungs (berkeley x0.08 by default, 5 windows):
                            the NumPy rungs and scale sublinearly in W
        ada / sps           per-window index rebuild / no index baselines
 
+``run_stream_ladder()`` is the DRFS *streaming* companion (BENCH_stream.json):
+an interleaved insert/seal/query ladder over the time-sorted event stream,
+run on the NumPy host path and the device-resident FlatDynamicEngine, in the
+paper's quantized serving mode and the beyond-paper exact_leaf mode. The
+headline number is the warm W=5 quantized query speedup (jax vs numpy).
+
 Callable as a script or via ``run_ladder()`` (benchmarks/run.py uses it to
-emit BENCH_kde.json for PR-over-PR perf tracking).
+emit BENCH_kde.json / BENCH_stream.json for PR-over-PR perf tracking).
 """
 import json
 import sys
@@ -21,6 +27,7 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.core import TNKDE
+from repro.core.events import Events
 from repro.data.spatial import make_dataset
 
 sys.path.insert(0, ".")
@@ -104,16 +111,116 @@ def run_ladder(scale=0.08, n_windows=5, b_s_list=(400.0, 2000.0), out_json=None,
     return rungs
 
 
+def run_stream_ladder(scale=0.08, n_windows=5, b_s=400.0, depth=7, n_batches=4,
+                      out_json=None):
+    """Interleaved insert/seal/query ladder for the streaming DRFS path.
+
+    Half the (time-sorted) event stream seeds the index; the rest arrives in
+    ``n_batches`` streaming inserts, each followed by an all-window query —
+    the serve-while-ingesting shape the Dynamic Range Forest exists for (§5).
+    Inserts land in pending buffers (scanned by queries) until the geometric
+    seal triggers an incremental dirty-edge repack. Per (engine, mode) the
+    ladder reports insert/query time per batch, seal count, scan work, and a
+    steady-state warm query; the headline is the quantized warm-W=5 speedup.
+    """
+    print(f"=== DRFS streaming ladder (berkeley x{scale}, {n_windows} windows) ===")
+    net, ev, meta = make_dataset("berkeley", scale=scale, seed=0)
+    ts, b_t = windows(ev, n_windows)
+    print(f"|V|={meta['V']} |E|={meta['E']} N={meta['N']}")
+    order = np.argsort(ev.time, kind="stable")
+    evs = Events(ev.edge_id[order], ev.pos[order], ev.time[order])
+
+    def sub(lo, hi):
+        return Events(evs.edge_id[lo:hi], evs.pos[lo:hi], evs.time[lo:hi])
+
+    n0 = evs.n // 2
+    cuts = np.linspace(n0, evs.n, n_batches + 1).astype(int)
+
+    def stream(engine, exact):
+        tag = f"drfs {engine} {'exact' if exact else 'quantized'}"
+        t0 = time.perf_counter()
+        m = TNKDE(net, sub(0, n0), solution="drfs", engine=engine, g=50.0,
+                  b_s=b_s, b_t=b_t, drfs_depth=depth, drfs_exact_leaf=exact)
+        build = time.perf_counter() - t0
+        rev0 = m.index.revision  # construction extends() also bump the epoch
+        m.query(ts)  # warm the jit cache / size classes (build-once serve-many)
+        ins_s, q_s = 0.0, []
+        for lo, hi in zip(cuts[:-1], cuts[1:]):
+            t0 = time.perf_counter()
+            m.insert(sub(lo, hi))
+            ins_s += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            F = m.query(ts)
+            q_s.append(time.perf_counter() - t0)
+        m.query(ts)
+        t0 = time.perf_counter()
+        F = m.query(ts)
+        warm = time.perf_counter() - t0
+        seals = m.index.revision - rev0  # seals during streaming only
+        print(f"{tag:28s} build={build:5.2f}s insert={ins_s:5.2f}s "
+              f"query/batch={np.mean(q_s):5.2f}s warm={warm:5.2f}s "
+              f"pend_scans={m.stats.n_pending_scanned}")
+        return F, dict(
+            rung=tag, engine=engine, exact=bool(exact), W=len(ts),
+            build_seconds=round(build, 4), insert_seconds=round(ins_s, 4),
+            query_seconds_per_batch=round(float(np.mean(q_s)), 4),
+            warm_query_seconds=round(warm, 4),
+            n_batches=n_batches, structure_epochs=int(seals),
+            pending_scanned=int(m.stats.n_pending_scanned),
+            partial_scanned=int(m.stats.n_partial_scanned),
+        )
+
+    rungs = []
+    F_ref, r = stream("numpy", False)
+    rungs.append(r)
+    F_jax, r = stream("jax", False)
+    rungs.append(r)
+    assert np.allclose(F_ref, F_jax, rtol=1e-9), np.abs(F_ref - F_jax).max()
+    speedup = rungs[0]["warm_query_seconds"] / max(rungs[1]["warm_query_seconds"], 1e-9)
+    rungs[1]["speedup_vs_numpy"] = round(speedup, 3)
+    print(f"{'':28s} quantized warm W={len(ts)} speedup: {speedup:.2f}x")
+    Fe_ref, r = stream("numpy", True)
+    rungs.append(r)
+    Fe_jax, r = stream("jax", True)
+    rungs.append(r)
+    assert np.allclose(Fe_ref, Fe_jax, rtol=1e-9), np.abs(Fe_ref - Fe_jax).max()
+    exact_speedup = rungs[2]["warm_query_seconds"] / max(rungs[3]["warm_query_seconds"], 1e-9)
+    rungs[3]["speedup_vs_numpy"] = round(exact_speedup, 3)
+    print(f"{'':28s} exact warm W={len(ts)} speedup: {exact_speedup:.2f}x")
+
+    out = dict(section="stream", dataset="berkeley", scale=scale,
+               V=meta["V"], E=meta["E"], N=meta["N"], depth=depth,
+               W=len(ts), speedup_at_W_warm=round(speedup, 3), rungs=rungs)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {out_json}")
+    return out
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.08)
     ap.add_argument("--windows", type=int, default=5)
-    ap.add_argument("--json", default="BENCH_kde.json")
+    ap.add_argument("--json", default=None,
+                    help="output path (default: BENCH_kde.json, or "
+                         "BENCH_stream.json with --stream)")
+    ap.add_argument("--stream", action="store_true",
+                    help="run the DRFS streaming ladder (BENCH_stream.json)")
     ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
     args = ap.parse_args()
-    if args.smoke:
+    if args.json is None:
+        args.json = "BENCH_stream.json" if args.stream else "BENCH_kde.json"
+    if args.stream:
+        if args.smoke:
+            run_stream_ladder(scale=0.02, n_windows=2, n_batches=2, depth=5,
+                              out_json=args.json)
+        else:
+            run_stream_ladder(scale=args.scale, n_windows=args.windows,
+                              out_json=args.json)
+    elif args.smoke:
         run_ladder(scale=0.02, n_windows=2, b_s_list=(400.0,), out_json=args.json,
                    w_scaling=(1, 2))
     else:

@@ -31,9 +31,10 @@ def main(argv=None) -> None:
         print(f"# -- {fn.__name__} --", flush=True)
         fn()
     if args.kde_json and not args.only:
-        from benchmarks.perf_kde_ladder import run_ladder
+        from benchmarks.perf_kde_ladder import run_ladder, run_stream_ladder
 
         run_ladder(scale=args.kde_scale, out_json=args.kde_json)
+        run_stream_ladder(scale=args.kde_scale, out_json="BENCH_stream.json")
     # roofline summary rows if a dry-run directory exists
     try:
         import glob

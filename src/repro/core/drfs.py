@@ -4,7 +4,7 @@ DRFS replaces RFS's rank-based splits with *real-position* bisection so the
 structure is known before the data arrives — that is what makes streaming
 insertion possible (§5.1) and gives the accuracy/size dial H (§5.2).
 
-Dense-array form (DESIGN.md §2): per edge, an implicit position-bisection
+Dense-array form (DESIGN.md §2/§5): per edge, an implicit position-bisection
 tree of depth H over [0, len_e] (node (d, i) covers the i-th 1/2^d fraction).
 Every node stores its events in arrival = time order with inclusive prefix
 sums of the moment block Φ — each event appears on its root-to-leaf path, so
@@ -12,6 +12,11 @@ construction is O(n_e · H) time and space (Lemma 5.1); adding one more depth
 level ("extension operation", Algorithm 4) costs O(n_e), and streaming
 inserts append to pending buffers that queries scan linearly until a
 geometric ``seal`` merges them.
+
+``seal`` is **incremental**: only *dirty* edges (those holding pending
+events) are re-aggregated; clean edges' per-level runs are spliced over
+unchanged (their node counts cannot change), so a seal costs a flat memcpy
+plus O(n_dirty · H) sort/cumsum work instead of O(N · H) rebuild work.
 
 Queries map a position interval to fully-covered leaves at depth
 H_q = min(H, H_0), canonically decompose that leaf range (<= 2 nodes per
@@ -24,6 +29,11 @@ binary searches per node (events inside a node are time-sorted).
   * ``exact_leaf_scan`` (testing convenience, beyond paper): boundary leaves
     are scanned event-by-event, making DRFS exact — used to validate the
     machinery against the SPS oracle.
+
+The device-resident query engine over this structure is
+``rfs.FlatDynamicEngine`` / ``jax_engine.eval_atoms_dyn``; mutations happen
+here on the host and the engine re-packs lazily, keyed on ``revision`` /
+``pend_revision``.
 """
 from __future__ import annotations
 
@@ -37,7 +47,7 @@ from .aggregation import (
     segmented_cumsum,
     segmented_searchsorted,
 )
-from .events import EdgeEvents
+from .events import EdgeEvents, group_by_edge_csr, ragged_arange
 from .network import RoadNetwork
 from .plan import AtomSet
 
@@ -72,6 +82,14 @@ class DynamicRangeForest:
         self._pend_time: List[np.ndarray] = []
         self._pend_phi: List[np.ndarray] = []
         self._n_pending = 0
+        self._pend_csr = None  # (pend_revision, csr) single-entry cache
+        # mutation epochs: device engines re-pack when these move
+        self.revision = 0  # sealed structure (seal / extend)
+        self.pend_revision = 0  # pending buffers (insert / seal)
+        # QueryStats work counters (TNKDE snapshots + diffs these per query):
+        #   pending — (atom, pending-event-on-its-edge) pairs examined
+        #   partial — (atom, boundary-leaf-event) pairs examined (exact mode)
+        self.counters = {"pending": 0, "partial": 0}
         self._build_level(0)
         for _ in range(depth):
             self.extend()
@@ -91,7 +109,6 @@ class DynamicRangeForest:
 
     def _build_level(self, d: int) -> None:
         E = self.net.n_edges
-        n = self.n_sealed
         counts = np.diff(self.ptr)
         edge_of = np.repeat(np.arange(E, dtype=np.int64), counts)
         node_local = self._node_of(edge_of, self.pos, d)
@@ -108,6 +125,7 @@ class DynamicRangeForest:
         """Extension operation (Algorithm 4): add one depth level, O(N)."""
         self.depth += 1
         self._build_level(self.depth)
+        self.revision += 1
 
     # ------------------------------------------------------------ streaming
     def insert(self, edge: np.ndarray, pos: np.ndarray, time: np.ndarray, phi: np.ndarray):
@@ -122,37 +140,139 @@ class DynamicRangeForest:
         self._pend_time.append(np.asarray(time, np.float64))
         self._pend_phi.append(np.asarray(phi))
         self._n_pending += len(pos)
+        self.pend_revision += 1
         if self._n_pending > max(self.n_sealed, 64) // 4:
             self.seal()
 
-    def seal(self) -> None:
+    def pending_csr(self):
+        """Pending buffers as a per-edge CSR sorted by (edge, time).
+
+        Returns (ptr [E+1], pos, time, phi) or None when nothing is pending.
+        Shared by the host pending scan, the LS dominated path, the device
+        engine's pending upload, and the work accounting — cached on
+        ``pend_revision`` so the sort is paid once per insert, not per use.
+        """
         if not self._n_pending:
-            return
+            return None
+        if self._pend_csr is not None and self._pend_csr[0] == self.pend_revision:
+            return self._pend_csr[1]
         pe = np.concatenate(self._pend_edge)
         pp = np.concatenate(self._pend_pos)
         pt = np.concatenate(self._pend_time)
         pf = np.concatenate(self._pend_phi)
+        ptr, order = group_by_edge_csr(self.net.n_edges, pe, pt)
+        csr = (ptr, pp[order], pt[order], pf[order])
+        self._pend_csr = (self.pend_revision, csr)
+        return csr
+
+    def seal(self) -> None:
+        """Merge pending buffers into the sealed structure, incrementally.
+
+        Only *dirty* edges (with pending events) are re-sorted and
+        re-aggregated; every clean edge's per-level block is copied over
+        verbatim (its node counts are unchanged — position bisection is
+        data-independent), with its ``ev_idx`` rows shifted by the edge's
+        CSR displacement. Cost: O(N) splice copies + O(n_dirty log n_dirty)
+        sort + O(n_dirty · H · K) cumsum, vs O(N · H · K) for a full rebuild.
+        """
+        if not self._n_pending:
+            return
         E = self.net.n_edges
+        pe = np.concatenate(self._pend_edge)
+        pp = np.concatenate(self._pend_pos)
+        pt = np.concatenate(self._pend_time)
+        pf = np.concatenate(self._pend_phi)
+        po = np.lexsort((pt, pe))
+        pe, pp, pt, pf = pe[po], pp[po], pt[po], pf[po]
+
         counts_old = np.diff(self.ptr)
+        pend_counts = np.bincount(pe, minlength=E).astype(np.int64)
+        dirty = pend_counts > 0  # [E]
+        counts_new = counts_old + pend_counts
+        new_ptr = np.zeros(E + 1, dtype=np.int64)
+        np.cumsum(counts_new, out=new_ptr[1:])
+        N_old, N_new = self.n_sealed, int(new_ptr[-1])
         edge_old = np.repeat(np.arange(E, dtype=np.int64), counts_old)
-        edge = np.concatenate([edge_old, pe])
-        pos = np.concatenate([self.pos, pp])
-        time = np.concatenate([self.time, pt])
-        phi = np.concatenate([self.phi, pf], axis=0) if self.phi.size else pf
-        order = np.lexsort((time, edge))
-        self.pos, self.time, self.phi = pos[order], time[order], phi[order]
-        ptr = np.zeros(E + 1, dtype=np.int64)
-        np.add.at(ptr, edge + 1, 1)
-        np.cumsum(ptr, out=ptr)
-        self.ptr = ptr
-        depth = self.depth
-        self.levels = []
-        self.depth = 0
-        self._build_level(0)
-        for _ in range(depth):
-            self.extend()
+        shift = new_ptr[:-1] - self.ptr[:-1]  # [E] per-edge CSR displacement
+        dirty_ev = dirty[edge_old] if N_old else np.zeros(0, bool)
+
+        # ---- merge the sealed base arrays (dirty events + pending only) ----
+        de = np.concatenate([edge_old[dirty_ev], pe])
+        dp = np.concatenate([self.pos[dirty_ev], pp])
+        dt = np.concatenate([self.time[dirty_ev], pt])
+        dphi = np.concatenate([self.phi[dirty_ev], pf]) if self.phi.size else pf
+        dm = np.lexsort((dt, de))  # stable: old-before-pending on time ties
+
+        K_tail = pf.shape[1:]
+        new_pos = np.empty(N_new)
+        new_time = np.empty(N_new)
+        # promote like np.concatenate would — a float32 insert must not
+        # silently downcast the sealed float64 moment history
+        new_phi = np.empty((N_new,) + K_tail, dtype=np.result_type(self.phi.dtype, pf.dtype))
+        old_idx = np.arange(N_old, dtype=np.int64)
+        clean_src = old_idx[~dirty_ev]
+        clean_dst = clean_src + shift[edge_old[~dirty_ev]]
+        new_pos[clean_dst] = self.pos[clean_src]
+        new_time[clean_dst] = self.time[clean_src]
+        if self.phi.size:
+            new_phi[clean_dst] = self.phi[clean_src]
+        d_edges = np.nonzero(dirty)[0]
+        dirty_dst = ragged_arange(new_ptr[d_edges], counts_new[d_edges])
+        new_pos[dirty_dst] = dp[dm]
+        new_time[dirty_dst] = dt[dm]
+        new_phi[dirty_dst] = dphi[dm]
+        # old sealed index -> new sealed index (for per-level ev_idx remap)
+        old_to_new = np.empty(N_old, np.int64)
+        old_to_new[clean_src] = clean_dst
+        src_tag = np.concatenate([old_idx[dirty_ev], np.full(len(pe), -1, np.int64)])
+        tag_s = src_tag[dm]
+        was_old = tag_s >= 0
+        old_to_new[tag_s[was_old]] = dirty_dst[was_old]
+
+        # ---- splice every level: clean blocks copied, dirty rebuilt --------
+        edge_new = np.repeat(np.arange(E, dtype=np.int64), counts_new)
+        new_levels = []
+        eid_range = np.arange(E, dtype=np.int64)
+        for d, (nptr, tms, cum, eidx) in enumerate(self.levels):
+            nb = 1 << d
+            cnt_nodes_old = np.diff(nptr)
+            sel = np.nonzero(dirty[edge_new])[0]  # dirty events, new-array order
+            nl = self._node_of(edge_new[sel], new_pos[sel], d)
+            node_d = edge_new[sel] * nb + nl
+            order_d = np.argsort(node_d, kind="stable")
+            node_counts_dirty = np.bincount(node_d, minlength=E * nb).astype(np.int64)
+            cnt_nodes_new = np.where(np.repeat(dirty, nb), node_counts_dirty, cnt_nodes_old)
+            nptr_new = np.zeros(E * nb + 1, np.int64)
+            np.cumsum(cnt_nodes_new, out=nptr_new[1:])
+            tms_new = np.empty(N_new)
+            cum_new = np.empty((N_new,) + cum.shape[1:], dtype=cum.dtype)
+            eidx_new = np.empty(N_new, np.int64)
+            # clean edges: the whole per-edge block shifts uniformly
+            if N_old:
+                edge_of_slot = edge_old[eidx]
+                lvl_shift = nptr_new[eid_range * nb] - nptr[eid_range * nb]
+                clean_slot = np.nonzero(~dirty[edge_of_slot])[0]
+                dst_clean = clean_slot + lvl_shift[edge_of_slot[clean_slot]]
+                tms_new[dst_clean] = tms[clean_slot]
+                cum_new[dst_clean] = cum[clean_slot]
+                eidx_new[dst_clean] = old_to_new[eidx[clean_slot]]
+            # dirty edges: node-grouped, time-sorted within node, fresh cumsum
+            ev_sorted = sel[order_d]
+            dirty_nodes = np.nonzero(np.repeat(dirty, nb))[0]
+            ddst = ragged_arange(nptr_new[dirty_nodes], cnt_nodes_new[dirty_nodes])
+            tms_new[ddst] = new_time[ev_sorted]
+            eidx_new[ddst] = ev_sorted
+            seg_ptr = np.concatenate([[0], np.cumsum(cnt_nodes_new[dirty_nodes])]).astype(np.int64)
+            cum_new[ddst] = segmented_cumsum(new_phi[ev_sorted], seg_ptr)
+            new_levels.append((nptr_new, tms_new, cum_new, eidx_new))
+
+        self.ptr, self.pos, self.time, self.phi = new_ptr, new_pos, new_time, new_phi
+        self.levels = new_levels
         self._pend_edge, self._pend_pos, self._pend_time, self._pend_phi = [], [], [], []
         self._n_pending = 0
+        self._pend_csr = None
+        self.revision += 1
+        self.pend_revision += 1
 
     # -------------------------------------------------------------- queries
     def eval_atoms(
@@ -171,10 +291,25 @@ class DynamicRangeForest:
         hq = self.depth if h0 is None else min(h0, self.depth)
         qt = (ctx.qt_left(t), ctx.qt_right(t))
         t_bounds = ((t - ctx.b_t, t), (t, t + ctx.b_t))
+        leaf_lo, leaf_hi = self.leaf_range(atoms, hq)
+        out = np.zeros(M)
+        for w in (0, 1):
+            q_full = (atoms.qs[:, :, None] * qt[w][None, :]).reshape(M, -1)
+            combo = atoms.side_feat.astype(np.int64) * 2 + w
+            out += self._decompose(atoms, leaf_lo, leaf_hi, hq, t_bounds[w], combo, q_full, w)
+            if exact_leaf_scan:
+                out += self._scan_partials(
+                    atoms, leaf_lo, leaf_hi, hq, t_bounds[w], combo, q_full, w
+                )
+        if self._n_pending:
+            out += self._scan_pending(atoms, t, qt)
+        return out
+
+    def leaf_range(self, atoms: AtomSet, hq: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Fully-covered leaf range [leaf_lo, leaf_hi) at depth hq, per atom."""
         lens = self.lens[atoms.edge]
         nleaf = 1 << hq
         w_leaf = lens / nleaf
-        # fully-covered leaf range [leaf_lo, leaf_hi) at depth hq
         hi_ok = np.minimum(np.floor(atoms.pos_hi / w_leaf), nleaf).astype(np.int64)
         hi_ok = np.where(atoms.pos_hi >= lens, nleaf, np.maximum(hi_ok, 0))
         lo1 = np.asarray(atoms.pos_lo1, np.float64)
@@ -191,18 +326,7 @@ class DynamicRangeForest:
         lo2_leaf = np.where(np.isfinite(lo2), np.ceil(lo2 / w_leaf), 0).astype(np.int64)
         leaf_lo = np.clip(np.maximum(lo1_leaf, lo2_leaf), 0, nleaf)
         leaf_hi = np.clip(hi_ok, 0, nleaf)
-        out = np.zeros(M)
-        for w in (0, 1):
-            q_full = (atoms.qs[:, :, None] * qt[w][None, :]).reshape(M, -1)
-            combo = atoms.side_feat.astype(np.int64) * 2 + w
-            out += self._decompose(atoms, leaf_lo, leaf_hi, hq, t_bounds[w], combo, q_full, w)
-            if exact_leaf_scan:
-                out += self._scan_partials(
-                    atoms, leaf_lo, leaf_hi, hq, t_bounds[w], combo, q_full, w
-                )
-        if self._n_pending:
-            out += self._scan_pending(atoms, t, qt)
-        return out
+        return leaf_lo, leaf_hi
 
     # canonical decomposition over the leaf range; per emitted node, resolve
     # the time window with two binary searches in that node's time-sorted run.
@@ -258,9 +382,10 @@ class DynamicRangeForest:
         mom = pref(i_hi) - pref(i_lo)
         return np.einsum("mk,mk->m", q_full[idx], mom)
 
-    def _scan_partials(self, atoms, leaf_lo, leaf_hi, hq, tb, combo, q_full, w):
-        """Exact mode: scan the (<= 3) partially covered boundary leaves."""
-        node_ptr, time_s, cum, ev_order = self.levels[hq]
+    def partial_leaf_targets(self, atoms, leaf_lo, leaf_hi, hq):
+        """(idx, node) pairs of the <= 2 partially covered boundary leaves
+        each atom must scan in exact mode, deduplicated. Shared by the host
+        scan and the device engine's work accounting."""
         M = atoms.m
         nleaf = 1 << hq
         lens = self.lens[atoms.edge]
@@ -281,29 +406,47 @@ class DynamicRangeForest:
             np.clip(np.floor(np.maximum(atoms.pos_hi, 0.0) / w_leaf), -1, nleaf - 1),
         ).astype(np.int64)
         cu = np.where(atoms.pos_hi < 0, -1, cu)
-        out = np.zeros(M)
-        pairs = []
         lo_c = np.clip(leaf_lo, 0, nleaf)
         hi_c = np.clip(leaf_hi, 0, nleaf)
         ok_cl = (cl >= 0) & (cl < lo_c)
         # scan cu when it is not inside the fully-covered range; dedup vs cl
         ok_cu = (cu >= 0) & ((cu < lo_c) | (cu >= hi_c)) & ~(ok_cl & (cu == cl))
+        pairs = []
         for leaf, ok in ((cl, ok_cl), (cu, ok_cu)):
             idx = np.nonzero(ok)[0]
             if len(idx):
                 pairs.append((idx, atoms.edge[idx] * nleaf + leaf[idx]))
-        for idx, node in pairs:
+        return pairs
+
+    def partial_scan_pairs(self, atoms, hq) -> int:
+        """Number of (atom, event) pairs one exact-mode boundary scan visits."""
+        leaf_lo, leaf_hi = self.leaf_range(atoms, hq)
+        node_ptr = self.levels[hq][0]
+        total = 0
+        for _, node in self.partial_leaf_targets(atoms, leaf_lo, leaf_hi, hq):
+            total += int((node_ptr[node + 1] - node_ptr[node]).sum())
+        return total
+
+    def pending_scan_pairs(self, atoms) -> int:
+        """Number of (atom, pending-event) pairs one pending scan visits."""
+        if not self._n_pending:
+            return 0
+        pptr = self.pending_csr()[0]
+        return int((pptr[atoms.edge + 1] - pptr[atoms.edge]).sum())
+
+    def _scan_partials(self, atoms, leaf_lo, leaf_hi, hq, tb, combo, q_full, w):
+        """Exact mode: scan the (<= 3) partially covered boundary leaves."""
+        node_ptr, time_s, cum, ev_order = self.levels[hq]
+        out = np.zeros(atoms.m)
+        for idx, node in self.partial_leaf_targets(atoms, leaf_lo, leaf_hi, hq):
             s_lo = node_ptr[node]
             s_hi = node_ptr[node + 1]
             counts = (s_hi - s_lo).astype(np.int64)
+            self.counters["partial"] += int(counts.sum())
             if counts.sum() == 0:
                 continue
             rep_atom = np.repeat(idx, counts)
-            ev = (
-                np.repeat(s_lo, counts)
-                + np.arange(int(counts.sum()))
-                - np.repeat(np.concatenate([[0], np.cumsum(counts)[:-1]]), counts)
-            )
+            ev = ragged_arange(s_lo, counts)
             ev_abs = ev_order[ev]
             p = self.pos[ev_abs]
             te = self.time[ev_abs]
@@ -320,28 +463,15 @@ class DynamicRangeForest:
 
     def _scan_pending(self, atoms, t, qt):
         ctx = self.ctx
-        pe = np.concatenate(self._pend_edge)
-        pp = np.concatenate(self._pend_pos)
-        pt = np.concatenate(self._pend_time)
-        pf = np.concatenate(self._pend_phi)
-        # pending CSR by edge
-        order = np.argsort(pe, kind="stable")
-        pe_s, pp_s, pt_s, pf_s = pe[order], pp[order], pt[order], pf[order]
-        E = self.net.n_edges
-        pptr = np.zeros(E + 1, np.int64)
-        np.add.at(pptr, pe_s + 1, 1)
-        np.cumsum(pptr, out=pptr)
+        pptr, pp_s, pt_s, pf_s = self.pending_csr()
         counts = (pptr[atoms.edge + 1] - pptr[atoms.edge]).astype(np.int64)
         total = int(counts.sum())
+        self.counters["pending"] += total
         out = np.zeros(atoms.m)
         if total == 0:
             return out
         rep_atom = np.repeat(np.arange(atoms.m), counts)
-        ev = (
-            np.repeat(pptr[atoms.edge], counts)
-            + np.arange(total)
-            - np.repeat(np.concatenate([[0], np.cumsum(counts)[:-1]]), counts)
-        )
+        ev = ragged_arange(pptr[atoms.edge], counts)
         ok_pos = _pos_mask(atoms, rep_atom, pp_s[ev])
         for w, (t0, t1) in enumerate(((t - ctx.b_t, t), (t, t + ctx.b_t))):
             q_full = (atoms.qs[:, :, None] * qt[w][None, :]).reshape(atoms.m, -1)
@@ -356,31 +486,65 @@ class DynamicRangeForest:
             np.add.at(out, ra, contrib)
         return out
 
-    # LS support (depth-0 node = whole edge, O(1) per edge)
-    def dominated_moments(self, edges: np.ndarray, t: float, side: int) -> np.ndarray:
+    # ------------------------------------------------- LS support (§6 root)
+    def dominated_moments_multi(self, edges: np.ndarray, ts: np.ndarray, side: int) -> np.ndarray:
+        """LS root-node shortcut, window-batched: M [W, n, k_s] such that
+        F_e(q) = Q_s(d(q, v_side)) · M[w] for a dominated edge (§6.2).
+
+        Covers the **pending buffers** too — a dominated edge's contribution
+        must include unsealed streamed events (depth-0 node = whole edge,
+        O(1) per sealed edge; pending pairs are scanned and counted).
+        """
         ctx = self.ctx
         edges = np.asarray(edges, np.int64)
+        ts = np.asarray(ts, np.float64)
+        n, W = len(edges), len(ts)
         node_ptr, time_s, cum, _ = self.levels[0]
-        qt = (ctx.qt_left(t), ctx.qt_right(t))
-        n = len(edges)
-        M = np.zeros((n, ctx.k_s))
-        for w, (t0, t1) in enumerate(((t - ctx.b_t, t), (t, t + ctx.b_t))):
-            s_lo = node_ptr[edges]
-            s_hi = node_ptr[edges + 1]
-            i_lo = segmented_searchsorted(
-                time_s, s_lo, s_hi, np.full(n, t0), np.full(n, w == 1)
-            )
-            i_hi = segmented_searchsorted(time_s, s_lo, s_hi, np.full(n, t1), np.ones(n, bool))
-            i_hi = np.maximum(i_hi, i_lo)
-            c = np.full(n, side * 2 + w)
+        qt = np.stack(
+            [[ctx.qt_left(t) for t in ts], [ctx.qt_right(t) for t in ts]], axis=1
+        )  # [W, 2, k_t]
+        M = np.zeros((W, n, ctx.k_s))
+        s_lo = np.tile(node_ptr[edges], W)
+        s_hi = np.tile(node_ptr[edges + 1], W)
+        t_rep = np.repeat(ts, n)
+        i_lo = segmented_searchsorted(time_s, s_lo, s_hi, t_rep - ctx.b_t, np.zeros(W * n, bool))
+        i_mid = segmented_searchsorted(time_s, s_lo, s_hi, t_rep, np.ones(W * n, bool))
+        i_hi = segmented_searchsorted(time_s, s_lo, s_hi, t_rep + ctx.b_t, np.ones(W * n, bool))
+
+        for w_half, (r_lo, r_hi) in enumerate(((i_lo, i_mid), (i_mid, i_hi))):
+            c = side * 2 + w_half
+            r_hi = np.maximum(r_hi, r_lo)
 
             def pref(i):
                 v = cum[np.maximum(i - 1, 0), c]
                 return np.where((i > s_lo)[:, None], v, 0.0)
 
-            mom = (pref(i_hi) - pref(i_lo)).reshape(n, ctx.k_s, ctx.k_t)
-            M += mom @ qt[w]
+            mom = (pref(r_hi) - pref(r_lo)).reshape(W, n, ctx.k_s, ctx.k_t)
+            M += np.einsum("wnst,wt->wns", mom, qt[:, w_half])
+
+        if self._n_pending:
+            pptr, _, pt_s, pf_s = self.pending_csr()
+            counts = (pptr[edges + 1] - pptr[edges]).astype(np.int64)
+            total = int(counts.sum())
+            self.counters["pending"] += total * W
+            if total:
+                rep = np.repeat(np.arange(n), counts)
+                ev = ragged_arange(pptr[edges], counts)
+                te = pt_s[ev]
+                for w in range(W):
+                    t = ts[w]
+                    for w_half, (t0, t1) in enumerate(((t - ctx.b_t, t), (t, t + ctx.b_t))):
+                        keep = ((te >= t0) if w_half == 0 else (te > t0)) & (te <= t1)
+                        sel = np.nonzero(keep)[0]
+                        if not len(sel):
+                            continue
+                        mom = pf_s[ev[sel], side * 2 + w_half].reshape(-1, ctx.k_s, ctx.k_t)
+                        np.add.at(M[w], rep[sel], mom @ qt[w, w_half])
         return M
+
+    def dominated_moments(self, edges: np.ndarray, t: float, side: int) -> np.ndarray:
+        """Single-window form of :meth:`dominated_moments_multi`: [n, k_s]."""
+        return self.dominated_moments_multi(edges, np.array([float(t)]), side)[0]
 
 
 def _pos_mask(atoms: AtomSet, rep_atom: np.ndarray, p: np.ndarray) -> np.ndarray:

@@ -12,7 +12,43 @@ import numpy as np
 
 from .network import RoadNetwork
 
-__all__ = ["Events", "EdgeEvents", "group_events_by_edge"]
+__all__ = [
+    "Events",
+    "EdgeEvents",
+    "group_events_by_edge",
+    "group_by_edge_csr",
+    "ragged_arange",
+]
+
+
+def ragged_arange(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Flatten the ragged ranges [starts[i], starts[i]+counts[i]) in order.
+
+    The standard repeat/arange trick every scan path here uses to enumerate
+    per-segment event slots without a Python loop.
+    """
+    counts = np.asarray(counts, np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, np.int64)
+    rep = np.repeat(np.asarray(starts, np.int64), counts)
+    off = np.arange(total, dtype=np.int64) - np.repeat(
+        np.concatenate([[0], np.cumsum(counts)[:-1]]), counts
+    )
+    return rep + off
+
+
+def group_by_edge_csr(n_edges: int, edge: np.ndarray, time: np.ndarray):
+    """CSR (ptr [E+1], order [N]) grouping events by edge, time-sorted within.
+
+    ``order`` permutes the caller's parallel arrays into CSR layout. Shared by
+    the DRFS pending buffers and the device engine's pending upload.
+    """
+    order = np.lexsort((time, edge))
+    ptr = np.zeros(n_edges + 1, dtype=np.int64)
+    np.add.at(ptr, np.asarray(edge, np.int64) + 1, 1)
+    np.cumsum(ptr, out=ptr)
+    return ptr, order
 
 
 @dataclasses.dataclass

@@ -40,7 +40,16 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["FlatForest", "FlatAtoms", "WindowBatch", "eval_atoms_flat"]
+__all__ = [
+    "FlatForest",
+    "FlatAtoms",
+    "WindowBatch",
+    "FlatDynamicForest",
+    "eval_atoms_flat",
+    "eval_atoms_dyn",
+    "dyn_window_tables",
+    "dyn_node_tables",
+]
 
 
 class FlatForest(NamedTuple):
@@ -68,6 +77,35 @@ class FlatAtoms(NamedTuple):
     lo1_right: jnp.ndarray  # [M] bool
     pos_lo2: jnp.ndarray  # [M]
     valid: jnp.ndarray  # [M] bool (padding mask)
+
+
+class FlatDynamicForest(NamedTuple):
+    """Flat position-bisection tree tables for DRFS (see drfs.DynamicRangeForest).
+
+    Level-major packing: level d of the depth-(Lv-1) tree owns the slice
+    [d·Np, d·Np + N) of every per-event table (Np = padded event capacity, so
+    growth by < one size class never recompiles). ``node_ptr`` concatenates
+    the per-level node CSRs (level d contributes E·2^d + 1 entries starting
+    at offset E·(2^d − 1) + d; values are level-local in [0, N]). Events
+    inside a node are time-sorted and carry inclusive prefix sums of Φ, so a
+    query needs no position searches at all — the bisection structure
+    resolves position, and only the *time* boundaries are binary-searched,
+    once per (window, leaf node) in :func:`dyn_window_tables`.
+
+    The pending (unsealed) buffers ride along as a per-edge CSR sorted by
+    (edge, time); queries scan them with a masked fixed-trip loop so
+    ``insert -> query`` never waits for a rebuild.
+    """
+
+    time_lvl: jnp.ndarray  # [Lv*Np] per-node time-sorted event times (+inf pad)
+    pos_lvl: jnp.ndarray  # [Lv*Np] event positions, same order
+    cum_lvl: jnp.ndarray  # [Lv*Np, 4, K] per-node inclusive prefix moments
+    node_ptr: jnp.ndarray  # [sum_d E*2^d + Lv] concatenated per-level node CSRs
+    edge_len: jnp.ndarray  # [E]
+    pend_ptr: jnp.ndarray  # [E+1] pending CSR by edge
+    pend_pos: jnp.ndarray  # [Pp]
+    pend_time: jnp.ndarray  # [Pp]
+    pend_phi: jnp.ndarray  # [Pp, 4, K]
 
 
 class WindowBatch(NamedTuple):
@@ -306,6 +344,348 @@ def _engine_cascade(forest, atoms, wb, *, max_levels, search_steps):
     val_l = _contract((mom[1] - mom[0])[..., :K], atoms, wb, wb.qt[0::2])
     val_r = _contract((mom[2] - mom[1])[..., K:], atoms, wb, wb.qt[1::2])
     return jnp.stack([val_l, val_r], axis=1).reshape(Wh, M)
+
+
+# ===================================================================== DRFS
+def _dyn_leaf_range(forest, atoms, hq: int):
+    """Fully-covered leaf range [leaf_lo, leaf_hi) at depth hq: [M] i32 each.
+
+    Mirrors drfs.DynamicRangeForest.leaf_range, with min/max/clip done in the
+    float domain *before* the int cast so the ±inf pads of invalid atoms
+    collapse to empty ranges instead of tripping undefined float->int casts.
+    """
+    lens = forest.edge_len[atoms.edge]
+    nleaf = 1 << hq
+    w_leaf = lens / nleaf
+    hi_ok = jnp.minimum(jnp.floor(atoms.pos_hi / w_leaf), nleaf)
+    hi_ok = jnp.where(atoms.pos_hi >= lens, float(nleaf), jnp.maximum(hi_ok, 0.0))
+    lo1, lo2 = atoms.pos_lo1, atoms.pos_lo2
+    lo1_leaf = jnp.where(
+        jnp.isfinite(lo1),
+        jnp.where(
+            atoms.lo1_right,
+            jnp.floor(lo1 / w_leaf) + 1.0,  # need leaf start strictly > lo1
+            jnp.ceil(lo1 / w_leaf),
+        ),
+        0.0,
+    )
+    lo2_leaf = jnp.where(jnp.isfinite(lo2), jnp.ceil(lo2 / w_leaf), 0.0)
+    leaf_lo = jnp.clip(jnp.maximum(lo1_leaf, lo2_leaf), 0.0, float(nleaf))
+    leaf_hi = jnp.clip(hi_ok, 0.0, float(nleaf))
+    return leaf_lo.astype(jnp.int32), leaf_hi.astype(jnp.int32)
+
+
+def _dyn_pos_mask(atoms, p):
+    """Event-position acceptance against the atom's three bounds: [M] bool."""
+    lo1_ok = jnp.where(atoms.lo1_right, p > atoms.pos_lo1, p >= atoms.pos_lo1)
+    return (p <= atoms.pos_hi) & lo1_ok & (p >= atoms.pos_lo2)
+
+
+def _dyn_boundaries(wb: WindowBatch):
+    """(t_b [3, W], right_b [3, W]): the (lo, mid, hi) time boundaries per
+    window center — mid is shared by both halves, so W centers carry 3 rank
+    boundaries instead of 4 (the paired ``make_window_batch`` layout)."""
+    W = wb.t_lo.shape[0] // 2
+    t_b = jnp.stack([wb.t_lo[0::2], wb.t_hi[0::2], wb.t_hi[1::2]])
+    right_b = jnp.stack(
+        [jnp.zeros((W,), bool), jnp.ones((W,), bool), jnp.ones((W,), bool)]
+    )
+    return t_b, right_b
+
+
+def dyn_window_tables(
+    forest: FlatDynamicForest,
+    wb: WindowBatch,
+    *,
+    n_levels: int,
+    hq: int,
+    search_steps: int,
+):
+    """Per-(window, leaf-node) aggregates, prefix-summed along each edge.
+
+    The key hoist of the dynamic engine (DESIGN.md §5): the time boundaries
+    depend only on the *window*, and the bisection tree's leaves at depth hq
+    partition every edge, so the window-restricted moment of each leaf can be
+    resolved ONCE per query — per (boundary, window, leaf) binary search +
+    prefix gather over the leaf's time-sorted run, already contracted with
+    the temporal query vector q_t — and prefix-summed along the leaf axis of
+    each edge. An atom's fully-covered range then costs two O(1) gathers
+    (``Lcum[leaf_hi] − Lcum[leaf_lo]``) instead of a per-atom tree walk with
+    per-node time searches: all O(log)-factor work scales with the *node
+    count* E·2^hq, not with atoms × windows.
+
+    Returns lcum [W, E·(nleaf+1)·2, 2K]: per (window, leaf-prefix, side) the
+    raw paired moment vector [K left-half | K right-half]. Staying in raw Φ
+    space (q_t applied only after the caller differences two prefixes) keeps
+    the prefix magnitudes at the event scale — the same association the
+    NumPy path's per-node prefix scheme uses — so the leaf-prefix shortcut
+    costs no precision even for kernels with large alternating q_t entries.
+    """
+    Wh = wb.t_lo.shape[0]
+    W = Wh // 2
+    K = forest.cum_lvl.shape[-1]
+    Np = forest.time_lvl.shape[0] // n_levels
+    E = forest.pend_ptr.shape[0] - 1
+    nleaf = 1 << hq
+    NL = E * nleaf
+    pb = E * (nleaf - 1) + hq  # node_ptr offset of level hq's CSR block
+    s_lo = (hq * Np + forest.node_ptr[pb : pb + NL]).astype(jnp.int32)
+    s_hi = (hq * Np + forest.node_ptr[pb + 1 : pb + NL + 1]).astype(jnp.int32)
+    t_b, right_b = _dyn_boundaries(wb)
+    i_b = _seg_search(
+        forest.time_lvl,
+        jnp.broadcast_to(s_lo[None, None], (3, W, NL)),
+        jnp.broadcast_to(s_hi[None, None], (3, W, NL)),
+        jnp.broadcast_to(t_b[..., None], (3, W, NL)),
+        jnp.broadcast_to(right_b[..., None], (3, W, NL)),
+        search_steps,
+    )  # [3, W, NL]
+
+    def pref(i):
+        v = forest.cum_lvl[jnp.maximum(i - 1, 0)]  # [3, W, NL, 4, K]
+        return jnp.where((i > s_lo[None, None])[..., None, None], v, 0.0)
+
+    p = pref(i_b)
+    # per-leaf window moments, paired per side: [.., side] = [K left | K right]
+    left = (p[1] - p[0])[..., 0::2, :]  # [W, NL, 2, K] combos (ψ·left)
+    right = (p[2] - p[1])[..., 1::2, :]  # combos (ψ·right)
+    lv = jnp.concatenate([left, right], axis=-1)  # [W, NL, 2, 2K]
+    # per-edge inclusive leaf prefix with a leading zero row, flattened to
+    # [W, E*(nleaf+1)*2, 2K] for one-gather addressing
+    cum = lv.reshape(W, E, nleaf, 2, 2 * K)
+    cum = jnp.cumsum(cum, axis=2)
+    cum = jnp.concatenate([jnp.zeros_like(cum[:, :, :1]), cum], axis=2)
+    return cum.reshape(W, E * (nleaf + 1) * 2, 2 * K)
+
+
+def dyn_node_tables(
+    forest: FlatDynamicForest,
+    wb: WindowBatch,
+    *,
+    n_levels: int,
+    hq: int,
+    steps_per_level: tuple,
+):
+    """q_t-contracted window moments of EVERY tree node up to depth hq.
+
+    The exact-mode companion of :func:`dyn_window_tables`: instead of one
+    leaf-level prefix, resolve each node's time window in its own run — per
+    (boundary, window, node) binary search with per-level trip counts — and
+    fold q_t immediately. The per-atom canonical walk then gathers these
+    node-local values, so the floating-point association mirrors the NumPy
+    node decomposition (node-scale rounding, not whole-edge-prefix scale) —
+    that locality is what holds the ≤1e-12 cross-engine agreement even for
+    kernels with large alternating q_t entries.
+
+    Returns (vl, vr), each [W, TN·2, k_s] with TN = E·(2^{hq+1}−1); node
+    (d, e, i) lives at flat index (E·(2^d−1) + e·2^d + i)·2 + side.
+    """
+    Wh = wb.t_lo.shape[0]
+    W = Wh // 2
+    K = forest.cum_lvl.shape[-1]
+    Np = forest.time_lvl.shape[0] // n_levels
+    E = forest.pend_ptr.shape[0] - 1
+    k_t = wb.qt.shape[1]
+    k_s = K // k_t
+    t_b, right_b = _dyn_boundaries(wb)
+    qtl, qtr = wb.qt[0::2], wb.qt[1::2]
+    parts_l, parts_r = [], []
+    for d in range(hq + 1):
+        NL = E << d
+        pb = E * ((1 << d) - 1) + d
+        s_lo = (d * Np + forest.node_ptr[pb : pb + NL]).astype(jnp.int32)
+        s_hi = (d * Np + forest.node_ptr[pb + 1 : pb + NL + 1]).astype(jnp.int32)
+        i_b = _seg_search(
+            forest.time_lvl,
+            jnp.broadcast_to(s_lo[None, None], (3, W, NL)),
+            jnp.broadcast_to(s_hi[None, None], (3, W, NL)),
+            jnp.broadcast_to(t_b[..., None], (3, W, NL)),
+            jnp.broadcast_to(right_b[..., None], (3, W, NL)),
+            int(steps_per_level[d]),
+        )
+
+        def pref(i, lo=s_lo):
+            v = forest.cum_lvl[jnp.maximum(i - 1, 0)]
+            return jnp.where((i > lo[None, None])[..., None, None], v, 0.0)
+
+        p = pref(i_b)
+        left = (p[1] - p[0])[..., 0::2, :].reshape(W, NL, 2, k_s, k_t)
+        right = (p[2] - p[1])[..., 1::2, :].reshape(W, NL, 2, k_s, k_t)
+        parts_l.append(jnp.einsum("wncst,wt->wncs", left, qtl))
+        parts_r.append(jnp.einsum("wncst,wt->wncs", right, qtr))
+    vl = jnp.concatenate(parts_l, axis=1)  # [W, TN, 2, k_s]
+    vr = jnp.concatenate(parts_r, axis=1)
+    TN = vl.shape[1]
+    return vl.reshape(W, TN * 2, k_s), vr.reshape(W, TN * 2, k_s)
+
+
+def eval_atoms_dyn(
+    forest: FlatDynamicForest,
+    atoms: FlatAtoms,
+    wb: WindowBatch,
+    tables,
+    *,
+    n_levels: int,
+    hq: int,
+    scan_steps: int,
+    pend_steps: int,
+    exact: bool,
+) -> jnp.ndarray:
+    """DRFS per-atom aggregate for every half-window: [Wh, M].
+
+    Same contract as :func:`eval_atoms_flat` (callers fold the two halves of
+    each window center and scatter onto lixels; requires the paired
+    ``make_window_batch`` row layout). Three phases, all window-batched:
+
+      1. the fully-covered leaf range [leaf_lo, leaf_hi) at depth ``hq``.
+         Quantized mode: two gathers into the per-edge leaf prefix tables
+         (``tables`` = the :func:`dyn_window_tables` result). Exact mode:
+         the canonical <= 2-nodes-per-level walk gathering the node-local
+         values of :func:`dyn_node_tables` (``tables`` = (vl, vr)) — same
+         node set and rounding locality as the NumPy decomposition;
+      2. ``exact`` mode: the <= 2 partially covered boundary leaves are
+         scanned with a fixed-trip masked loop (``scan_steps`` = max leaf
+         occupancy) — the beyond-paper exactness path;
+      3. pending (unsealed) events: a masked per-edge CSR scan
+         (``pend_steps`` = max per-edge pending count), so streaming inserts
+         are visible to queries without any rebuild.
+    """
+    Wh = wb.t_lo.shape[0]
+    W = Wh // 2
+    M = atoms.edge.shape[0]
+    K = forest.cum_lvl.shape[-1]
+    Np = forest.time_lvl.shape[0] // n_levels
+    E = forest.pend_ptr.shape[0] - 1
+    eid = atoms.edge.astype(jnp.int32)
+    side = atoms.side_feat.astype(jnp.int32)
+    nleaf = 1 << hq
+    t_b, _ = _dyn_boundaries(wb)
+    cum2 = forest.cum_lvl.reshape(-1, 2, 2 * K)  # [i, side] = [K left | K right]
+
+    # ---- phase 1: fully-covered leaf range [leaf_lo, leaf_hi) -------------
+    leaf_lo, leaf_hi = _dyn_leaf_range(forest, atoms, hq)
+    leaf_hi = jnp.maximum(leaf_hi, leaf_lo)
+    # scan phases accumulate raw Φ moments (q_t applied at the end)
+    mom_l = jnp.zeros((W, M, K), forest.cum_lvl.dtype)
+    mom_r = jnp.zeros((W, M, K), forest.cum_lvl.dtype)
+    k_s = atoms.qs.shape[1]
+    if exact:
+        vl, vr = tables
+        acc_l = jnp.zeros((W, M, k_s), vl.dtype)
+        acc_r = jnp.zeros((W, M, k_s), vl.dtype)
+
+        def node_val(d, b, on, acc_l, acc_r):
+            nb = jnp.left_shift(jnp.int32(1), d)
+            nid = (E * (nb - 1) + eid * nb + jnp.clip(b, 0, nb - 1)) * 2 + side
+            onz = on[None, :, None]
+            acc_l = acc_l + jnp.where(onz, vl[:, nid], 0.0)
+            acc_r = acc_r + jnp.where(onz, vr[:, nid], 0.0)
+            return acc_l, acc_r
+
+        def level_body(lev, state):
+            l, r, acc_l, acc_r = state
+            d = jnp.int32(hq) - lev.astype(jnp.int32)
+            active = l < r
+            emit_l = active & ((l & 1) == 1)
+            acc_l, acc_r = node_val(d, l, emit_l, acc_l, acc_r)
+            l = jnp.where(emit_l, l + 1, l)
+            emit_r = (l < r) & ((r & 1) == 1)
+            acc_l, acc_r = node_val(d, r - 1, emit_r, acc_l, acc_r)
+            r = jnp.where(emit_r, r - 1, r)
+            return l >> 1, r >> 1, acc_l, acc_r
+
+        _, _, acc_l, acc_r = jax.lax.fori_loop(
+            0, hq + 1, level_body, (leaf_lo, leaf_hi, acc_l, acc_r)
+        )
+    else:
+        (lcum,) = tables
+        base = eid * ((nleaf + 1) * 2) + side
+        tree = lcum[:, base + leaf_hi * 2] - lcum[:, base + leaf_lo * 2]
+        mom_l = mom_l + tree[..., :K]  # [W, M, 2K] paired halves
+        mom_r = mom_r + tree[..., K:]
+
+    def masked_event_scan(mom_l, mom_r, s_lo, s_hi, on, times, poss, steps, prefix):
+        """Fixed-trip scan of the per-atom runs [s_lo, s_hi), masked by on.
+
+        ``prefix`` selects how Φ rows are recovered: True differenced from
+        the inclusive per-node prefix table (sealed levels), False gathered
+        raw (pending buffer)."""
+        table = cum2 if prefix else forest.pend_phi.reshape(-1, 2, 2 * K)
+
+        def body(j, ms):
+            ml, mr = ms
+            i = s_lo + j
+            valid = on & (i < s_hi)
+            idx = jnp.where(valid, i, 0)
+            te = times[idx]
+            p = poss[idx]
+            row = table[idx, side]  # [M, 2K]
+            if prefix:
+                prev = jnp.where(j > 0, table[jnp.maximum(idx - 1, 0), side], 0.0)
+                row = row - prev  # per-event Φ from the inclusive prefix rows
+            keep = valid & _dyn_pos_mask(atoms, p)
+            m_l = (te[None] >= t_b[0][:, None]) & (te[None] <= t_b[1][:, None])
+            m_r = (te[None] > t_b[1][:, None]) & (te[None] <= t_b[2][:, None])
+            ml = ml + jnp.where((m_l & keep[None])[..., None], row[None, :, :K], 0.0)
+            mr = mr + jnp.where((m_r & keep[None])[..., None], row[None, :, K:], 0.0)
+            return ml, mr
+
+        return jax.lax.fori_loop(0, steps, body, (mom_l, mom_r))
+
+    # ---- phase 2 (exact mode): partially covered boundary leaves ----------
+    if exact and scan_steps > 0:
+        lens = forest.edge_len[atoms.edge]
+        w_leaf = lens / nleaf
+        pb = E * (nleaf - 1) + hq
+        lo_eff = jnp.maximum(
+            jnp.where(jnp.isfinite(atoms.pos_lo1), atoms.pos_lo1, -jnp.inf),
+            jnp.where(jnp.isfinite(atoms.pos_lo2), atoms.pos_lo2, -jnp.inf),
+        )
+        cl = jnp.where(
+            jnp.isfinite(lo_eff),
+            jnp.clip(jnp.floor(lo_eff / w_leaf), 0.0, nleaf - 1.0),
+            -1.0,
+        ).astype(jnp.int32)
+        cu_f = jnp.clip(jnp.floor(jnp.maximum(atoms.pos_hi, 0.0) / w_leaf), -1.0, nleaf - 1.0)
+        cu = jnp.where(
+            (atoms.pos_hi >= lens) | (atoms.pos_hi < 0), -1.0, cu_f
+        ).astype(jnp.int32)
+        ok_cl = (cl >= 0) & (cl < leaf_lo)
+        ok_cu = (cu >= 0) & ((cu < leaf_lo) | (cu >= leaf_hi)) & ~(ok_cl & (cu == cl))
+        for leaf, ok in ((cl, ok_cl), (cu, ok_cu)):
+            pidx = pb + eid * nleaf + jnp.clip(leaf, 0, nleaf - 1)
+            s_lo = (hq * Np + forest.node_ptr[pidx]).astype(jnp.int32)
+            s_hi = (hq * Np + forest.node_ptr[pidx + 1]).astype(jnp.int32)
+            mom_l, mom_r = masked_event_scan(
+                mom_l, mom_r, s_lo, s_hi, ok,
+                forest.time_lvl, forest.pos_lvl, scan_steps, True,
+            )
+
+    # ---- phase 3: pending (unsealed) events -------------------------------
+    if pend_steps > 0:
+        p_lo = forest.pend_ptr[atoms.edge].astype(jnp.int32)
+        p_hi = forest.pend_ptr[atoms.edge + 1].astype(jnp.int32)
+        mom_l, mom_r = masked_event_scan(
+            mom_l, mom_r, p_lo, p_hi, jnp.ones((M,), bool),
+            forest.pend_time, forest.pend_pos, pend_steps, False,
+        )
+
+    # ---- contraction with the factored query ------------------------------
+    k_t = wb.qt.shape[1]
+    val_l = jnp.einsum(
+        "wmst,ms,wt->wm", mom_l.reshape(W, M, k_s, k_t), atoms.qs, wb.qt[0::2]
+    )
+    val_r = jnp.einsum(
+        "wmst,ms,wt->wm", mom_r.reshape(W, M, k_s, k_t), atoms.qs, wb.qt[1::2]
+    )
+    if exact:
+        # elementwise multiply-reduce, NOT einsum: the GEMM einsum lowers to
+        # is not row-deterministic across the w batch on CPU XLA, which would
+        # make duplicate window centers differ by an ulp
+        val_l = val_l + (acc_l * atoms.qs[None]).sum(-1)
+        val_r = val_r + (acc_r * atoms.qs[None]).sum(-1)
+    out = jnp.stack([val_l, val_r], axis=1).reshape(Wh, M)
+    return jnp.where(atoms.valid[None, :], out, 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("max_levels", "search_steps", "cascade"))

@@ -33,6 +33,7 @@ __all__ = [
     "lemma61_argmax",
     "add_arithmetic",
     "dominated_contribution",
+    "dominated_sweep",
     "recover_from_diff2",
 ]
 
@@ -125,6 +126,42 @@ def add_arithmetic(
 
 def recover_from_diff2(diff2: np.ndarray, l_a: int) -> np.ndarray:
     return np.cumsum(np.cumsum(diff2))[:l_a]
+
+
+def dominated_sweep(F, index, ctx, dominated_work, ts) -> None:
+    """Apply every deferred dominated edge's contribution to F [W, L].
+
+    One batched ``dominated_moments`` sweep per side covers *all* windows
+    (the rank searches and prefix gathers for the W windows share one pass —
+    ``dominated_moments_multi`` when the index provides it, and the DRFS
+    implementation includes unsealed pending events); only the O(1)-per-edge
+    Δ² accumulation stays per window. ``dominated_work`` holds
+    (geom, side, candidate-column) triples collected during planning.
+    """
+    ts_arr = np.asarray(ts, dtype=np.float64)
+    W = len(ts_arr)
+    dm_multi = getattr(index, "dominated_moments_multi", None)
+    for side in (0, 1):
+        items = [(g, cols) for g, s, cols in dominated_work if s == side]
+        if not items:
+            continue
+        all_edges = np.concatenate([g.cand[cols] for g, cols in items])
+        offs = np.cumsum([0] + [len(c) for _, c in items])
+        M_multi = (
+            dm_multi(all_edges, ts_arr, side)
+            if dm_multi is not None
+            else np.stack([index.dominated_moments(all_edges, t, side) for t in ts_arr])
+        )  # [W, n_edges, k_s]
+        for w in range(W):
+            M_all = M_multi[w]
+            for (g, cols), lo, hi in zip(items, offs[:-1], offs[1:]):
+                l_a = g.x.shape[0]
+                diff2 = np.zeros(l_a + 2)
+                direct = np.zeros(l_a)
+                dominated_contribution(g, ctx, side, cols, M_all[lo:hi], diff2, direct)
+                F[w, g.lix_base : g.lix_base + l_a] += (
+                    recover_from_diff2(diff2, l_a) + direct
+                )
 
 
 def dominated_contribution(

@@ -48,7 +48,12 @@ from .events import EdgeEvents
 from .network import RoadNetwork
 from .plan import AtomSet
 
-__all__ = ["RangeForest", "FlatForestEngine", "make_window_batch"]
+__all__ = [
+    "RangeForest",
+    "FlatForestEngine",
+    "FlatDynamicEngine",
+    "make_window_batch",
+]
 
 
 class RangeForest:
@@ -450,7 +455,69 @@ def _get_flush():
     return _JIT_FLUSH
 
 
-class FlatForestEngine:
+class _DeviceEngine:
+    """Shared device plumbing for the flat query engines: window batches,
+    the device-resident [L, W] heatmap, atom padding, and the final
+    device->host transfer. Subclasses own the index packing and flush."""
+
+    def _init_jax(self):
+        import jax
+        import jax.numpy as jnp
+
+        self._jax = jax
+        self._jnp = jnp
+
+    def window_batch(self, ctx: MomentContext, ts):
+        from .jax_engine import WindowBatch
+
+        t_lo, t_hi, lo_right, half, qt = make_window_batch(ctx, ts)
+        jnp = self._jnp
+        with self._jax.experimental.enable_x64():
+            return WindowBatch(
+                t_lo=jnp.asarray(t_lo),
+                t_hi=jnp.asarray(t_hi),
+                lo_right=jnp.asarray(lo_right),
+                half=jnp.asarray(half),
+                qt=jnp.asarray(qt),
+            )
+
+    def new_heatmap(self, n_lixels: int, n_windows: int):
+        with self._jax.experimental.enable_x64():
+            return self._jnp.zeros((n_lixels, n_windows))
+
+    def _pad_atoms(self, atoms: AtomSet, sel: np.ndarray):
+        """Pad the selected atoms to their ⅛-octave size class: FlatAtoms."""
+        from .jax_engine import FlatAtoms
+
+        jnp = self._jnp
+        m = len(sel)
+        mp = _size_class(m)
+
+        def pad(x, fill=0):
+            out = np.full((mp,) + x.shape[1:], fill, x.dtype)
+            out[:m] = x[sel]
+            return out
+
+        valid = np.zeros(mp, bool)
+        valid[:m] = True
+        return FlatAtoms(
+            lixel=jnp.asarray(pad(atoms.lixel)),
+            edge=jnp.asarray(pad(atoms.edge)),
+            side_feat=jnp.asarray(pad(atoms.side_feat.astype(np.int32))),
+            qs=jnp.asarray(pad(atoms.qs)),
+            pos_hi=jnp.asarray(pad(atoms.pos_hi, -np.inf)),
+            pos_lo1=jnp.asarray(pad(atoms.pos_lo1, np.inf)),
+            lo1_right=jnp.asarray(pad(atoms.lo1_right, False)),
+            pos_lo2=jnp.asarray(pad(atoms.pos_lo2, np.inf)),
+            valid=jnp.asarray(valid),
+        )
+
+    def to_numpy(self, heat) -> np.ndarray:
+        """Device [L, W] heatmap → host [W, L] float64."""
+        return np.asarray(heat, dtype=np.float64).T
+
+
+class FlatForestEngine(_DeviceEngine):
     """Device-resident window-batched query engine over a built RangeForest.
 
     Solves the multiple-temporal-KDE hot loop (§8.2) on the accelerator: the
@@ -461,13 +528,11 @@ class FlatForestEngine:
     """
 
     def __init__(self, rf: RangeForest):
-        import jax
-        import jax.numpy as jnp
+        self._init_jax()
+        jax = self._jax
+        jnp = self._jnp
 
         from .jax_engine import FlatForest
-
-        self._jax = jax
-        self._jnp = jnp
         self.rf = rf
         self.max_levels = max(rf.max_levels, 1)
         npmax = max(int(rf.n_pad.max(initial=1)), 1)
@@ -498,25 +563,7 @@ class FlatForestEngine:
         )
 
     # ------------------------------------------------------------ per query
-    def window_batch(self, ctx: MomentContext, ts):
-        from .jax_engine import WindowBatch
-
-        t_lo, t_hi, lo_right, half, qt = make_window_batch(ctx, ts)
-        jnp = self._jnp
-        with self._jax.experimental.enable_x64():
-            return WindowBatch(
-                t_lo=jnp.asarray(t_lo),
-                t_hi=jnp.asarray(t_hi),
-                lo_right=jnp.asarray(lo_right),
-                half=jnp.asarray(half),
-                qt=jnp.asarray(qt),
-            )
-
-    def new_heatmap(self, n_lixels: int, n_windows: int):
-        with self._jax.experimental.enable_x64():
-            return self._jnp.zeros((n_lixels, n_windows))
-
-    def flush(self, heat, atoms: AtomSet, wb, *, cascade: bool = True):
+    def flush(self, heat, atoms: AtomSet, wb, *, cascade: bool = True, **_):
         """heat[L, W] += window-batched contributions of one atom block.
 
         Atoms are partitioned into LEVEL classes (by their event edge's tree
@@ -524,37 +571,14 @@ class FlatForestEngine:
         the deepest edge's level count — each class is a separate jit entry
         with its own static ``max_levels``.
         """
-        from .jax_engine import FlatAtoms
-
-        jnp = self._jnp
         if atoms.m == 0:
             return heat
         nl = self.rf.n_levels[atoms.edge]
         cls = np.minimum(-(-nl // 3) * 3, self.max_levels).astype(np.int64)
         for c in np.unique(cls):
             sel = np.nonzero(cls == c)[0]
-            m = len(sel)
-            mp = _size_class(m)
-
-            def pad(x, fill=0):
-                out = np.full((mp,) + x.shape[1:], fill, x.dtype)
-                out[:m] = x[sel]
-                return out
-
-            valid = np.zeros(mp, bool)
-            valid[:m] = True
             with self._jax.experimental.enable_x64():
-                fa = FlatAtoms(
-                    lixel=jnp.asarray(pad(atoms.lixel)),
-                    edge=jnp.asarray(pad(atoms.edge)),
-                    side_feat=jnp.asarray(pad(atoms.side_feat.astype(np.int32))),
-                    qs=jnp.asarray(pad(atoms.qs)),
-                    pos_hi=jnp.asarray(pad(atoms.pos_hi, -np.inf)),
-                    pos_lo1=jnp.asarray(pad(atoms.pos_lo1, np.inf)),
-                    lo1_right=jnp.asarray(pad(atoms.lo1_right, False)),
-                    pos_lo2=jnp.asarray(pad(atoms.pos_lo2, np.inf)),
-                    valid=jnp.asarray(valid),
-                )
+                fa = self._pad_atoms(atoms, sel)
                 heat = _get_flush()(
                     self.forest, fa, wb, heat,
                     max_levels=int(c),
@@ -563,6 +587,238 @@ class FlatForestEngine:
                 )
         return heat
 
-    def to_numpy(self, heat) -> np.ndarray:
-        """Device [L, W] heatmap → host [W, L] float64."""
-        return np.asarray(heat, dtype=np.float64).T
+
+# ------------------------------------------------------------------- DRFS
+_JIT_DYN = None  # persistent dynamic-engine jit cache: (tables, flush) pair.
+# Keyed on the (size class, Wh, L, Np·Lv) shapes plus the static (n_levels,
+# hq, search/scan/pend trip counts, exact) — steady-state streaming never
+# recompiles because Np / Pp are padded to size classes and trip counts to
+# powers of two.
+
+
+def _get_dyn():
+    global _JIT_DYN
+    if _JIT_DYN is None:
+        import functools
+
+        import jax
+
+        from .jax_engine import dyn_node_tables, dyn_window_tables, eval_atoms_dyn
+
+        leaf_tables = functools.partial(
+            jax.jit, static_argnames=("n_levels", "hq", "search_steps")
+        )(dyn_window_tables)
+        node_tables = functools.partial(
+            jax.jit, static_argnames=("n_levels", "hq", "steps_per_level")
+        )(dyn_node_tables)
+
+        @functools.partial(
+            jax.jit,
+            static_argnames=("n_levels", "hq", "scan_steps", "pend_steps", "exact"),
+        )
+        def _flush(forest, fa, wb, tables, heat, *, n_levels, hq,
+                   scan_steps, pend_steps, exact):
+            vals = eval_atoms_dyn(
+                forest, fa, wb, tables,
+                n_levels=n_levels, hq=hq,
+                scan_steps=scan_steps, pend_steps=pend_steps, exact=exact,
+            )  # [Wh, Mpad]
+            W = heat.shape[1]
+            per_win = vals.reshape(W, 2, -1).sum(axis=1)  # fold window halves
+            return heat.at[fa.lixel].add(per_win.T)  # scatter onto [L, W]
+
+        _JIT_DYN = (leaf_tables, node_tables, _flush)
+    return _JIT_DYN
+
+
+class FlatDynamicEngine(_DeviceEngine):
+    """Device-resident streaming query engine over a DynamicRangeForest.
+
+    Promotes DRFS (§5) to the accelerator: the implicit position-bisection
+    tree is packed level-major into flat device tables (DESIGN.md §5) and
+    every flush answers all W windows in one jit'd call, exactly like
+    :class:`FlatForestEngine` for the static forest. Streaming mutations stay
+    on the host (drfs.py); this adapter re-packs **lazily**, keyed on the
+    forest's ``revision`` / ``pend_revision`` epochs:
+
+      * ``insert`` only bumps ``pend_revision`` — the next flush re-uploads
+        the (small) pending CSR and queries see the new events through the
+        device-side masked pending scan. No tree work at all.
+      * ``seal`` / ``extend`` bump ``revision`` — the host repacks only the
+        dirtied edges (drfs.seal is incremental) and the next flush uploads
+        the new level tables. Event capacity is padded to an ⅛-octave size
+        class, so steady-state growth re-uploads but never recompiles.
+
+    Both the quantized-H₀ mode (partial boundary leaves dropped, paper §5.2)
+    and the beyond-paper ``exact_leaf_scan`` mode run on device; work done by
+    the pending and boundary-leaf scans is accounted into the forest's
+    QueryStats counters host-side (same units as the NumPy path).
+    """
+
+    def __init__(self, df):
+        self._init_jax()
+        self.df = df
+        self._rev = None
+        self._pend_rev = None
+        self._tab_cache = None  # (wb, revision, hq) -> leaf prefix tables
+        self.device_bytes = 0
+        self.refresh()
+        self.refresh_pending()
+
+    # ----------------------------------------------------------- packing
+    def refresh(self) -> None:
+        """Re-pack the sealed level tables if the forest structure moved."""
+        df = self.df
+        key = (df.revision, df.depth)
+        if self._rev == key:
+            return
+        jnp = self._jnp
+        E = df.net.n_edges
+        N = df.n_sealed
+        Lv = df.depth + 1
+        K = df.ctx.K
+        Np = _size_class(max(N, 1))
+        time_lvl = np.full(Lv * Np, np.inf)
+        pos_lvl = np.full(Lv * Np, np.inf)
+        cum_lvl = np.zeros((Lv * Np, N_COMBOS, K))
+        ptr_parts = []
+        max_occ = np.zeros(Lv, np.int64)
+        for d, (nptr, tms, cum, eidx) in enumerate(df.levels):
+            time_lvl[d * Np : d * Np + N] = tms
+            pos_lvl[d * Np : d * Np + N] = df.pos[eidx]
+            cum_lvl[d * Np : d * Np + N] = cum
+            ptr_parts.append(nptr)
+            max_occ[d] = int(np.diff(nptr).max(initial=0))
+        node_ptr = np.concatenate(ptr_parts).astype(np.int32)
+        self._max_occ = max_occ
+        self.n_levels = Lv
+        with self._jax.experimental.enable_x64():
+            self._sealed = dict(
+                time_lvl=jnp.asarray(time_lvl),
+                pos_lvl=jnp.asarray(pos_lvl),
+                cum_lvl=jnp.asarray(cum_lvl),
+                node_ptr=jnp.asarray(node_ptr),
+                edge_len=jnp.asarray(df.lens.astype(np.float64)),
+            )
+        self.device_bytes = time_lvl.nbytes + pos_lvl.nbytes + cum_lvl.nbytes + node_ptr.nbytes
+        self._rev = key
+        self._tab_cache = None
+
+    def refresh_pending(self) -> None:
+        """Re-upload the pending CSR if inserts landed since the last flush."""
+        df = self.df
+        if self._pend_rev == df.pend_revision:
+            return
+        jnp = self._jnp
+        E = df.net.n_edges
+        K = df.ctx.K
+        csr = df.pending_csr()
+        if csr is None:
+            pptr = np.zeros(E + 1, np.int64)
+            pp = np.zeros(1)
+            pt = np.full(1, np.inf)
+            pf = np.zeros((1, N_COMBOS, K))
+            self.pend_steps = 0
+        else:
+            pptr, pp, pt, pf = csr
+            Pp = _size_class(len(pp), floor=64)
+            pad = Pp - len(pp)
+            if pad:
+                pp = np.concatenate([pp, np.zeros(pad)])
+                pt = np.concatenate([pt, np.full(pad, np.inf)])
+                pf = np.concatenate([pf, np.zeros((pad,) + pf.shape[1:])])
+            from .aggregation import next_pow2
+
+            self.pend_steps = next_pow2(int(np.diff(pptr).max(initial=1)))
+        with self._jax.experimental.enable_x64():
+            self._pending = dict(
+                pend_ptr=jnp.asarray(pptr),
+                pend_pos=jnp.asarray(pp),
+                pend_time=jnp.asarray(pt),
+                pend_phi=jnp.asarray(pf),
+            )
+        self._pend_rev = df.pend_revision
+
+    def _forest(self):
+        from .jax_engine import FlatDynamicForest
+
+        return FlatDynamicForest(**self._sealed, **self._pending)
+
+    # ------------------------------------------------------------ per query
+    def window_tables(self, wb, hq: int, exact: bool):
+        """Window tables for (wb, hq, mode), cached per query/structure epoch.
+
+        The tables are the engine's core hoist: all per-node time searches
+        (and the q_t contraction, in exact mode) are paid once per query at
+        node-count scale, so every atom flush within the query costs O(1)
+        table gathers per atom — quantized mode reads the leaf prefix tables
+        (jax_engine.dyn_window_tables), exact mode the per-node value tables
+        (jax_engine.dyn_node_tables) that the canonical walk consumes. The
+        single-entry cache is keyed on the WindowBatch object identity
+        (TNKDE builds one per query) and the forest's structure epoch.
+        """
+        # hold the WindowBatch itself so identity cannot be recycled by GC
+        if self._tab_cache is not None:
+            c_wb, c_key, tabs = self._tab_cache
+            if c_wb is wb and c_key == (self._rev, hq, exact):
+                return tabs
+        leaf_fn, node_fn, _ = _get_dyn()
+
+        def steps(occ):
+            return max(int(np.ceil(np.log2(int(occ) + 1))) + 1, 1)
+
+        with self._jax.experimental.enable_x64():
+            if exact:
+                spl = tuple(steps(o) for o in self._max_occ[: hq + 1])
+                tabs = node_fn(
+                    self._forest(), wb,
+                    n_levels=self.n_levels, hq=int(hq), steps_per_level=spl,
+                )
+            else:
+                tabs = (leaf_fn(
+                    self._forest(), wb,
+                    n_levels=self.n_levels, hq=int(hq),
+                    search_steps=steps(self._max_occ[hq]),
+                ),)
+        self._tab_cache = (wb, (self._rev, hq, exact), tabs)
+        return tabs
+
+    def flush(self, heat, atoms: AtomSet, wb, *, h0=None, exact_leaf=False, **_):
+        """heat[L, W] += one atom block, all W windows, streaming-consistent.
+
+        Lazily re-packs after seal/extend and re-uploads pending buffers
+        after insert, then answers the fully-covered leaf ranges from the
+        cached window tables plus boundary/pending scans, in one jit'd
+        device call per atom size class.
+        """
+        if atoms.m == 0:
+            return heat
+        self.refresh()
+        self.refresh_pending()
+        df = self.df
+        hq = df.depth if h0 is None else min(int(h0), df.depth)
+        scan_steps = 0
+        if exact_leaf:
+            # next multiple of 8: bounds recompiles as occupancy drifts while
+            # wasting at most 7 masked trips (pow-of-two rounding wastes ~2x)
+            occ = int(self._max_occ[hq])
+            scan_steps = -(-occ // 8) * 8 if occ else 0
+        # work accounting (same units as the NumPy scans: (atom, event) pairs
+        # examined, per half-window for partial leaves / per window pending)
+        W = heat.shape[1]
+        df.counters["pending"] += df.pending_scan_pairs(atoms) * W
+        if exact_leaf:
+            df.counters["partial"] += df.partial_scan_pairs(atoms, hq) * 2 * W
+        tables = self.window_tables(wb, hq, bool(exact_leaf))
+        _, _, flush_fn = _get_dyn()
+        with self._jax.experimental.enable_x64():
+            fa = self._pad_atoms(atoms, np.arange(atoms.m))
+            heat = flush_fn(
+                self._forest(), fa, wb, tables, heat,
+                n_levels=self.n_levels,
+                hq=int(hq),
+                scan_steps=int(scan_steps),
+                pend_steps=int(self.pend_steps),
+                exact=bool(exact_leaf),
+            )
+        return heat

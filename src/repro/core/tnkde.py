@@ -16,12 +16,17 @@ The per-edge loop batches atoms across query edges and flushes them through
 the index in large vectorized blocks — the same batching the distributed
 (shard_map) and Pallas paths use.
 
-``engine`` selects the flush backend for solution='rfs' (DESIGN.md §4):
+``engine`` selects the flush backend for the forest solutions (DESIGN.md
+§4/§5):
 
   engine='jax'    window-batched jit'd flat engine, all W windows per flush,
-                  device-resident [W, L] heatmap (the default when available)
+                  device-resident [W, L] heatmap (the default when available).
+                  rfs -> rfs.FlatForestEngine (static merge tree);
+                  drfs -> rfs.FlatDynamicEngine (streaming bisection tree:
+                  insert/seal/extend re-pack lazily, pending events are
+                  scanned on device so insert -> query never rebuilds)
   engine='numpy'  the host reference path (one eval_atoms pass per window)
-  engine='auto'   'jax' for rfs, 'numpy' otherwise / on jax failure
+  engine='auto'   'jax' for rfs/drfs, 'numpy' otherwise / on jax failure
 """
 from __future__ import annotations
 
@@ -36,11 +41,7 @@ from .aggregation import build_event_moments
 from .drfs import DynamicRangeForest
 from .events import Events, group_events_by_edge
 from .kernels_math import get_kernel
-from .lixel_sharing import (
-    classify_candidates,
-    dominated_contribution,
-    recover_from_diff2,
-)
+from .lixel_sharing import classify_candidates, dominated_sweep
 from .network import RoadNetwork, build_lixels
 from .plan import build_atoms, build_edge_geometry
 from .rfs import RangeForest
@@ -60,6 +61,13 @@ class QueryStats:
     n_pairs_out: int = 0
     n_pairs_normal: int = 0
     index_bytes: int = 0
+    # DRFS streaming work that the index answers *outside* the tree walk —
+    # (atom, event) pairs examined by the pending-buffer scans and by the
+    # exact-mode partial-leaf scans. Without these the reported work of a
+    # streaming query is misleadingly low (the scans are the O(n) fallback
+    # the geometric seal keeps amortized).
+    n_pending_scanned: int = 0
+    n_partial_scanned: int = 0
 
 
 class TNKDE:
@@ -87,8 +95,10 @@ class TNKDE:
             raise ValueError(f"unknown solution {solution!r}")
         if engine not in ("auto", "numpy", "jax"):
             raise ValueError(f"unknown engine {engine!r}")
-        if engine == "jax" and solution != "rfs":
-            raise ValueError("engine='jax' accelerates the RFS flush (solution='rfs')")
+        if engine == "jax" and solution not in ("rfs", "drfs"):
+            raise ValueError(
+                "engine='jax' accelerates the forest flush (solution='rfs'/'drfs')"
+            )
         if lixel_sharing and solution == "sps":
             raise ValueError("lixel sharing needs an aggregation index (ada/rfs/drfs)")
         t0 = _time.perf_counter()
@@ -114,14 +124,18 @@ class TNKDE:
         elif solution == "ada":
             self.index = AggregateDistanceIndex(net, self.ee, self.ctx)
         self._phi_dim = phi.shape[-1] if phi.size else self.ctx.K
-        # ---- engine resolution: promote the jit'd flat engine for RFS ------
+        # ---- engine resolution: promote the jit'd flat engines -------------
         self.engine = "numpy"
         self._fe = None
-        if solution == "rfs" and engine != "numpy":
+        if solution in ("rfs", "drfs") and engine != "numpy":
             try:
-                from .rfs import FlatForestEngine
+                from .rfs import FlatDynamicEngine, FlatForestEngine
 
-                self._fe = FlatForestEngine(self.index)
+                self._fe = (
+                    FlatForestEngine(self.index)
+                    if solution == "rfs"
+                    else FlatDynamicEngine(self.index)
+                )
                 self.engine = "jax"
             except Exception as e:
                 if engine == "jax":
@@ -226,6 +240,7 @@ class TNKDE:
         pend_count = 0
         dominated_work: List = []  # (geom, side, candidate cols) triples
         use_jax = self.engine == "jax" and self._fe is not None
+        scan0 = dict(getattr(self.index, "counters", {}))  # DRFS work snapshot
         flush_cap = self.atom_flush
         if use_jax:
             # all W windows ride one device pass per flush; the heatmap stays
@@ -244,7 +259,12 @@ class TNKDE:
             atoms = AtomSet.concat(pend_atoms)
             self.stats.n_atoms += atoms.m
             if use_jax:
-                heat = self._fe.flush(heat, atoms, wb, cascade=self.cascade)
+                heat = self._fe.flush(
+                    heat, atoms, wb,
+                    cascade=self.cascade,
+                    h0=self.drfs_h0,
+                    exact_leaf=self.drfs_exact_leaf,
+                )
                 pend_atoms = []
                 pend_count = 0
                 return
@@ -293,37 +313,12 @@ class TNKDE:
         if use_jax:
             F += self._fe.to_numpy(heat)
         # ---- Lixel Sharing: dominated edges, batched across the network ----
-        # one dominated_moments sweep per side covering *all* windows (the
-        # rank searches and prefix gathers for the W windows share one pass);
-        # the per-edge Δ² accumulation stays (it is O(1) amortized per edge).
         if dominated_work:
-            ts_arr = np.asarray(ts)
-            dm_multi = getattr(self.index, "dominated_moments_multi", None)
-            for side in (0, 1):
-                items = [(g, cols) for g, s, cols in dominated_work if s == side]
-                if not items:
-                    continue
-                all_edges = np.concatenate([g.cand[cols] for g, cols in items])
-                offs = np.cumsum([0] + [len(c) for _, c in items])
-                M_multi = (
-                    dm_multi(all_edges, ts_arr, side)
-                    if dm_multi is not None
-                    else np.stack(
-                        [self.index.dominated_moments(all_edges, t, side) for t in ts]
-                    )
-                )  # [W, n_edges, k_s]
-                for w in range(W):
-                    M_all = M_multi[w]
-                    for (g, cols), lo, hi in zip(items, offs[:-1], offs[1:]):
-                        l_a = g.x.shape[0]
-                        diff2 = np.zeros(l_a + 2)
-                        direct = np.zeros(l_a)
-                        dominated_contribution(
-                            g, ctx, side, cols, M_all[lo:hi], diff2, direct
-                        )
-                        F[w, g.lix_base : g.lix_base + l_a] += (
-                            recover_from_diff2(diff2, l_a) + direct
-                        )
+            dominated_sweep(F, self.index, ctx, dominated_work, ts)
+        scan1 = getattr(self.index, "counters", None)
+        if scan1 is not None:
+            self.stats.n_pending_scanned += scan1["pending"] - scan0.get("pending", 0)
+            self.stats.n_partial_scanned += scan1["partial"] - scan0.get("partial", 0)
         self.stats.query_seconds += _time.perf_counter() - t0
         if self.index is not None and hasattr(self.index, "index_bytes"):
             self.stats.index_bytes = self.index.index_bytes  # ADA builds lazily

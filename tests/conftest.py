@@ -1,7 +1,16 @@
 import os
 import sys
 
+import pytest
+
 # NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
 # benches must see the real single-device CPU; only launch/dryrun.py forces
 # 512 placeholder devices (and it does so before importing jax).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_collection_modifyitems(items):
+    """Everything not marked ``slow`` is tier-1 (``pytest -m tier1``)."""
+    for item in items:
+        if item.get_closest_marker("slow") is None:
+            item.add_marker(pytest.mark.tier1)

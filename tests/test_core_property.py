@@ -1,6 +1,8 @@
-"""Hypothesis property tests on the core invariants."""
+"""Hypothesis property tests on the core invariants (slow tier)."""
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow  # scheduled CI job; tier-1 stays hermetic+fast
 
 pytest.importorskip("hypothesis")  # optional dep: `pip install .[test]`
 from hypothesis import given, settings, strategies as st

@@ -1,0 +1,71 @@
+"""QueryStats work accounting for the DRFS streaming path.
+
+The pending-buffer scans and exact-mode partial-leaf scans are the O(n)
+fallbacks that the geometric seal keeps amortized — if they are not counted,
+the reported work of a streaming query is misleadingly low. The counts are
+pinned on a hand-traceable world and must agree exactly between the NumPy
+path and the device engine (which accounts the same units host-side).
+
+World: one edge of length 100, g=50 → two lixels at x=25 and x=75; only
+same-edge atoms exist (2 per lixel) = 4 atoms. depth=2 → 4 leaves of width
+25. Sealed events at pos (10, 30, 60, 90); 3 pending at (5, 55, 95).
+
+  * pending pairs  = 4 atoms × 3 pending events on their edge = 12 / window
+  * partial pairs: per half-window scan, each atom scans exactly one
+    boundary leaf holding exactly one sealed event (traced in the test
+    body) = 4 pairs; two half-windows per window → 8 / window.
+"""
+import numpy as np
+import pytest
+
+from repro.core import TNKDE
+from repro.core.events import Events
+from repro.core.network import RoadNetwork
+
+KW = dict(g=50.0, b_s=1000.0, b_t=10.0, drfs_depth=2, drfs_exact_leaf=True)
+
+
+def _model(engine):
+    net = RoadNetwork(2, [0], [1], [100.0])
+    sealed = Events([0, 0, 0, 0], [10.0, 30.0, 60.0, 90.0], [1.0, 2.0, 3.0, 4.0])
+    m = TNKDE(net, sealed, solution="drfs", engine=engine, **KW)
+    m.insert(Events([0, 0, 0], [5.0, 55.0, 95.0], [5.0, 6.0, 7.0]))
+    assert m.index._n_pending == 3, "insert must stay below the seal threshold"
+    return m
+
+
+@pytest.mark.parametrize("engine", ["numpy", "jax"])
+@pytest.mark.parametrize("W", [1, 2])
+def test_drfs_scan_counts_pinned(engine, W):
+    m = _model(engine)
+    ts = [3.0, 5.5][:W]
+    m.query(ts)
+    assert m.stats.n_atoms == 4  # 2 lixels × (left, right) same-edge atoms
+    # every atom sees all 3 pending events of its edge, per window
+    assert m.stats.n_pending_scanned == 4 * 3 * W
+    # per half-window: atom(x=25,left) scans leaf[25,50) (event at 30),
+    # atom(x=25,right) the same leaf, atom(x=75,left) scans leaf[75,100]
+    # (event at 90), atom(x=75,right) the same leaf → 4 pairs; ×2 halves
+    assert m.stats.n_partial_scanned == 4 * 2 * W
+
+
+def test_drfs_counts_match_across_engines():
+    a, b = _model("numpy"), _model("jax")
+    ts = [3.0, 6.0]
+    ra, rb = a.query(ts), b.query(ts)
+    np.testing.assert_allclose(ra, rb, rtol=1e-12, atol=1e-12)
+    assert (a.stats.n_pending_scanned, a.stats.n_partial_scanned) == (
+        b.stats.n_pending_scanned, b.stats.n_partial_scanned,
+    )
+    assert a.stats.n_pending_scanned > 0 and a.stats.n_partial_scanned > 0
+
+
+def test_counts_zero_without_streaming_state():
+    """A sealed, quantized query does no pending or partial scanning."""
+    net = RoadNetwork(2, [0], [1], [100.0])
+    sealed = Events([0, 0, 0, 0], [10.0, 30.0, 60.0, 90.0], [1.0, 2.0, 3.0, 4.0])
+    m = TNKDE(net, sealed, solution="drfs", engine="numpy",
+              g=50.0, b_s=1000.0, b_t=10.0, drfs_depth=2)
+    m.query([3.0])
+    assert m.stats.n_pending_scanned == 0
+    assert m.stats.n_partial_scanned == 0

@@ -1,0 +1,210 @@
+"""Property tests for the DRFS streaming state machine (paper §5).
+
+Random interleavings of ``insert`` / ``seal`` / ``extend`` / ``query`` on
+small worlds must match a *fresh-rebuild* SPS oracle exactly in
+``exact_leaf`` mode — on both the NumPy host path and the device-resident
+JAX engine (which re-packs lazily across seals/extends and scans pending
+buffers on device). Quantized mode must improve monotonically with H₀.
+
+Two tiers:
+  * seeded deterministic interleavings (tier-1: always run; the jit cache is
+    shared across cases, so the device engine compiles once per shape);
+  * a hypothesis-driven sweep over arbitrary interleavings (marked ``slow``;
+    runs in the scheduled CI job with the [test] extra installed).
+"""
+import numpy as np
+import pytest
+
+from repro.core import TNKDE
+from repro.core.events import Events
+from repro.data.spatial import make_events, make_network
+
+KW = dict(g=40.0, b_s=600.0, b_t=2.0 * 86400.0)
+TS = [2.5 * 86400.0, 6.0 * 86400.0]
+ENGINES = ["numpy", "jax"]
+
+
+def _world(seed: int, n_events: int = 240):
+    """A small network plus a time-sorted event stream."""
+    net = make_network(24, 40, seed=seed)
+    ev = make_events(net, n_events, seed=seed + 1, span_days=9)
+    order = np.argsort(ev.time, kind="stable")
+    return net, Events(ev.edge_id[order], ev.pos[order], ev.time[order])
+
+
+def _sub(ev: Events, lo: int, hi: int) -> Events:
+    return Events(ev.edge_id[lo:hi], ev.pos[lo:hi], ev.time[lo:hi])
+
+
+class _OracleCache:
+    """Fresh-rebuild SPS oracle over the first n streamed events."""
+
+    def __init__(self, net, ev):
+        self.net, self.ev = net, ev
+        self._cache = {}
+
+    def __call__(self, n: int) -> np.ndarray:
+        if n not in self._cache:
+            self._cache[n] = TNKDE(
+                self.net, _sub(self.ev, 0, n), solution="sps", **KW
+            ).query(TS)
+        return self._cache[n]
+
+
+def _run_interleaving(net, ev, ops, engine, oracle, depth=4):
+    """Apply an op script against the streaming index, checking every query.
+
+    ops: sequence of ("insert", k) / ("seal",) / ("extend",) / ("query",).
+    The model starts from the first 40 events; inserts consume the stream in
+    time order (the documented streaming contract).
+    """
+    n = 40
+    m = TNKDE(
+        net, _sub(ev, 0, n), solution="drfs", engine=engine,
+        drfs_depth=depth, drfs_exact_leaf=True, **KW
+    )
+    if engine == "jax":
+        assert m.engine == "jax", "device engine failed to promote"
+    n_extends = 0
+    for op in ops:
+        if op[0] == "insert":
+            k = min(op[1], ev.n - n)
+            if k:
+                m.insert(_sub(ev, n, n + k))
+                n += k
+        elif op[0] == "seal":
+            m.index.seal()
+        elif op[0] == "extend" and n_extends < 2:  # bound the depth drift
+            m.index.extend()
+            n_extends += 1
+        elif op[0] == "query":
+            ref = oracle(n)
+            got = m.query(TS)
+            np.testing.assert_allclose(
+                got, ref, rtol=1e-9, atol=1e-9 * max(ref.max(), 1.0),
+                err_msg=f"engine={engine} n={n} ops={ops}",
+            )
+    ref = oracle(n)
+    got = m.query(TS)
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-9 * max(ref.max(), 1.0))
+    return m
+
+
+def _script_from_rng(rng, n_ops: int):
+    ops = []
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.45:
+            ops.append(("insert", int(rng.integers(1, 45))))
+        elif r < 0.6:
+            ops.append(("seal",))
+        elif r < 0.7:
+            ops.append(("extend",))
+        else:
+            ops.append(("query",))
+    return ops
+
+
+# ------------------------------------------------------- tier-1 (seeded)
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_seeded_interleavings_match_oracle(seed, engine):
+    net, ev = _world(7 + seed)
+    oracle = _OracleCache(net, ev)
+    rng = np.random.default_rng(seed * 101 + 5)
+    ops = _script_from_rng(rng, 9)
+    _run_interleaving(net, ev, ops, engine, oracle)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_quantized_monotone_in_h0_after_streaming(engine):
+    """Fig 20 analog under streaming: after an interleaved build, accuracy
+    vs the oracle rises monotonically with H₀ (partial leaves are dropped,
+    never mis-summed) and is ~exact at full depth... the quantized dial must
+    survive seals and pending buffers on both engines."""
+    net, ev = _world(31)
+    oracle = _OracleCache(net, ev)
+    n = 150
+    m = TNKDE(
+        net, _sub(ev, 0, n), solution="drfs", engine=engine, drfs_depth=6, **KW
+    )
+    m.insert(_sub(ev, n, 200))  # part seals, tail may stay pending
+    m.insert(_sub(ev, 200, 215))
+    ref = oracle(215)
+    accs = []
+    for h0 in (1, 2, 4, 6):
+        m.drfs_h0 = h0
+        got = m.query(TS)
+        accs.append(1.0 - np.abs(got - ref).sum() / max(np.abs(ref).sum(), 1e-12))
+    assert all(b >= a - 5e-3 for a, b in zip(accs, accs[1:])), accs
+    assert accs[-1] > 0.95, accs
+
+
+def test_incremental_seal_equals_full_rebuild():
+    """The dirty-edge splice in drfs.seal must reproduce a from-scratch build
+    structurally (node CSRs, time order, event maps) with the aggregates
+    equal to fp-reassociation tolerance."""
+    net, ev = _world(13, n_events=200)
+    rng = np.random.default_rng(3)
+    m = TNKDE(net, _sub(ev, 0, 60), solution="drfs", engine="numpy", drfs_depth=4, **KW)
+    n = 60
+    while n < ev.n:
+        k = min(int(rng.integers(5, 40)), ev.n - n)
+        m.insert(_sub(ev, n, n + k))
+        n += k
+        if rng.random() < 0.4:
+            m.index.seal()
+    m.index.seal()
+    df = m.index
+    # from-scratch rebuild over df's OWN sealed arrays (same ctx / Φ rows, so
+    # any difference is attributable to the incremental splice alone)
+    from repro.core.drfs import DynamicRangeForest
+    from repro.core.events import EdgeEvents
+
+    ee = EdgeEvents(ptr=df.ptr, pos=df.pos, time=df.time,
+                    t_min=float(df.time.min()), t_max=float(df.time.max()))
+    ref = DynamicRangeForest(net, ee, df.ctx, df.phi, depth=df.depth)
+    assert df.n_sealed == ref.n_sealed
+    for d in range(df.depth + 1):
+        a, b = df.levels[d], ref.levels[d]
+        np.testing.assert_array_equal(a[0], b[0], err_msg=f"node_ptr level {d}")
+        np.testing.assert_array_equal(a[1], b[1], err_msg=f"time level {d}")
+        scale = np.abs(b[2]).max() + 1.0
+        np.testing.assert_allclose(a[2], b[2], rtol=1e-11, atol=1e-11 * scale)
+
+
+# ------------------------------------------------- hypothesis sweep (slow)
+try:
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    _OP = st.one_of(
+        st.tuples(st.just("insert"), st.integers(1, 45)),
+        st.tuples(st.just("seal")),
+        st.tuples(st.just("extend")),
+        st.tuples(st.just("query")),
+    )
+
+    _WORLDS = {}
+
+    def _cached_world(seed):
+        if seed not in _WORLDS:
+            net, ev = _world(seed)
+            _WORLDS[seed] = (net, ev, _OracleCache(net, ev))
+        return _WORLDS[seed]
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("engine", ENGINES)
+    @settings(max_examples=12, deadline=None)
+    @given(st.data())
+    def test_hypothesis_interleavings_match_oracle(engine, data):
+        seed = data.draw(st.integers(7, 9))
+        net, ev, oracle = _cached_world(seed)
+        ops = data.draw(st.lists(_OP, min_size=1, max_size=10))
+        _run_interleaving(net, ev, ops, engine, oracle)

@@ -5,6 +5,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+pytestmark = pytest.mark.slow  # interpret-mode sweeps; scheduled CI job
+
 from repro.kernels import ops, ref
 
 
