@@ -1,0 +1,247 @@
+"""Serving benchmark — the BENCH_serve.json emitter (DESIGN.md §6).
+
+Closed-loop + Poisson load against :class:`repro.serve.TNKDEServer` over the
+streaming DRFS index, versus the pre-subsystem sequential loop (one engine
+pass per request, inserts inline — the old ``launch.serve`` demo shape), on
+the SAME workload: a stream-ordered mix of 1–3-window query requests and
+periodic event-batch inserts.
+
+Reported per (arrival rate, batch cap): p50/p95/p99 latency (completion −
+arrival, so queueing is priced in), throughput, cache hit-rate, and the
+**recompile audit** — the module-level jit caches must not grow during any
+measured run (every flush hits a compiled entry; shapes were warmed by a
+replay of the same mix plus one probe per window class). Headline:
+saturated batched throughput / sequential throughput, asserted ≥ 2×.
+
+The streamed tail is clipped so the sealed event count stays inside ONE
+capacity size class for the whole run — the steady-state contract is
+"growth re-uploads tables, never recompiles", and this makes it auditable.
+"""
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+import numpy as np
+
+from repro.core import TNKDE
+from repro.core.events import Events
+from repro.core.rfs import _size_class
+from repro.data.spatial import make_dataset
+from repro.serve import (
+    InsertItem,
+    ProfileConfig,
+    QueryItem,
+    TNKDEServer,
+    jit_entries,
+    run_sequential,
+    run_server,
+)
+
+
+def make_workload(stream, t_lo, t_hi, *, n_requests, insert_every, chunk, seed,
+                  n_ticks=12, max_windows=2):
+    """Stream-ordered mix: query items asking 1..max_windows *consecutive
+    dashboard ticks* (window centers on an n_ticks lattice, popularity
+    zipf-skewed toward the busy ticks) with an event-batch insert every
+    ``insert_every`` requests — the grid-aligned rolling-window dashboard
+    shape of the online scenario (ambulance-demand style: many clients
+    polling the same few current windows). Tick sharing is what admission
+    batching and the result cache monetize; the sequential baseline runs
+    the *same* mix and pays one full engine pass per request."""
+    rng = np.random.default_rng(seed)
+    ticks = np.linspace(t_lo, t_hi, n_ticks)
+    pop = 1.0 / np.arange(1, n_ticks + 1)
+    pop /= pop.sum()
+    items = []
+    s_off = 0
+    for i in range(n_requests):
+        w = int(rng.integers(1, max_windows + 1))
+        start = int(rng.choice(n_ticks, p=pop))
+        ts = [float(ticks[min(start + j, n_ticks - 1)]) for j in range(w)]
+        items.append(QueryItem(ts=sorted(set(ts))))
+        if insert_every and (i + 1) % insert_every == 0 and s_off < stream.n:
+            hi = min(s_off + chunk, stream.n)
+            items.append(InsertItem(Events(
+                stream.edge_id[s_off:hi], stream.pos[s_off:hi], stream.time[s_off:hi]
+            )))
+            s_off = hi
+    return items
+
+
+def clip_to_size_class(n_total: int, cut: int) -> int:
+    """Smallest base cut such that [cut, n_total] sits in one size class."""
+    target = _size_class(n_total)
+    lo = n_total
+    while lo > 1 and _size_class(lo - 1) == target:
+        lo -= 1
+    return max(cut, lo)
+
+
+def run_serve_bench(scale=0.04, n_requests=32, depth=7, window_cap=8,
+                    batch_caps=(4, 8), rates=(None, 5.0), insert_every=6,
+                    min_speedup=2.0, repeats=2, seed=0, out_json=None):
+    print(f"=== TN-KDE serving bench (berkeley x{scale}, {n_requests} requests) ===")
+    net, ev, meta = make_dataset("berkeley", scale=scale, seed=seed)
+    order = np.argsort(ev.time, kind="stable")
+    evs = Events(ev.edge_id[order], ev.pos[order], ev.time[order])
+    t0v, t1v = float(evs.time.min()), float(evs.time.max())
+    b_t = 0.25 * (t1v - t0v)
+    cut = clip_to_size_class(evs.n, int(evs.n * 0.9))
+    base = Events(evs.edge_id[:cut], evs.pos[:cut], evs.time[:cut])
+    stream = Events(evs.edge_id[cut:], evs.pos[cut:], evs.time[cut:])
+    n_inserts = max(n_requests // max(insert_every, 1), 1)
+    chunk = max(stream.n // n_inserts, 1)
+    prof = ProfileConfig(g=50.0, b_s=600.0, b_t=b_t, drfs_depth=depth)
+    t_lo, t_hi = t0v + b_t, t1v - b_t
+    print(f"|V|={meta['V']} |E|={meta['E']} N={meta['N']} base={base.n} "
+          f"stream={stream.n} (one capacity class)")
+
+    workload = make_workload(stream, t_lo, t_hi, n_requests=n_requests,
+                             insert_every=insert_every, chunk=chunk, seed=seed + 1)
+    chunks = [it.events for it in workload if isinstance(it, InsertItem)]
+
+    def fresh_model():
+        return TNKDE(net, base, **prof.to_kwargs())
+
+    def fresh_server(cap):
+        return TNKDEServer(net, base, {"default": prof},
+                           batch_cap=cap, window_cap=window_cap)
+
+    # ---- warmup. The jit caches are module-global, so scratch instances
+    # compile for everyone. Sequential replay warms the baseline's raw
+    # shapes; the probe ladder then flushes EVERY window class at EVERY
+    # index state the measured runs can visit (base + each insert-chunk
+    # prefix — seal points depend only on insert sizes, so the state
+    # trajectory is identical across runs). After this, a measured run can
+    # only ever hit compiled entries.
+    t0 = time.perf_counter()
+    run_sequential(fresh_model(), workload)
+    from repro.serve import window_class
+
+    classes = sorted({window_class(n, window_cap) for n in range(1, window_cap + 1)})
+    srv = fresh_server(max(batch_caps))
+    probe_t = [iter(np.linspace(t_lo, t_hi, 4096))]
+
+    def probe():
+        for wc in classes:
+            srv.submit([next(probe_t[0]) for _ in range(wc)])
+            srv.pump()
+
+    probe()
+    for c in chunks:
+        srv.insert(c)
+        probe()
+    print(f"warmup {time.perf_counter() - t0:.1f}s, "
+          f"window classes={classes}, jit entries={jit_entries()}")
+
+    def row_from(rate, cap, rep, server, recompiles):
+        return dict(
+            rate_hz=(None if rate is None else float(rate)),
+            batch_cap=cap,
+            recompiles=recompiles,
+            cache_hits=server.cache.hits,
+            cache_misses=server.cache.misses,
+            batches=server.stats.n_batches,
+            windows_requested=server.stats.n_windows_requested,
+            windows_evaluated=server.stats.n_windows_evaluated,
+            **rep.summary(),
+        )
+
+    def audit(j0):
+        """Jit-cache growth since j0; None when the build has no probe."""
+        if j0 < 0:
+            print("# jit cache probe unavailable: recompile audit skipped")
+            return None
+        grown = jit_entries() - j0
+        assert grown == 0, f"steady-state run recompiled {grown}x"
+        return grown
+
+    # ---- throughput headline: sequential baseline vs saturated server ----
+    # This container's speed drifts on the minutes scale, so each baseline
+    # attempt is paired with saturated attempts taken right next to it
+    # (time-local comparison); best attempt of each side makes the headline.
+    j0 = jit_entries()
+    thr = lambda r: r.summary()["throughput_rps"]  # noqa: E731
+    seq_best, sat_best = None, {}
+    for _ in range(max(repeats, 1)):
+        rep = run_sequential(fresh_model(), workload)
+        if seq_best is None or thr(rep) > thr(seq_best):
+            seq_best = rep
+        for cap in batch_caps:
+            server = fresh_server(cap)
+            rep = run_server(server, workload, rate_hz=None, seed=seed + 3)
+            if cap not in sat_best or thr(rep) > thr(sat_best[cap][0]):
+                sat_best[cap] = (rep, server)
+    recompiles = audit(j0)
+    seq = seq_best.summary()
+    print(f"sequential: {seq['throughput_rps']:.2f} req/s "
+          f"p50={seq['p50_ms']:.0f}ms p95={seq['p95_ms']:.0f}ms")
+    runs = []
+    for cap in batch_caps:
+        rep, server = sat_best[cap]
+        row = row_from(None, cap, rep, server, recompiles)
+        runs.append(row)
+        print(f"server cap={cap} saturated : {row['throughput_rps']:6.2f} req/s "
+              f"p50={row['p50_ms']:6.0f}ms p99={row['p99_ms']:6.0f}ms "
+              f"batches={row['batches']} recompiles={recompiles}")
+
+    # ---- latency rows: Poisson arrivals, one pass per (cap, rate) ---------
+    for cap in batch_caps:
+        for rate in rates:
+            if rate is None:
+                continue
+            server = fresh_server(cap)
+            j0 = jit_entries()
+            rep = run_server(server, workload, rate_hz=rate, seed=seed + 3)
+            recompiles = audit(j0)
+            row = row_from(rate, cap, rep, server, recompiles)
+            runs.append(row)
+            print(f"server cap={cap} {rate:g} req/s: {row['throughput_rps']:6.2f} "
+                  f"req/s p50={row['p50_ms']:6.0f}ms p99={row['p99_ms']:6.0f}ms "
+                  f"batches={row['batches']} recompiles={recompiles}")
+
+    sat = max((r for r in runs if r["rate_hz"] is None),
+              key=lambda r: r["throughput_rps"])
+    speedup = sat["throughput_rps"] / max(seq["throughput_rps"], 1e-9)
+    print(f"saturated batched vs sequential: {speedup:.2f}x "
+          f"(cap={sat['batch_cap']})")
+    assert speedup >= min_speedup, (
+        f"batched throughput only {speedup:.2f}x sequential (< {min_speedup}x)"
+    )
+
+    out = dict(section="serve", dataset="berkeley", scale=scale,
+               V=meta["V"], E=meta["E"], N=meta["N"], depth=depth,
+               n_requests=n_requests, window_cap=window_cap,
+               profile=dict(g=prof.g, b_s=prof.b_s, b_t=round(b_t, 1),
+                            solution=prof.solution, drfs_depth=depth),
+               sequential=seq, runs=runs,
+               speedup_vs_sequential=round(speedup, 3),
+               recompiles_after_warmup=(
+                   None if any(r["recompiles"] is None for r in runs)
+                   else max(r["recompiles"] for r in runs)
+               ))
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {out_json}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.04)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--json", default="BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
+    args = ap.parse_args()
+    if args.smoke:
+        # tiny CI shape: the 2x headline needs the real request volume, so
+        # the smoke gate is looser — recompiles==0 is asserted regardless
+        run_serve_bench(scale=0.02, n_requests=16, depth=5, batch_caps=(6,),
+                        rates=(None, 20.0), insert_every=6, min_speedup=1.3,
+                        out_json=args.json)
+    else:
+        run_serve_bench(scale=args.scale, n_requests=args.requests,
+                        out_json=args.json)

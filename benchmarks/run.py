@@ -1,12 +1,81 @@
-"""Benchmark entrypoint: one function per paper table/figure.
+"""Benchmark entrypoint: one function per paper table/figure, plus every
+machine-readable ``BENCH_*.json`` emitter.
 
 Prints ``name,us_per_call,derived`` CSV rows (stdout) — tee'd into
 bench_output.txt by the final run. ``--only`` filters by figure name.
+
+The emitter registry below is the single source of truth for the JSON
+benches (PR-over-PR perf tracking); after running them, the aggregation
+step *discovers* every ``BENCH_*.json`` in the working directory — emitted
+here or by an earlier run — and prints one summary row per file, so a new
+emitter only needs a registry entry (or even just a file) to be picked up.
 """
 from __future__ import annotations
 
 import argparse
+import glob
+import json
 import time
+
+
+def _emit_kde(scale: float) -> None:
+    from benchmarks.perf_kde_ladder import run_ladder
+
+    run_ladder(scale=scale, out_json="BENCH_kde.json")
+
+
+def _emit_stream(scale: float) -> None:
+    from benchmarks.perf_kde_ladder import run_stream_ladder
+
+    run_stream_ladder(scale=scale, out_json="BENCH_stream.json")
+
+
+def _emit_serve(scale: float) -> None:
+    from benchmarks.perf_serve import run_serve_bench
+
+    run_serve_bench(scale=scale, out_json="BENCH_serve.json")
+
+
+#: every BENCH_*.json producer: (filename, callable(scale))
+EMITTERS = [
+    ("BENCH_kde.json", _emit_kde),
+    ("BENCH_stream.json", _emit_stream),
+    ("BENCH_serve.json", _emit_serve),
+]
+
+
+def _headline(rec: dict) -> str:
+    """Best-effort one-line summary of a BENCH record, schema-agnostic."""
+    bits = []
+    for key in ("dataset", "scale", "N", "W", "depth", "n_requests"):
+        if key in rec:
+            bits.append(f"{key}={rec[key]}")
+    for key in ("speedup_at_W_warm", "speedup_vs_sequential",
+                "recompiles_after_warmup"):
+        if key in rec:
+            bits.append(f"{key}={rec[key]}")
+    if isinstance(rec.get("rungs"), list):
+        bits.append(f"rungs={len(rec['rungs'])}")
+        sp = [r.get("speedup_vs_numpy") for r in rec["rungs"]
+              if isinstance(r, dict) and r.get("speedup_vs_numpy")]
+        if sp:
+            bits.append(f"best_speedup={max(sp)}")
+    if isinstance(rec.get("runs"), list):
+        bits.append(f"runs={len(rec['runs'])}")
+    return ";".join(bits)
+
+
+def aggregate(pattern: str = "BENCH_*.json") -> int:
+    """Discover every BENCH json and print one summary CSV row per file."""
+    files = sorted(glob.glob(pattern))
+    for path in files:
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+            print(f"bench/{path},0.0,{_headline(rec)}")
+        except Exception as e:
+            print(f"bench/{path},0.0,unreadable:{e!r}")
+    return len(files)
 
 
 def main(argv=None) -> None:
@@ -14,11 +83,12 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None, help="substring filter on figure fns")
     ap.add_argument("--roofline-dir", default="runs/dryrun")
     ap.add_argument(
-        "--kde-json",
-        default="BENCH_kde.json",
-        help="machine-readable ladder output for PR-over-PR perf tracking ('' disables)",
+        "--no-json",
+        action="store_true",
+        help="skip the BENCH_*.json emitters (figures + aggregation only)",
     )
     ap.add_argument("--kde-scale", type=float, default=0.08)
+    ap.add_argument("--serve-scale", type=float, default=0.04)
     args = ap.parse_args(argv)
 
     from benchmarks import figures
@@ -30,15 +100,18 @@ def main(argv=None) -> None:
             continue
         print(f"# -- {fn.__name__} --", flush=True)
         fn()
-    if args.kde_json and not args.only:
-        from benchmarks.perf_kde_ladder import run_ladder, run_stream_ladder
-
-        run_ladder(scale=args.kde_scale, out_json=args.kde_json)
-        run_stream_ladder(scale=args.kde_scale, out_json="BENCH_stream.json")
+    if not args.no_json and not args.only:
+        for name, emit in EMITTERS:
+            print(f"# -- emit {name} --", flush=True)
+            scale = args.serve_scale if name == "BENCH_serve.json" else args.kde_scale
+            try:
+                emit(scale)
+            except Exception as e:  # one broken emitter must not hide the rest
+                print(f"# {name} failed: {e!r}")
+    n = aggregate()
+    print(f"# aggregated {n} BENCH_*.json files")
     # roofline summary rows if a dry-run directory exists
     try:
-        import glob
-        import json
         import os
 
         from repro.launch.roofline import roofline_row

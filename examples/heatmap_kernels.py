@@ -4,10 +4,7 @@ heatmaps at identical query cost (all decompose to O(1) Q·A per node).
 
     PYTHONPATH=src python examples/heatmap_kernels.py
 """
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import numpy as np
 

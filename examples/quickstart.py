@@ -2,10 +2,6 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import sys
-
-sys.path.insert(0, "src")
-
 import numpy as np
 
 from repro.core import TNKDE

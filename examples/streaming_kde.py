@@ -11,10 +11,6 @@ on the host).
 
     PYTHONPATH=src python examples/streaming_kde.py
 """
-import sys
-
-sys.path.insert(0, "src")
-
 import numpy as np
 
 from repro.core import TNKDE

@@ -8,9 +8,6 @@ uses. Defaults give a ~5M-param qwen2.5-family model; --full-100m scales to
 """
 import argparse
 import dataclasses
-import sys
-
-sys.path.insert(0, "src")
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.launch.train import run_training

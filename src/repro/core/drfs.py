@@ -23,6 +23,18 @@ H_q = min(H, H_0), canonically decompose that leaf range (<= 2 nodes per
 level, the same walk as rfs.py), and resolve the *time* window with two
 binary searches per node (events inside a node are time-sorted).
 
+**Snapshot isolation (MVCC, DESIGN.md §6).** Every mutation allocates fresh
+arrays and rebinds — ``seal`` builds new base/level arrays, ``extend``
+appends a new level tuple, ``insert`` lands in pending buffers whose CSR is
+materialized per ``pend_revision``. ``snapshot()`` therefore pins a
+consistent point-in-time view by *reference*: a ``DrfsSnapshot`` holds the
+sealed arrays, a frozen copy of the level list, and the materialized pending
+CSR, identified by the ``(revision, pend_revision)`` epoch pair. All query
+methods live on the shared ``_DrfsQueryView`` mixin, so a pinned snapshot
+answers queries with the exact event set visible at pin time while inserts,
+seals and extends proceed on the live forest — the serving subsystem
+(``repro.serve``) runs every micro-batch against such a handle.
+
   * quantized mode (paper §5.2): partially covered boundary leaves at depth
     H_q are dropped (the paper's "return a zero-vector"); accuracy rises with
     H_0 exactly as Figure 20.
@@ -51,228 +63,15 @@ from .events import EdgeEvents, group_by_edge_csr, ragged_arange
 from .network import RoadNetwork
 from .plan import AtomSet
 
-__all__ = ["DynamicRangeForest"]
+__all__ = ["DynamicRangeForest", "DrfsSnapshot"]
 
 
-class DynamicRangeForest:
-    def __init__(
-        self,
-        net: RoadNetwork,
-        ee: EdgeEvents,
-        ctx: MomentContext,
-        phi: np.ndarray,
-        *,
-        depth: int = 8,
-    ):
-        self.net = net
-        self.ctx = ctx
-        self.depth = 0
-        E = net.n_edges
-        # sealed event arrays (grouped by edge, time-sorted within edge)
-        self.ptr = ee.ptr.copy()
-        self.pos = ee.pos.copy()
-        self.time = ee.time.copy()
-        self.phi = phi.copy()
-        self.lens = net.edge_len
-        # per-depth CSR: levels[d] = (node_ptr [E*2^d+1], time_s [N], cum [N,4,K], ev_idx [N])
-        self.levels: List[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]] = []
-        # streaming buffers
-        self._pend_edge: List[np.ndarray] = []
-        self._pend_pos: List[np.ndarray] = []
-        self._pend_time: List[np.ndarray] = []
-        self._pend_phi: List[np.ndarray] = []
-        self._n_pending = 0
-        self._pend_csr = None  # (pend_revision, csr) single-entry cache
-        # mutation epochs: device engines re-pack when these move
-        self.revision = 0  # sealed structure (seal / extend)
-        self.pend_revision = 0  # pending buffers (insert / seal)
-        # QueryStats work counters (TNKDE snapshots + diffs these per query):
-        #   pending — (atom, pending-event-on-its-edge) pairs examined
-        #   partial — (atom, boundary-leaf-event) pairs examined (exact mode)
-        self.counters = {"pending": 0, "partial": 0}
-        self._build_level(0)
-        for _ in range(depth):
-            self.extend()
+class _DrfsQueryView:
+    """Query-side methods shared by the live forest and pinned snapshots.
 
-    # ----------------------------------------------------------- structure
-    @property
-    def n_sealed(self) -> int:
-        return int(self.pos.shape[0])
-
-    @property
-    def index_bytes(self) -> int:
-        return sum(p.nbytes + t.nbytes + c.nbytes + i.nbytes for p, t, c, i in self.levels)
-
-    def _node_of(self, edge: np.ndarray, pos: np.ndarray, d: int) -> np.ndarray:
-        u = pos / self.lens[edge]
-        return np.minimum((u * (1 << d)).astype(np.int64), (1 << d) - 1)
-
-    def _build_level(self, d: int) -> None:
-        E = self.net.n_edges
-        counts = np.diff(self.ptr)
-        edge_of = np.repeat(np.arange(E, dtype=np.int64), counts)
-        node_local = self._node_of(edge_of, self.pos, d)
-        node = edge_of * (1 << d) + node_local
-        order = np.argsort(node, kind="stable")  # keeps time order inside node
-        node_s = node[order]
-        node_ptr = np.zeros(E * (1 << d) + 1, dtype=np.int64)
-        np.add.at(node_ptr, node_s + 1, 1)
-        np.cumsum(node_ptr, out=node_ptr)
-        cum = segmented_cumsum(self.phi[order], node_ptr)
-        self.levels.append((node_ptr, self.time[order], cum, order.astype(np.int64)))
-
-    def extend(self) -> None:
-        """Extension operation (Algorithm 4): add one depth level, O(N)."""
-        self.depth += 1
-        self._build_level(self.depth)
-        self.revision += 1
-
-    # ------------------------------------------------------------ streaming
-    def insert(self, edge: np.ndarray, pos: np.ndarray, time: np.ndarray, phi: np.ndarray):
-        """Streaming insertion (persistent/streaming mode, §5).
-
-        Events must arrive in nondecreasing time order (streaming data).
-        Amortized O(H): appended to pending buffers; a geometric ``seal``
-        merges them when they exceed 25% of the sealed set.
-        """
-        self._pend_edge.append(np.asarray(edge, np.int64))
-        self._pend_pos.append(np.asarray(pos, np.float64))
-        self._pend_time.append(np.asarray(time, np.float64))
-        self._pend_phi.append(np.asarray(phi))
-        self._n_pending += len(pos)
-        self.pend_revision += 1
-        if self._n_pending > max(self.n_sealed, 64) // 4:
-            self.seal()
-
-    def pending_csr(self):
-        """Pending buffers as a per-edge CSR sorted by (edge, time).
-
-        Returns (ptr [E+1], pos, time, phi) or None when nothing is pending.
-        Shared by the host pending scan, the LS dominated path, the device
-        engine's pending upload, and the work accounting — cached on
-        ``pend_revision`` so the sort is paid once per insert, not per use.
-        """
-        if not self._n_pending:
-            return None
-        if self._pend_csr is not None and self._pend_csr[0] == self.pend_revision:
-            return self._pend_csr[1]
-        pe = np.concatenate(self._pend_edge)
-        pp = np.concatenate(self._pend_pos)
-        pt = np.concatenate(self._pend_time)
-        pf = np.concatenate(self._pend_phi)
-        ptr, order = group_by_edge_csr(self.net.n_edges, pe, pt)
-        csr = (ptr, pp[order], pt[order], pf[order])
-        self._pend_csr = (self.pend_revision, csr)
-        return csr
-
-    def seal(self) -> None:
-        """Merge pending buffers into the sealed structure, incrementally.
-
-        Only *dirty* edges (with pending events) are re-sorted and
-        re-aggregated; every clean edge's per-level block is copied over
-        verbatim (its node counts are unchanged — position bisection is
-        data-independent), with its ``ev_idx`` rows shifted by the edge's
-        CSR displacement. Cost: O(N) splice copies + O(n_dirty log n_dirty)
-        sort + O(n_dirty · H · K) cumsum, vs O(N · H · K) for a full rebuild.
-        """
-        if not self._n_pending:
-            return
-        E = self.net.n_edges
-        pe = np.concatenate(self._pend_edge)
-        pp = np.concatenate(self._pend_pos)
-        pt = np.concatenate(self._pend_time)
-        pf = np.concatenate(self._pend_phi)
-        po = np.lexsort((pt, pe))
-        pe, pp, pt, pf = pe[po], pp[po], pt[po], pf[po]
-
-        counts_old = np.diff(self.ptr)
-        pend_counts = np.bincount(pe, minlength=E).astype(np.int64)
-        dirty = pend_counts > 0  # [E]
-        counts_new = counts_old + pend_counts
-        new_ptr = np.zeros(E + 1, dtype=np.int64)
-        np.cumsum(counts_new, out=new_ptr[1:])
-        N_old, N_new = self.n_sealed, int(new_ptr[-1])
-        edge_old = np.repeat(np.arange(E, dtype=np.int64), counts_old)
-        shift = new_ptr[:-1] - self.ptr[:-1]  # [E] per-edge CSR displacement
-        dirty_ev = dirty[edge_old] if N_old else np.zeros(0, bool)
-
-        # ---- merge the sealed base arrays (dirty events + pending only) ----
-        de = np.concatenate([edge_old[dirty_ev], pe])
-        dp = np.concatenate([self.pos[dirty_ev], pp])
-        dt = np.concatenate([self.time[dirty_ev], pt])
-        dphi = np.concatenate([self.phi[dirty_ev], pf]) if self.phi.size else pf
-        dm = np.lexsort((dt, de))  # stable: old-before-pending on time ties
-
-        K_tail = pf.shape[1:]
-        new_pos = np.empty(N_new)
-        new_time = np.empty(N_new)
-        # promote like np.concatenate would — a float32 insert must not
-        # silently downcast the sealed float64 moment history
-        new_phi = np.empty((N_new,) + K_tail, dtype=np.result_type(self.phi.dtype, pf.dtype))
-        old_idx = np.arange(N_old, dtype=np.int64)
-        clean_src = old_idx[~dirty_ev]
-        clean_dst = clean_src + shift[edge_old[~dirty_ev]]
-        new_pos[clean_dst] = self.pos[clean_src]
-        new_time[clean_dst] = self.time[clean_src]
-        if self.phi.size:
-            new_phi[clean_dst] = self.phi[clean_src]
-        d_edges = np.nonzero(dirty)[0]
-        dirty_dst = ragged_arange(new_ptr[d_edges], counts_new[d_edges])
-        new_pos[dirty_dst] = dp[dm]
-        new_time[dirty_dst] = dt[dm]
-        new_phi[dirty_dst] = dphi[dm]
-        # old sealed index -> new sealed index (for per-level ev_idx remap)
-        old_to_new = np.empty(N_old, np.int64)
-        old_to_new[clean_src] = clean_dst
-        src_tag = np.concatenate([old_idx[dirty_ev], np.full(len(pe), -1, np.int64)])
-        tag_s = src_tag[dm]
-        was_old = tag_s >= 0
-        old_to_new[tag_s[was_old]] = dirty_dst[was_old]
-
-        # ---- splice every level: clean blocks copied, dirty rebuilt --------
-        edge_new = np.repeat(np.arange(E, dtype=np.int64), counts_new)
-        new_levels = []
-        eid_range = np.arange(E, dtype=np.int64)
-        for d, (nptr, tms, cum, eidx) in enumerate(self.levels):
-            nb = 1 << d
-            cnt_nodes_old = np.diff(nptr)
-            sel = np.nonzero(dirty[edge_new])[0]  # dirty events, new-array order
-            nl = self._node_of(edge_new[sel], new_pos[sel], d)
-            node_d = edge_new[sel] * nb + nl
-            order_d = np.argsort(node_d, kind="stable")
-            node_counts_dirty = np.bincount(node_d, minlength=E * nb).astype(np.int64)
-            cnt_nodes_new = np.where(np.repeat(dirty, nb), node_counts_dirty, cnt_nodes_old)
-            nptr_new = np.zeros(E * nb + 1, np.int64)
-            np.cumsum(cnt_nodes_new, out=nptr_new[1:])
-            tms_new = np.empty(N_new)
-            cum_new = np.empty((N_new,) + cum.shape[1:], dtype=cum.dtype)
-            eidx_new = np.empty(N_new, np.int64)
-            # clean edges: the whole per-edge block shifts uniformly
-            if N_old:
-                edge_of_slot = edge_old[eidx]
-                lvl_shift = nptr_new[eid_range * nb] - nptr[eid_range * nb]
-                clean_slot = np.nonzero(~dirty[edge_of_slot])[0]
-                dst_clean = clean_slot + lvl_shift[edge_of_slot[clean_slot]]
-                tms_new[dst_clean] = tms[clean_slot]
-                cum_new[dst_clean] = cum[clean_slot]
-                eidx_new[dst_clean] = old_to_new[eidx[clean_slot]]
-            # dirty edges: node-grouped, time-sorted within node, fresh cumsum
-            ev_sorted = sel[order_d]
-            dirty_nodes = np.nonzero(np.repeat(dirty, nb))[0]
-            ddst = ragged_arange(nptr_new[dirty_nodes], cnt_nodes_new[dirty_nodes])
-            tms_new[ddst] = new_time[ev_sorted]
-            eidx_new[ddst] = ev_sorted
-            seg_ptr = np.concatenate([[0], np.cumsum(cnt_nodes_new[dirty_nodes])]).astype(np.int64)
-            cum_new[ddst] = segmented_cumsum(new_phi[ev_sorted], seg_ptr)
-            new_levels.append((nptr_new, tms_new, cum_new, eidx_new))
-
-        self.ptr, self.pos, self.time, self.phi = new_ptr, new_pos, new_time, new_phi
-        self.levels = new_levels
-        self._pend_edge, self._pend_pos, self._pend_time, self._pend_phi = [], [], [], []
-        self._n_pending = 0
-        self._pend_csr = None
-        self.revision += 1
-        self.pend_revision += 1
+    Requires: ``ctx``, ``depth``, ``levels``, ``lens``, ``pos``, ``time``,
+    ``phi``, ``counters``, ``_n_pending`` and ``pending_csr()``.
+    """
 
     # -------------------------------------------------------------- queries
     def eval_atoms(
@@ -545,6 +344,305 @@ class DynamicRangeForest:
     def dominated_moments(self, edges: np.ndarray, t: float, side: int) -> np.ndarray:
         """Single-window form of :meth:`dominated_moments_multi`: [n, k_s]."""
         return self.dominated_moments_multi(edges, np.array([float(t)]), side)[0]
+
+
+class DrfsSnapshot(_DrfsQueryView):
+    """Immutable point-in-time view of a :class:`DynamicRangeForest` (MVCC).
+
+    Pins the sealed arrays by reference (mutations allocate fresh arrays and
+    rebind, never writing in place), freezes the level list, and materializes
+    the pending CSR, so a query against the snapshot observes exactly the
+    event set visible when it was taken — concurrent ``insert`` / ``seal`` /
+    ``extend`` on the live forest cannot tear it. The ``(revision,
+    pend_revision)`` epoch pair is the snapshot's identity and the device
+    engine's pack-cache key. ``counters`` is shared with the live forest:
+    scan-work accounting stays a global roll-up.
+    """
+
+    def __init__(self, df: "DynamicRangeForest"):
+        self.net = df.net
+        self.ctx = df.ctx
+        self.depth = df.depth
+        self.lens = df.lens
+        self.ptr = df.ptr
+        self.pos = df.pos
+        self.time = df.time
+        self.phi = df.phi
+        self.levels = tuple(df.levels)
+        self.revision = df.revision
+        self.pend_revision = df.pend_revision
+        self.counters = df.counters
+        self._csr = df.pending_csr()
+        self._n_pending = df._n_pending
+
+    @property
+    def epoch(self) -> Tuple[int, int]:
+        return (self.revision, self.pend_revision)
+
+    @property
+    def n_sealed(self) -> int:
+        return int(self.pos.shape[0])
+
+    @property
+    def n_pending(self) -> int:
+        return int(self._n_pending)
+
+    def pending_csr(self):
+        return self._csr
+
+    def event_set(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(edge, pos, time) of every event visible at this snapshot —
+        sealed first (per-edge time order), then pending. The oracle-side
+        view serving tests rebuild fresh indices from."""
+        E = self.net.n_edges
+        parts_e = [np.repeat(np.arange(E, dtype=np.int64), np.diff(self.ptr))]
+        parts_p = [self.pos]
+        parts_t = [self.time]
+        if self._csr is not None:
+            pptr, pp, pt, _ = self._csr
+            parts_e.append(np.repeat(np.arange(E, dtype=np.int64), np.diff(pptr)))
+            parts_p.append(pp)
+            parts_t.append(pt)
+        return (
+            np.concatenate(parts_e),
+            np.concatenate(parts_p),
+            np.concatenate(parts_t),
+        )
+
+
+class DynamicRangeForest(_DrfsQueryView):
+    def __init__(
+        self,
+        net: RoadNetwork,
+        ee: EdgeEvents,
+        ctx: MomentContext,
+        phi: np.ndarray,
+        *,
+        depth: int = 8,
+    ):
+        self.net = net
+        self.ctx = ctx
+        self.depth = 0
+        E = net.n_edges
+        # sealed event arrays (grouped by edge, time-sorted within edge)
+        self.ptr = ee.ptr.copy()
+        self.pos = ee.pos.copy()
+        self.time = ee.time.copy()
+        self.phi = phi.copy()
+        self.lens = net.edge_len
+        # per-depth CSR: levels[d] = (node_ptr [E*2^d+1], time_s [N], cum [N,4,K], ev_idx [N])
+        self.levels: List[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]] = []
+        # streaming buffers
+        self._pend_edge: List[np.ndarray] = []
+        self._pend_pos: List[np.ndarray] = []
+        self._pend_time: List[np.ndarray] = []
+        self._pend_phi: List[np.ndarray] = []
+        self._n_pending = 0
+        self._pend_csr = None  # (pend_revision, csr) single-entry cache
+        # mutation epochs: device engines re-pack when these move
+        self.revision = 0  # sealed structure (seal / extend)
+        self.pend_revision = 0  # pending buffers (insert / seal)
+        # QueryStats work counters (TNKDE snapshots + diffs these per query):
+        #   pending — (atom, pending-event-on-its-edge) pairs examined
+        #   partial — (atom, boundary-leaf-event) pairs examined (exact mode)
+        self.counters = {"pending": 0, "partial": 0}
+        self._build_level(0)
+        for _ in range(depth):
+            self.extend()
+
+    # ----------------------------------------------------------- structure
+    @property
+    def n_sealed(self) -> int:
+        return int(self.pos.shape[0])
+
+    @property
+    def index_bytes(self) -> int:
+        return sum(p.nbytes + t.nbytes + c.nbytes + i.nbytes for p, t, c, i in self.levels)
+
+    def _node_of(self, edge: np.ndarray, pos: np.ndarray, d: int) -> np.ndarray:
+        u = pos / self.lens[edge]
+        return np.minimum((u * (1 << d)).astype(np.int64), (1 << d) - 1)
+
+    def _build_level(self, d: int) -> None:
+        E = self.net.n_edges
+        counts = np.diff(self.ptr)
+        edge_of = np.repeat(np.arange(E, dtype=np.int64), counts)
+        node_local = self._node_of(edge_of, self.pos, d)
+        node = edge_of * (1 << d) + node_local
+        order = np.argsort(node, kind="stable")  # keeps time order inside node
+        node_s = node[order]
+        node_ptr = np.zeros(E * (1 << d) + 1, dtype=np.int64)
+        np.add.at(node_ptr, node_s + 1, 1)
+        np.cumsum(node_ptr, out=node_ptr)
+        cum = segmented_cumsum(self.phi[order], node_ptr)
+        self.levels.append((node_ptr, self.time[order], cum, order.astype(np.int64)))
+
+    def extend(self) -> None:
+        """Extension operation (Algorithm 4): add one depth level, O(N)."""
+        self.depth += 1
+        self._build_level(self.depth)
+        self.revision += 1
+
+    # ------------------------------------------------------------ streaming
+    def insert(self, edge: np.ndarray, pos: np.ndarray, time: np.ndarray, phi: np.ndarray):
+        """Streaming insertion (persistent/streaming mode, §5).
+
+        Events must arrive in nondecreasing time order (streaming data).
+        Amortized O(H): appended to pending buffers; a geometric ``seal``
+        merges them when they exceed 25% of the sealed set.
+        """
+        self._pend_edge.append(np.asarray(edge, np.int64))
+        self._pend_pos.append(np.asarray(pos, np.float64))
+        self._pend_time.append(np.asarray(time, np.float64))
+        self._pend_phi.append(np.asarray(phi))
+        self._n_pending += len(pos)
+        self.pend_revision += 1
+        if self._n_pending > max(self.n_sealed, 64) // 4:
+            self.seal()
+
+    def pending_csr(self):
+        """Pending buffers as a per-edge CSR sorted by (edge, time).
+
+        Returns (ptr [E+1], pos, time, phi) or None when nothing is pending.
+        Shared by the host pending scan, the LS dominated path, the device
+        engine's pending upload, and the work accounting — cached on
+        ``pend_revision`` so the sort is paid once per insert, not per use.
+        """
+        if not self._n_pending:
+            return None
+        if self._pend_csr is not None and self._pend_csr[0] == self.pend_revision:
+            return self._pend_csr[1]
+        pe = np.concatenate(self._pend_edge)
+        pp = np.concatenate(self._pend_pos)
+        pt = np.concatenate(self._pend_time)
+        pf = np.concatenate(self._pend_phi)
+        ptr, order = group_by_edge_csr(self.net.n_edges, pe, pt)
+        csr = (ptr, pp[order], pt[order], pf[order])
+        self._pend_csr = (self.pend_revision, csr)
+        return csr
+
+    def seal(self) -> None:
+        """Merge pending buffers into the sealed structure, incrementally.
+
+        Only *dirty* edges (with pending events) are re-sorted and
+        re-aggregated; every clean edge's per-level block is copied over
+        verbatim (its node counts are unchanged — position bisection is
+        data-independent), with its ``ev_idx`` rows shifted by the edge's
+        CSR displacement. Cost: O(N) splice copies + O(n_dirty log n_dirty)
+        sort + O(n_dirty · H · K) cumsum, vs O(N · H · K) for a full rebuild.
+        """
+        if not self._n_pending:
+            return
+        E = self.net.n_edges
+        pe = np.concatenate(self._pend_edge)
+        pp = np.concatenate(self._pend_pos)
+        pt = np.concatenate(self._pend_time)
+        pf = np.concatenate(self._pend_phi)
+        po = np.lexsort((pt, pe))
+        pe, pp, pt, pf = pe[po], pp[po], pt[po], pf[po]
+
+        counts_old = np.diff(self.ptr)
+        pend_counts = np.bincount(pe, minlength=E).astype(np.int64)
+        dirty = pend_counts > 0  # [E]
+        counts_new = counts_old + pend_counts
+        new_ptr = np.zeros(E + 1, dtype=np.int64)
+        np.cumsum(counts_new, out=new_ptr[1:])
+        N_old, N_new = self.n_sealed, int(new_ptr[-1])
+        edge_old = np.repeat(np.arange(E, dtype=np.int64), counts_old)
+        shift = new_ptr[:-1] - self.ptr[:-1]  # [E] per-edge CSR displacement
+        dirty_ev = dirty[edge_old] if N_old else np.zeros(0, bool)
+
+        # ---- merge the sealed base arrays (dirty events + pending only) ----
+        de = np.concatenate([edge_old[dirty_ev], pe])
+        dp = np.concatenate([self.pos[dirty_ev], pp])
+        dt = np.concatenate([self.time[dirty_ev], pt])
+        dphi = np.concatenate([self.phi[dirty_ev], pf]) if self.phi.size else pf
+        dm = np.lexsort((dt, de))  # stable: old-before-pending on time ties
+
+        K_tail = pf.shape[1:]
+        new_pos = np.empty(N_new)
+        new_time = np.empty(N_new)
+        # promote like np.concatenate would — a float32 insert must not
+        # silently downcast the sealed float64 moment history
+        new_phi = np.empty((N_new,) + K_tail, dtype=np.result_type(self.phi.dtype, pf.dtype))
+        old_idx = np.arange(N_old, dtype=np.int64)
+        clean_src = old_idx[~dirty_ev]
+        clean_dst = clean_src + shift[edge_old[~dirty_ev]]
+        new_pos[clean_dst] = self.pos[clean_src]
+        new_time[clean_dst] = self.time[clean_src]
+        if self.phi.size:
+            new_phi[clean_dst] = self.phi[clean_src]
+        d_edges = np.nonzero(dirty)[0]
+        dirty_dst = ragged_arange(new_ptr[d_edges], counts_new[d_edges])
+        new_pos[dirty_dst] = dp[dm]
+        new_time[dirty_dst] = dt[dm]
+        new_phi[dirty_dst] = dphi[dm]
+        # old sealed index -> new sealed index (for per-level ev_idx remap)
+        old_to_new = np.empty(N_old, np.int64)
+        old_to_new[clean_src] = clean_dst
+        src_tag = np.concatenate([old_idx[dirty_ev], np.full(len(pe), -1, np.int64)])
+        tag_s = src_tag[dm]
+        was_old = tag_s >= 0
+        old_to_new[tag_s[was_old]] = dirty_dst[was_old]
+
+        # ---- splice every level: clean blocks copied, dirty rebuilt --------
+        edge_new = np.repeat(np.arange(E, dtype=np.int64), counts_new)
+        sel = np.nonzero(dirty[edge_new])[0]  # dirty events, new-array order
+        new_levels = []
+        eid_range = np.arange(E, dtype=np.int64)
+        for d, (nptr, tms, cum, eidx) in enumerate(self.levels):
+            nb = 1 << d
+            cnt_nodes_old = np.diff(nptr)
+            nl = self._node_of(edge_new[sel], new_pos[sel], d)
+            node_d = edge_new[sel] * nb + nl
+            order_d = np.argsort(node_d, kind="stable")
+            node_counts_dirty = np.bincount(node_d, minlength=E * nb).astype(np.int64)
+            cnt_nodes_new = np.where(np.repeat(dirty, nb), node_counts_dirty, cnt_nodes_old)
+            nptr_new = np.zeros(E * nb + 1, np.int64)
+            np.cumsum(cnt_nodes_new, out=nptr_new[1:])
+            tms_new = np.empty(N_new)
+            cum_new = np.empty((N_new,) + cum.shape[1:], dtype=cum.dtype)
+            eidx_new = np.empty(N_new, np.int64)
+            # clean edges: the whole per-edge block shifts uniformly
+            if N_old:
+                edge_of_slot = edge_old[eidx]
+                lvl_shift = nptr_new[eid_range * nb] - nptr[eid_range * nb]
+                clean_slot = np.nonzero(~dirty[edge_of_slot])[0]
+                dst_clean = clean_slot + lvl_shift[edge_of_slot[clean_slot]]
+                tms_new[dst_clean] = tms[clean_slot]
+                cum_new[dst_clean] = cum[clean_slot]
+                eidx_new[dst_clean] = old_to_new[eidx[clean_slot]]
+            # dirty edges: node-grouped, time-sorted within node, fresh cumsum
+            ev_sorted = sel[order_d]
+            dirty_nodes = np.nonzero(np.repeat(dirty, nb))[0]
+            ddst = ragged_arange(nptr_new[dirty_nodes], cnt_nodes_new[dirty_nodes])
+            tms_new[ddst] = new_time[ev_sorted]
+            eidx_new[ddst] = ev_sorted
+            seg_ptr = np.concatenate([[0], np.cumsum(cnt_nodes_new[dirty_nodes])]).astype(np.int64)
+            cum_new[ddst] = segmented_cumsum(new_phi[ev_sorted], seg_ptr)
+            new_levels.append((nptr_new, tms_new, cum_new, eidx_new))
+
+        self.ptr, self.pos, self.time, self.phi = new_ptr, new_pos, new_time, new_phi
+        self.levels = new_levels
+        self._pend_edge, self._pend_pos, self._pend_time, self._pend_phi = [], [], [], []
+        self._n_pending = 0
+        self._pend_csr = None
+        self.revision += 1
+        self.pend_revision += 1
+
+    # ----------------------------------------------------------------- MVCC
+    @property
+    def epoch(self) -> Tuple[int, int]:
+        """(revision, pend_revision) — the identity of the current state."""
+        return (self.revision, self.pend_revision)
+
+    def snapshot(self) -> DrfsSnapshot:
+        """Pin the current state as an immutable :class:`DrfsSnapshot`.
+
+        O(levels) — every captured array is shared by reference (mutations
+        rebind, never overwrite), so taking a snapshot per query is free.
+        """
+        return DrfsSnapshot(self)
 
 
 def _pos_mask(atoms: AtomSet, rep_atom: np.ndarray, p: np.ndarray) -> np.ndarray:

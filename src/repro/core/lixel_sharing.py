@@ -140,6 +140,8 @@ def dominated_sweep(F, index, ctx, dominated_work, ts) -> None:
     """
     ts_arr = np.asarray(ts, dtype=np.float64)
     W = len(ts_arr)
+    if W == 0 or not dominated_work:
+        return
     dm_multi = getattr(index, "dominated_moments_multi", None)
     for side in (0, 1):
         items = [(g, cols) for g, s, cols in dominated_work if s == side]

@@ -53,6 +53,7 @@ __all__ = [
     "FlatForestEngine",
     "FlatDynamicEngine",
     "make_window_batch",
+    "jit_entry_count",
 ]
 
 
@@ -631,6 +632,40 @@ def _get_dyn():
     return _JIT_DYN
 
 
+def jit_entry_count() -> int:
+    """Total compiled entries across the module-level jit caches.
+
+    The serving subsystem's recompile audit: a steady-state load run must
+    leave this number unchanged (every flush hits an existing entry).
+    Returns -1 when the running jax version does not expose a cache-size
+    probe on jitted callables.
+    """
+    fns = []
+    if _JIT_FLUSH is not None:
+        fns.append(_JIT_FLUSH)
+    if _JIT_DYN is not None:
+        fns.extend(_JIT_DYN)
+    total = 0
+    for f in fns:
+        probe = getattr(f, "_cache_size", None)
+        if probe is None:
+            return -1
+        total += int(probe())
+    return total
+
+
+class _SealedPack:
+    """Device tables for one sealed structure epoch (revision, depth)."""
+
+    __slots__ = ("tables", "n_levels", "max_occ", "nbytes")
+
+
+class _PendPack:
+    """Device tables for one pending-buffer epoch (pend_revision)."""
+
+    __slots__ = ("tables", "pend_steps", "nbytes")
+
+
 class FlatDynamicEngine(_DeviceEngine):
     """Device-resident streaming query engine over a DynamicRangeForest.
 
@@ -638,16 +673,26 @@ class FlatDynamicEngine(_DeviceEngine):
     tree is packed level-major into flat device tables (DESIGN.md §5) and
     every flush answers all W windows in one jit'd call, exactly like
     :class:`FlatForestEngine` for the static forest. Streaming mutations stay
-    on the host (drfs.py); this adapter re-packs **lazily**, keyed on the
-    forest's ``revision`` / ``pend_revision`` epochs:
+    on the host (drfs.py); this adapter packs **per snapshot**, keyed on the
+    ``(revision, pend_revision)`` epochs (DESIGN.md §6):
 
-      * ``insert`` only bumps ``pend_revision`` — the next flush re-uploads
-        the (small) pending CSR and queries see the new events through the
-        device-side masked pending scan. No tree work at all.
+      * every ``flush`` targets an explicit :class:`drfs.DrfsSnapshot` (the
+        live head by default) — a long micro-batch pinned to an old epoch
+        keeps answering from its own pack while inserts/seals move the live
+        forest, so a batch never observes a torn re-pack (MVCC);
+      * ``insert`` only bumps ``pend_revision`` — the next flush uploads the
+        (small) pending CSR of the snapshot it serves and queries see new
+        events through the device-side masked pending scan. No tree work.
       * ``seal`` / ``extend`` bump ``revision`` — the host repacks only the
-        dirtied edges (drfs.seal is incremental) and the next flush uploads
-        the new level tables. Event capacity is padded to an ⅛-octave size
-        class, so steady-state growth re-uploads but never recompiles.
+        dirtied edges (drfs.seal is incremental) and the next flush on the
+        new epoch uploads fresh level tables. Event capacity is padded to an
+        ⅛-octave size class, so steady-state growth re-uploads but never
+        recompiles.
+
+    Packs live in small LRU caches (``max_snapshots`` sealed epochs, a few
+    pending epochs); an evicted epoch re-packs on demand from the snapshot's
+    host arrays, so pinning older revisions trades device memory for upload
+    time, never correctness.
 
     Both the quantized-H₀ mode (partial boundary leaves dropped, paper §5.2)
     and the beyond-paper ``exact_leaf_scan`` mode run on device; work done by
@@ -655,70 +700,91 @@ class FlatDynamicEngine(_DeviceEngine):
     QueryStats counters host-side (same units as the NumPy path).
     """
 
-    def __init__(self, df):
+    def __init__(self, df, *, max_snapshots: int = 2):
         self._init_jax()
         self.df = df
-        self._rev = None
-        self._pend_rev = None
-        self._tab_cache = None  # (wb, revision, hq) -> leaf prefix tables
+        self.max_snapshots = max(int(max_snapshots), 1)
+        from collections import OrderedDict
+
+        self._sealed_packs = OrderedDict()  # (revision, depth) -> _SealedPack
+        self._pend_packs = OrderedDict()  # pend_revision -> _PendPack
+        self._tab_cache = OrderedDict()  # (id(wb), rev, depth, hq, exact) -> (wb, tabs)
         self.device_bytes = 0
-        self.refresh()
-        self.refresh_pending()
+        snap = df.snapshot()
+        self._get_sealed(snap)
+        self._get_pending(snap)
 
     # ----------------------------------------------------------- packing
-    def refresh(self) -> None:
-        """Re-pack the sealed level tables if the forest structure moved."""
-        df = self.df
-        key = (df.revision, df.depth)
-        if self._rev == key:
-            return
+    def _get_sealed(self, snap) -> _SealedPack:
+        """Sealed level tables for the snapshot's structure epoch (LRU)."""
+        key = (snap.revision, snap.depth)
+        pack = self._sealed_packs.get(key)
+        if pack is not None:
+            self._sealed_packs.move_to_end(key)
+            return pack
         jnp = self._jnp
-        E = df.net.n_edges
-        N = df.n_sealed
-        Lv = df.depth + 1
-        K = df.ctx.K
+        N = snap.n_sealed
+        Lv = snap.depth + 1
+        K = snap.ctx.K
         Np = _size_class(max(N, 1))
         time_lvl = np.full(Lv * Np, np.inf)
         pos_lvl = np.full(Lv * Np, np.inf)
         cum_lvl = np.zeros((Lv * Np, N_COMBOS, K))
         ptr_parts = []
         max_occ = np.zeros(Lv, np.int64)
-        for d, (nptr, tms, cum, eidx) in enumerate(df.levels):
+        for d, (nptr, tms, cum, eidx) in enumerate(snap.levels):
             time_lvl[d * Np : d * Np + N] = tms
-            pos_lvl[d * Np : d * Np + N] = df.pos[eidx]
+            pos_lvl[d * Np : d * Np + N] = snap.pos[eidx]
             cum_lvl[d * Np : d * Np + N] = cum
             ptr_parts.append(nptr)
             max_occ[d] = int(np.diff(nptr).max(initial=0))
         node_ptr = np.concatenate(ptr_parts).astype(np.int32)
-        self._max_occ = max_occ
-        self.n_levels = Lv
+        pack = _SealedPack()
         with self._jax.experimental.enable_x64():
-            self._sealed = dict(
+            pack.tables = dict(
                 time_lvl=jnp.asarray(time_lvl),
                 pos_lvl=jnp.asarray(pos_lvl),
                 cum_lvl=jnp.asarray(cum_lvl),
                 node_ptr=jnp.asarray(node_ptr),
-                edge_len=jnp.asarray(df.lens.astype(np.float64)),
+                edge_len=jnp.asarray(snap.lens.astype(np.float64)),
             )
-        self.device_bytes = time_lvl.nbytes + pos_lvl.nbytes + cum_lvl.nbytes + node_ptr.nbytes
-        self._rev = key
-        self._tab_cache = None
+        pack.n_levels = Lv
+        pack.max_occ = max_occ
+        pack.nbytes = time_lvl.nbytes + pos_lvl.nbytes + cum_lvl.nbytes + node_ptr.nbytes
+        self._sealed_packs[key] = pack
+        while len(self._sealed_packs) > self.max_snapshots:
+            old_key, _ = self._sealed_packs.popitem(last=False)
+            # drop window tables derived from the evicted structure epoch
+            for tk in [k for k in self._tab_cache if k[1:3] == old_key]:
+                del self._tab_cache[tk]
+        self._recount_bytes()
+        return pack
 
-    def refresh_pending(self) -> None:
-        """Re-upload the pending CSR if inserts landed since the last flush."""
-        df = self.df
-        if self._pend_rev == df.pend_revision:
-            return
+    def _recount_bytes(self) -> None:
+        # sealed + pending packs; the window-table cache is excluded (its
+        # entries are derived data, sized by W and dropped with their epoch)
+        self.device_bytes = sum(
+            p.nbytes for p in self._sealed_packs.values()
+        ) + sum(p.nbytes for p in self._pend_packs.values())
+
+    def _get_pending(self, snap) -> _PendPack:
+        """Pending-CSR tables for the snapshot's pending epoch (LRU)."""
+        key = snap.pend_revision
+        pack = self._pend_packs.get(key)
+        if pack is not None:
+            self._pend_packs.move_to_end(key)
+            return pack
         jnp = self._jnp
-        E = df.net.n_edges
-        K = df.ctx.K
-        csr = df.pending_csr()
+        E = snap.net.n_edges
+        K = snap.ctx.K
+        csr = snap.pending_csr()
+        pack = _PendPack()
         if csr is None:
             pptr = np.zeros(E + 1, np.int64)
             pp = np.zeros(1)
             pt = np.full(1, np.inf)
             pf = np.zeros((1, N_COMBOS, K))
-            self.pend_steps = 0
+            pack.pend_steps = 0
         else:
             pptr, pp, pt, pf = csr
             Pp = _size_class(len(pp), floor=64)
@@ -729,24 +795,31 @@ class FlatDynamicEngine(_DeviceEngine):
                 pf = np.concatenate([pf, np.zeros((pad,) + pf.shape[1:])])
             from .aggregation import next_pow2
 
-            self.pend_steps = next_pow2(int(np.diff(pptr).max(initial=1)))
+            pack.pend_steps = next_pow2(int(np.diff(pptr).max(initial=1)))
         with self._jax.experimental.enable_x64():
-            self._pending = dict(
+            pack.tables = dict(
                 pend_ptr=jnp.asarray(pptr),
                 pend_pos=jnp.asarray(pp),
                 pend_time=jnp.asarray(pt),
                 pend_phi=jnp.asarray(pf),
             )
-        self._pend_rev = df.pend_revision
+        pack.nbytes = sum(
+            int(np.prod(v.shape)) * v.dtype.itemsize for v in pack.tables.values()
+        )
+        self._pend_packs[key] = pack
+        while len(self._pend_packs) > self.max_snapshots + 2:
+            self._pend_packs.popitem(last=False)
+        self._recount_bytes()
+        return pack
 
-    def _forest(self):
+    def _forest(self, sealed: _SealedPack, pend: _PendPack):
         from .jax_engine import FlatDynamicForest
 
-        return FlatDynamicForest(**self._sealed, **self._pending)
+        return FlatDynamicForest(**sealed.tables, **pend.tables)
 
     # ------------------------------------------------------------ per query
-    def window_tables(self, wb, hq: int, exact: bool):
-        """Window tables for (wb, hq, mode), cached per query/structure epoch.
+    def window_tables(self, wb, snap, sealed: _SealedPack, hq: int, exact: bool):
+        """Window tables for (wb, snapshot epoch, hq, mode), LRU-cached.
 
         The tables are the engine's core hoist: all per-node time searches
         (and the q_t contraction, in exact mode) are paid once per query at
@@ -754,71 +827,78 @@ class FlatDynamicEngine(_DeviceEngine):
         table gathers per atom — quantized mode reads the leaf prefix tables
         (jax_engine.dyn_window_tables), exact mode the per-node value tables
         (jax_engine.dyn_node_tables) that the canonical walk consumes. The
-        single-entry cache is keyed on the WindowBatch object identity
-        (TNKDE builds one per query) and the forest's structure epoch.
+        tables depend only on the sealed structure (never the pending
+        buffers), so the cache key is (WindowBatch identity, structure
+        epoch, hq, mode) — each entry holds the WindowBatch itself so the
+        id() cannot be recycled by GC while the entry is alive.
         """
-        # hold the WindowBatch itself so identity cannot be recycled by GC
-        if self._tab_cache is not None:
-            c_wb, c_key, tabs = self._tab_cache
-            if c_wb is wb and c_key == (self._rev, hq, exact):
-                return tabs
+        key = (id(wb), snap.revision, snap.depth, int(hq), bool(exact))
+        hit = self._tab_cache.get(key)
+        if hit is not None and hit[0] is wb:
+            self._tab_cache.move_to_end(key)
+            return hit[1]
         leaf_fn, node_fn, _ = _get_dyn()
 
         def steps(occ):
             return max(int(np.ceil(np.log2(int(occ) + 1))) + 1, 1)
 
+        forest = self._forest(sealed, self._get_pending(snap))
         with self._jax.experimental.enable_x64():
             if exact:
-                spl = tuple(steps(o) for o in self._max_occ[: hq + 1])
+                spl = tuple(steps(o) for o in sealed.max_occ[: hq + 1])
                 tabs = node_fn(
-                    self._forest(), wb,
-                    n_levels=self.n_levels, hq=int(hq), steps_per_level=spl,
+                    forest, wb,
+                    n_levels=sealed.n_levels, hq=int(hq), steps_per_level=spl,
                 )
             else:
                 tabs = (leaf_fn(
-                    self._forest(), wb,
-                    n_levels=self.n_levels, hq=int(hq),
-                    search_steps=steps(self._max_occ[hq]),
+                    forest, wb,
+                    n_levels=sealed.n_levels, hq=int(hq),
+                    search_steps=steps(sealed.max_occ[hq]),
                 ),)
-        self._tab_cache = (wb, (self._rev, hq, exact), tabs)
+        self._tab_cache[key] = (wb, tabs)
+        while len(self._tab_cache) > 4 * self.max_snapshots:
+            self._tab_cache.popitem(last=False)
         return tabs
 
-    def flush(self, heat, atoms: AtomSet, wb, *, h0=None, exact_leaf=False, **_):
-        """heat[L, W] += one atom block, all W windows, streaming-consistent.
+    def flush(self, heat, atoms: AtomSet, wb, *, h0=None, exact_leaf=False,
+              snapshot=None, **_):
+        """heat[L, W] += one atom block, all W windows, snapshot-consistent.
 
-        Lazily re-packs after seal/extend and re-uploads pending buffers
-        after insert, then answers the fully-covered leaf ranges from the
-        cached window tables plus boundary/pending scans, in one jit'd
-        device call per atom size class.
+        Packs (or re-uses) the device tables of the targeted snapshot's
+        epoch, then answers the fully-covered leaf ranges from the cached
+        window tables plus boundary/pending scans, in one jit'd device call
+        per atom size class. ``snapshot=None`` pins the live head — the
+        pre-MVCC behaviour.
         """
         if atoms.m == 0:
             return heat
-        self.refresh()
-        self.refresh_pending()
-        df = self.df
-        hq = df.depth if h0 is None else min(int(h0), df.depth)
+        snap = snapshot if snapshot is not None else self.df.snapshot()
+        sealed = self._get_sealed(snap)
+        pend = self._get_pending(snap)
+        hq = snap.depth if h0 is None else min(int(h0), snap.depth)
         scan_steps = 0
         if exact_leaf:
             # next multiple of 8: bounds recompiles as occupancy drifts while
             # wasting at most 7 masked trips (pow-of-two rounding wastes ~2x)
-            occ = int(self._max_occ[hq])
+            occ = int(sealed.max_occ[hq])
             scan_steps = -(-occ // 8) * 8 if occ else 0
         # work accounting (same units as the NumPy scans: (atom, event) pairs
         # examined, per half-window for partial leaves / per window pending)
         W = heat.shape[1]
-        df.counters["pending"] += df.pending_scan_pairs(atoms) * W
+        snap.counters["pending"] += snap.pending_scan_pairs(atoms) * W
         if exact_leaf:
-            df.counters["partial"] += df.partial_scan_pairs(atoms, hq) * 2 * W
-        tables = self.window_tables(wb, hq, bool(exact_leaf))
+            snap.counters["partial"] += snap.partial_scan_pairs(atoms, hq) * 2 * W
+        tables = self.window_tables(wb, snap, sealed, hq, bool(exact_leaf))
         _, _, flush_fn = _get_dyn()
         with self._jax.experimental.enable_x64():
             fa = self._pad_atoms(atoms, np.arange(atoms.m))
             heat = flush_fn(
-                self._forest(), fa, wb, tables, heat,
-                n_levels=self.n_levels,
+                self._forest(sealed, pend), fa, wb, tables, heat,
+                n_levels=sealed.n_levels,
                 hq=int(hq),
                 scan_steps=int(scan_steps),
-                pend_steps=int(self.pend_steps),
+                pend_steps=int(pend.pend_steps),
                 exact=bool(exact_leaf),
             )
         return heat

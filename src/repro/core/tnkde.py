@@ -165,6 +165,27 @@ class TNKDE:
     def n_lixels(self) -> int:
         return self.lix.n_lixels
 
+    @property
+    def epoch(self):
+        """(revision, pend_revision) of the index — (0, 0) for static ones."""
+        if self.index is not None and hasattr(self.index, "epoch"):
+            return self.index.epoch
+        return (0, 0)
+
+    def snapshot(self):
+        """Pin the current index state as an immutable read handle (MVCC).
+
+        For the streaming DRFS index this returns a :class:`drfs.DrfsSnapshot`
+        that ``query(ts, at=snap)`` evaluates against, so inserts and seals
+        issued after the pin are invisible to the query — the serving
+        subsystem (``repro.serve``) pins one per request at admission.
+        Static indices (rfs/ada) are immutable, so the handle is ``None``
+        and ``at=None`` reads the index directly.
+        """
+        if self.index is not None and hasattr(self.index, "snapshot"):
+            return self.index.snapshot()
+        return None
+
     def insert(self, events: Events) -> None:
         """Streaming insertion (DRFS only, §5)."""
         if self.solution != "drfs":
@@ -226,8 +247,21 @@ class TNKDE:
                 if geom.x.shape[0]:
                     yield geom
 
-    def query(self, ts: Sequence[float]) -> np.ndarray:
-        """KDE values for every lixel, for each window center in ts: [W, L]."""
+    def query(self, ts: Sequence[float], *, at=None) -> np.ndarray:
+        """KDE values for every lixel, for each window center in ts: [W, L].
+
+        ``at`` pins the query to a :meth:`snapshot` handle (DRFS only): the
+        result reflects exactly the event set visible when the snapshot was
+        taken, regardless of inserts/seals issued since (MVCC, DESIGN.md §6).
+        Planning still walks the live event view — a superset of the
+        snapshot's events, which is conservative: extra candidate atoms
+        evaluate to zero against the pinned index, and the Lixel-Sharing
+        domination bounds only tighten as events accrue. ``at=None`` reads
+        the latest revision (one snapshot is pinned per query internally so
+        a single query can never straddle a mutation).
+        """
+        if at is not None and self.solution != "drfs":
+            raise ValueError("query(at=snapshot) requires solution='drfs'")
         ts = list(map(float, ts))
         t0 = _time.perf_counter()
         W = len(ts)
@@ -235,6 +269,10 @@ class TNKDE:
         F = np.zeros((W, L))
         if W == 0:
             return F
+        snap = at
+        if snap is None and self.solution == "drfs":
+            snap = self.index.snapshot()
+        idx = snap if snap is not None else self.index
         net, lix, ee, ctx = self.net, self.lix, self.ee, self.ctx
         pend_atoms: List = []
         pend_count = 0
@@ -264,12 +302,13 @@ class TNKDE:
                     cascade=self.cascade,
                     h0=self.drfs_h0,
                     exact_leaf=self.drfs_exact_leaf,
+                    snapshot=snap,
                 )
                 pend_atoms = []
                 pend_count = 0
                 return
             for w, t in enumerate(ts):
-                vals = self.index.eval_atoms(
+                vals = idx.eval_atoms(
                     atoms,
                     t,
                     cascade=self.cascade,
@@ -314,7 +353,7 @@ class TNKDE:
             F += self._fe.to_numpy(heat)
         # ---- Lixel Sharing: dominated edges, batched across the network ----
         if dominated_work:
-            dominated_sweep(F, self.index, ctx, dominated_work, ts)
+            dominated_sweep(F, idx, ctx, dominated_work, ts)
         scan1 = getattr(self.index, "counters", None)
         if scan1 is not None:
             self.stats.n_pending_scanned += scan1["pending"] - scan0.get("pending", 0)

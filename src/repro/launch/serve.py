@@ -2,14 +2,19 @@
 
 Two workloads, selected with --workload:
 
-  tnkde  — the paper's: a TN-KDE query server answering batched *online*
-           temporal-window requests against a build-once RFS index (the
-           "multiple temporal KDEs" scenario of §8.2), with DRFS streaming
-           ingestion of new events between batches.
+  tnkde  — the paper's: a TN-KDE query server (``repro.serve.TNKDEServer``)
+           answering micro-batched *online* temporal-window requests against
+           a build-once streaming index (the "multiple temporal KDEs"
+           scenario of §8.2): requests pin MVCC snapshots at admission, DRFS
+           ingestion proceeds between pumps, coalesced batches share one
+           window-batched engine pass, repeats hit the epoch-keyed result
+           cache. ``--sequential`` runs the pre-subsystem one-request-at-a-
+           time loop on the same mix for comparison.
   lm     — LM decode loop: prefill a prompt batch, then step the KV cache
            (reduced config on CPU; production mesh via dryrun).
 
   PYTHONPATH=src python -m repro.launch.serve --workload tnkde --requests 12
+  repro-serve --requests 24 --rate 10 --batch-cap 8      (console entry point)
 """
 from __future__ import annotations
 
@@ -30,57 +35,78 @@ def serve_tnkde(
     b_s: float = 1000.0,
     window_frac: float = 0.25,
     stream_every: int = 4,
+    max_windows: int = 3,
+    rate_hz=None,
+    batch_cap: int = 8,
+    sequential: bool = False,
     seed: int = 0,
     log_fn=print,
 ):
-    """Online batched TN-KDE serving with streaming inserts (DRFS)."""
+    """Online micro-batched TN-KDE serving with streaming inserts (DRFS).
+
+    Builds the index once over 90% of the events, then drives the serving
+    subsystem with a mix of 1..max_windows-center requests and periodic
+    inserts of the held-back stream. ``rate_hz=None`` saturates (closed
+    loop); a finite rate replays Poisson arrivals. Returns the per-request
+    latency list (seconds; completion − arrival under the server).
+    """
     from repro.core import TNKDE
     from repro.core.events import Events
     from repro.data.spatial import make_dataset
+    from repro.serve import (
+        ProfileConfig,
+        TNKDEServer,
+        make_request_mix,
+        run_sequential,
+        run_server,
+    )
 
     net, ev, meta = make_dataset(dataset, scale=scale, seed=seed)
-    rng = np.random.default_rng(seed + 7)
     # hold back 10% of events (by time) as the live stream
     order = np.argsort(ev.time, kind="stable")
     cut = int(ev.n * 0.9)
     base = Events(ev.edge_id[order[:cut]], ev.pos[order[:cut]], ev.time[order[:cut]])
     stream = Events(ev.edge_id[order[cut:]], ev.pos[order[cut:]], ev.time[order[cut:]])
-    t0, t1 = ev.time.min(), ev.time.max()
+    t0, t1 = float(ev.time.min()), float(ev.time.max())
     b_t = window_frac * (t1 - t0)
+    prof = ProfileConfig(g=g, b_s=b_s, b_t=b_t, drfs_depth=8)
+    workload = make_request_mix(
+        stream, t0 + b_t, t1 - b_t,
+        n_requests=n_requests, stream_every=stream_every,
+        max_windows=max_windows, seed=seed + 7,
+    )
 
     t_build = time.perf_counter()
-    model = TNKDE(net, base, g=g, b_s=b_s, b_t=b_t, solution="drfs", drfs_depth=8)
-    log_fn(
-        f"[serve-tnkde] dataset={dataset} x{scale} |V|={meta['V']} |E|={meta['E']} "
-        f"N={meta['N']} lixels={model.n_lixels} build={time.perf_counter()-t_build:.2f}s"
-    )
-    lat = []
-    s_off = 0
-    per = max(stream.n // max(n_requests // stream_every, 1), 1)
-    for r in range(n_requests):
-        t_query = float(rng.uniform(t0 + b_t, t1 - b_t))
-        tq0 = time.perf_counter()
-        F = model.query([t_query])
-        dt = time.perf_counter() - tq0
-        lat.append(dt)
+    if sequential:
+        model = TNKDE(net, base, **prof.to_kwargs())
         log_fn(
-            f"[serve-tnkde] req {r}: t={t_query:.0f} window=±{b_t:.0f}s "
-            f"F.sum={F.sum():.1f} hot={F.max():.2f} latency={dt*1e3:.1f}ms"
+            f"[serve-tnkde] sequential dataset={dataset} x{scale} |V|={meta['V']} "
+            f"|E|={meta['E']} N={meta['N']} lixels={model.n_lixels} "
+            f"build={time.perf_counter()-t_build:.2f}s"
         )
-        if (r + 1) % stream_every == 0 and s_off < stream.n:
-            batch = Events(
-                stream.edge_id[s_off : s_off + per],
-                stream.pos[s_off : s_off + per],
-                stream.time[s_off : s_off + per],
-            )
-            model.insert(batch)
-            s_off += per
-            log_fn(f"[serve-tnkde] streamed {batch.n} new events (total {cut + s_off})")
+        rep = run_sequential(model, workload)
+    else:
+        server = TNKDEServer(net, base, {"default": prof}, batch_cap=batch_cap)
+        log_fn(
+            f"[serve-tnkde] dataset={dataset} x{scale} |V|={meta['V']} |E|={meta['E']} "
+            f"N={meta['N']} lixels={server.models['default'].n_lixels} "
+            f"build={time.perf_counter()-t_build:.2f}s batch_cap={batch_cap} "
+            f"rate={'saturated' if rate_hz is None else f'{rate_hz:g}/s'}"
+        )
+        rep = run_server(server, workload, rate_hz=rate_hz, seed=seed + 11)
+        s = server.stats
+        log_fn(
+            f"[serve-tnkde] {s.n_requests} requests in {s.n_batches} batches; "
+            f"windows req={s.n_windows_requested} eval={s.n_windows_evaluated} "
+            f"cache hits={server.cache.hits} misses={server.cache.misses}"
+        )
+    summ = rep.summary()
     log_fn(
-        f"[serve-tnkde] done: p50={np.percentile(lat,50)*1e3:.1f}ms "
-        f"p95={np.percentile(lat,95)*1e3:.1f}ms"
+        f"[serve-tnkde] done: {summ['throughput_rps']:.2f} req/s "
+        f"p50={summ['p50_ms']:.1f}ms p95={summ['p95_ms']:.1f}ms "
+        f"p99={summ['p99_ms']:.1f}ms"
     )
-    return lat
+    return list(rep.latencies)
 
 
 def serve_lm(*, arch: str = "qwen2.5-3b", prompt_len: int = 32, decode_len: int = 16,
@@ -123,10 +149,20 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--dataset", default="berkeley")
     ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate (req/s); default: saturated")
+    ap.add_argument("--batch-cap", type=int, default=8,
+                    help="max requests coalesced into one micro-batch")
+    ap.add_argument("--sequential", action="store_true",
+                    help="pre-subsystem one-request-at-a-time loop (baseline)")
     ap.add_argument("--arch", default="qwen2.5-3b")
     args = ap.parse_args(argv)
     if args.workload == "tnkde":
-        serve_tnkde(n_requests=args.requests, dataset=args.dataset, scale=args.scale)
+        serve_tnkde(
+            n_requests=args.requests, dataset=args.dataset, scale=args.scale,
+            rate_hz=args.rate, batch_cap=args.batch_cap,
+            sequential=args.sequential,
+        )
     else:
         serve_lm(arch=args.arch)
 

@@ -1,0 +1,51 @@
+"""repro.serve — snapshot-isolated, micro-batched TN-KDE query serving.
+
+The production front of the engines (DESIGN.md §6): admission +
+micro-batching (`scheduler`), MVCC revision pinning over the streaming
+DRFS index (`drfs.DrfsSnapshot` threaded through `TNKDE.query(at=...)`),
+an epoch-keyed result cache (`cache`), the `TNKDEServer` control loop
+(`server`), and the load-generation / latency harness (`loadgen`) that
+`benchmarks/perf_serve.py` and `repro.launch.serve` drive.
+"""
+from .cache import ResultCache
+from .loadgen import (
+    InsertItem,
+    LoadReport,
+    QueryItem,
+    make_arrivals,
+    make_request_mix,
+    run_sequential,
+    run_server,
+    summarize,
+)
+from .scheduler import MicroBatch, MicroBatcher, Request, window_class
+from .server import (
+    ProfileConfig,
+    RequestStats,
+    Response,
+    ServerStats,
+    TNKDEServer,
+    jit_entries,
+)
+
+__all__ = [
+    "InsertItem",
+    "LoadReport",
+    "MicroBatch",
+    "MicroBatcher",
+    "ProfileConfig",
+    "QueryItem",
+    "Request",
+    "RequestStats",
+    "ResultCache",
+    "Response",
+    "ServerStats",
+    "TNKDEServer",
+    "jit_entries",
+    "make_arrivals",
+    "make_request_mix",
+    "run_sequential",
+    "run_server",
+    "summarize",
+    "window_class",
+]

@@ -1,0 +1,145 @@
+"""Admission + micro-batching scheduler (DESIGN.md §6).
+
+Requests are admitted into per-``(profile, epoch)`` queues — the epoch pair
+``(revision, pend_revision)`` pinned at admission is both the MVCC read
+version and the batching compatibility key: every request in a micro-batch
+shares one immutable snapshot, so a batch can never straddle a mutation.
+
+Batch formation coalesces queued requests until either the request cap or
+the window cap is reached; the union of the batch's distinct window centers
+is evaluated in ONE window-batched engine pass (the multiple-temporal-KDE
+hot path, DESIGN.md §4) and each request is served its own rows. The
+evaluated center count is padded up to its **window class** — the ladder
+1, 2, then even counts up to ``window_cap`` (see :func:`window_class`) —
+by repeating a real center, so the module-level jit cache sees ~cap/2
+distinct Wh shapes, small enough to warm exhaustively while wasting at
+most one evaluated window: steady-state serving reuses compiled entries
+for every flush, exactly like the atom size classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Request", "MicroBatch", "MicroBatcher", "window_class"]
+
+
+def window_class(n: int, cap: int) -> int:
+    """Pad a distinct-center count to its window class: 1, 2, then even
+    counts. The class set below ``cap`` has ~cap/2 members — small enough
+    to warm exhaustively — while padding wastes at most ONE evaluated
+    window (the marginal window is the engines' cheapest unit, but on
+    gather-bound hosts it is far from free, so pow-of-two padding would
+    throw away real throughput). Counts above ``cap`` (one oversized
+    request shipping alone) round to their own even class — allowed, but
+    each such class compiles once.
+    """
+    n = max(int(n), 1)
+    c = n if n <= 2 else -(-n // 2) * 2
+    return c if n > cap else min(c, cap)
+
+
+@dataclasses.dataclass
+class Request:
+    """One admitted query: window centers against a pinned snapshot."""
+
+    id: int
+    profile: str
+    ts: Tuple[float, ...]
+    epoch: Tuple[int, int]
+    lixels: Optional[np.ndarray]  # lixel subset (None = full heatmap)
+    tag: object  # caller correlation handle (load generators use it)
+    arrival: float  # perf_counter timestamp at admission
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """Coalesced unit of execution: requests sharing (profile, snapshot)."""
+
+    profile: str
+    epoch: Tuple[int, int]
+    snapshot: object
+    requests: List[Request]
+
+    @property
+    def centers(self) -> List[float]:
+        seen: "OrderedDict[float, None]" = OrderedDict()
+        for r in self.requests:
+            for t in r.ts:
+                seen.setdefault(float(t))
+        return list(seen)
+
+
+class MicroBatcher:
+    def __init__(self, batch_cap: int = 8, window_cap: int = 16):
+        if batch_cap < 1 or window_cap < 1:
+            raise ValueError("batch_cap and window_cap must be >= 1")
+        self.batch_cap = int(batch_cap)
+        self.window_cap = int(window_cap)
+        # (profile, epoch) -> queued requests; insertion order = age order
+        self._queues: "OrderedDict[Tuple[str, Tuple[int, int]], List[Request]]" = (
+            OrderedDict()
+        )
+        self._snaps: Dict[Tuple[str, Tuple[int, int]], object] = {}
+
+    # ------------------------------------------------------------ admission
+    def admit(self, req: Request, snapshot: object) -> None:
+        key = (req.profile, req.epoch)
+        self._queues.setdefault(key, []).append(req)
+        self._snaps.setdefault(key, snapshot)
+
+    @property
+    def n_queued(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def oldest_arrival(self) -> Optional[float]:
+        arrivals = [q[0].arrival for q in self._queues.values() if q]
+        return min(arrivals) if arrivals else None
+
+    def oldest_epoch(self, profile: str) -> Optional[Tuple[int, int]]:
+        """Oldest epoch still pinned by a queued request of ``profile`` —
+        the result-cache pruning floor."""
+        epochs = [k[1] for k, q in self._queues.items() if k[0] == profile and q]
+        return min(epochs) if epochs else None
+
+    def _full(self, q: Sequence[Request]) -> bool:
+        if len(q) >= self.batch_cap:
+            return True
+        centers = {float(t) for r in q for t in r.ts}
+        return len(centers) >= self.window_cap
+
+    @property
+    def has_ready_batch(self) -> bool:
+        return any(self._full(q) for q in self._queues.values())
+
+    # ------------------------------------------------------------ formation
+    def form_batches(self, *, force: bool = True) -> List[MicroBatch]:
+        """Pop micro-batches: up to ``batch_cap`` requests whose union of
+        distinct centers fits ``window_cap`` (a single oversized request
+        still ships alone). ``force=False`` only drains full batches —
+        the load generator's linger policy decides when to force."""
+        batches: List[MicroBatch] = []
+        for key in list(self._queues):
+            q = self._queues[key]
+            while q and (force or self._full(q)):
+                take: List[Request] = []
+                centers: set = set()
+                while q and len(take) < self.batch_cap:
+                    union = centers | {float(t) for t in q[0].ts}
+                    if take and len(union) > self.window_cap:
+                        break
+                    take.append(q.pop(0))
+                    centers = union
+                batches.append(
+                    MicroBatch(
+                        profile=key[0], epoch=key[1],
+                        snapshot=self._snaps[key], requests=take,
+                    )
+                )
+            if not q:
+                del self._queues[key]
+                self._snaps.pop(key, None)
+        return batches

@@ -1,0 +1,262 @@
+"""`TNKDEServer` — snapshot-isolated, micro-batched TN-KDE query serving.
+
+Ties the serving subsystem together (DESIGN.md §6):
+
+    submit() ── pins (profile, epoch, snapshot) ──▶ MicroBatcher queues
+    insert()/seal() ── move the DRFS epochs; queued requests keep their pins
+    pump() ── forms micro-batches ──▶ cache probe ──▶ ONE window-batched
+              engine pass per batch against the batch's snapshot ──▶ rows
+              cached, responses assembled (lixel slicing, QueryStats)
+
+A server hosts one or more **profiles** — named `TNKDE` models over the
+same network/events that differ in bandwidths, kernels or quantization
+(the "multiple temporal KDEs" of the paper, §8.2). Heterogeneous requests
+are compatible for coalescing exactly when they share a profile and a
+pinned epoch; the scheduler never mixes snapshots inside a batch.
+
+Single-threaded by design: admission, mutation and pumping interleave in
+one control loop (the load generator's), and MVCC — not locking — is what
+keeps a long micro-batch consistent while inserts land between pumps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import TNKDE
+from repro.core.events import Events
+
+from .cache import ResultCache
+from .scheduler import MicroBatch, MicroBatcher, Request, window_class
+
+__all__ = [
+    "ProfileConfig",
+    "RequestStats",
+    "Response",
+    "ServerStats",
+    "TNKDEServer",
+    "jit_entries",
+]
+
+
+def jit_entries() -> int:
+    """Compiled-entry count of the module-level engine jit caches — the
+    recompile audit hook (0 growth across a steady-state run = every flush
+    was a cache hit). -1 when the jax version exposes no probe."""
+    from repro.core.rfs import jit_entry_count
+
+    return jit_entry_count()
+
+
+@dataclasses.dataclass
+class ProfileConfig:
+    """One served model configuration (a bandwidth/kernel/quantization mix)."""
+
+    g: float = 50.0
+    b_s: float = 1000.0
+    b_t: float = 86400.0
+    spatial_kernel: str = "triangular"
+    temporal_kernel: str = "triangular"
+    solution: str = "drfs"
+    engine: str = "auto"
+    lixel_sharing: bool = False
+    drfs_depth: int = 8
+    drfs_h0: Optional[int] = None
+    drfs_exact_leaf: bool = False
+
+    def to_kwargs(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request roll-up attached to every Response."""
+
+    epoch: Tuple[int, int]  # pinned (revision, pend_revision)
+    queue_seconds: float  # admission -> batch execution start
+    service_seconds: float  # the batch's engine wall time (shared)
+    batch_size: int  # requests coalesced into the batch
+    windows_evaluated: int  # padded centers the batch sent to the engine
+    cache_hits: int  # this request's centers served from cache
+    cache_misses: int
+    atoms: int  # engine atoms the batch flushed (shared roll-up)
+
+
+@dataclasses.dataclass
+class Response:
+    id: int
+    tag: object
+    heat: np.ndarray  # [len(ts), L] (or [len(ts), len(lixels)])
+    stats: RequestStats
+
+
+@dataclasses.dataclass
+class ServerStats:
+    n_requests: int = 0
+    n_batches: int = 0
+    n_windows_requested: int = 0  # sum of len(req.ts)
+    n_windows_evaluated: int = 0  # padded engine centers actually flushed
+    n_rows_computed: int = 0  # distinct (epoch, center) rows evaluated
+    queue_seconds: float = 0.0
+    service_seconds: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class TNKDEServer:
+    def __init__(
+        self,
+        net,
+        events: Events,
+        profiles: Optional[Dict[str, ProfileConfig]] = None,
+        *,
+        batch_cap: int = 8,
+        window_cap: int = 16,
+        cache_rows: int = 4096,
+    ):
+        profiles = profiles or {"default": ProfileConfig()}
+        self.profiles = {
+            name: (p if isinstance(p, ProfileConfig) else ProfileConfig(**p))
+            for name, p in profiles.items()
+        }
+        self.models: Dict[str, TNKDE] = {
+            name: TNKDE(net, events, **cfg.to_kwargs())
+            for name, cfg in self.profiles.items()
+        }
+        self.window_cap = int(window_cap)
+        self.scheduler = MicroBatcher(batch_cap=batch_cap, window_cap=window_cap)
+        self.cache = ResultCache(cache_rows)
+        self.stats = ServerStats()
+        self._next_id = 0
+
+    # ------------------------------------------------------------ admission
+    def submit(
+        self,
+        ts: Sequence[float],
+        *,
+        profile: str = "default",
+        lixels: Optional[np.ndarray] = None,
+        tag: object = None,
+    ) -> int:
+        """Admit a query; returns its request id. The index state is pinned
+        NOW — mutations issued between admission and the flush are invisible
+        to this request (snapshot isolation)."""
+        model = self.models[profile]  # KeyError = unknown profile
+        req = Request(
+            id=self._next_id,
+            profile=profile,
+            ts=tuple(float(t) for t in ts),
+            epoch=model.epoch,
+            lixels=None if lixels is None else np.asarray(lixels, np.int64),
+            tag=tag,
+            arrival=time.perf_counter(),
+        )
+        self._next_id += 1
+        self.scheduler.admit(req, model.snapshot())
+        return req.id
+
+    @property
+    def n_queued(self) -> int:
+        return self.scheduler.n_queued
+
+    @property
+    def has_ready_batch(self) -> bool:
+        return self.scheduler.has_ready_batch
+
+    # ------------------------------------------------------------ mutation
+    def insert(self, events: Events) -> None:
+        """Streaming insertion into every profile (epochs move; queued
+        requests keep serving their pinned snapshots)."""
+        bad = [n for n, m in self.models.items() if m.solution != "drfs"]
+        if bad:
+            raise ValueError(
+                f"insert() requires every profile to be streaming (drfs); "
+                f"static profiles: {bad}"
+            )
+        for name, model in self.models.items():
+            model.insert(events)
+            floor = self.scheduler.oldest_epoch(name)
+            self.cache.prune_below(
+                name, model.epoch if floor is None else min(floor, model.epoch)
+            )
+
+    def seal(self) -> None:
+        """Force-merge pending buffers on every streaming profile."""
+        for model in self.models.values():
+            if model.solution == "drfs":
+                model.index.seal()
+
+    # ------------------------------------------------------------ execution
+    def pump(self, *, force: bool = True) -> List[Response]:
+        """Form and execute micro-batches; returns completed responses.
+        ``force=False`` executes only batches that reached a cap (the load
+        generator's linger policy decides when to force a drain)."""
+        responses: List[Response] = []
+        for batch in self.scheduler.form_batches(force=force):
+            responses.extend(self._execute(batch))
+        return responses
+
+    def _execute(self, batch: MicroBatch) -> List[Response]:
+        model = self.models[batch.profile]
+        t_start = time.perf_counter()
+        centers = batch.centers
+        rowmap: Dict[float, np.ndarray] = {}
+        misses: List[float] = []
+        for c in centers:
+            row = self.cache.get(ResultCache.key(batch.profile, batch.epoch, c))
+            if row is None:
+                misses.append(c)
+            else:
+                rowmap[c] = row
+        atoms0 = model.stats.n_atoms
+        n_eval = 0
+        if misses:
+            # pad the distinct-center count to its window class by repeating
+            # a real center: the jit cache sees O(log cap) Wh shapes total
+            wc = window_class(len(misses), self.window_cap)
+            eval_ts = misses + [misses[0]] * (wc - len(misses))
+            n_eval = len(eval_ts)
+            F = model.query(eval_ts, at=batch.snapshot)
+            for i, c in enumerate(misses):
+                # copy: a view would pin the whole padded [W, L] batch array
+                # in the cache for as long as the row lives
+                row = F[i].copy()
+                rowmap[c] = row
+                self.cache.put(ResultCache.key(batch.profile, batch.epoch, c), row)
+        service = time.perf_counter() - t_start
+        atoms = model.stats.n_atoms - atoms0
+        miss_set = set(misses)
+        L = model.n_lixels
+        out: List[Response] = []
+        for req in batch.requests:
+            heat = (
+                np.stack([rowmap[float(t)] for t in req.ts])
+                if req.ts
+                else np.zeros((0, L))
+            )
+            if req.lixels is not None:
+                heat = heat[:, req.lixels]
+            hits = sum(1 for t in req.ts if float(t) not in miss_set)
+            stats = RequestStats(
+                epoch=batch.epoch,
+                queue_seconds=t_start - req.arrival,
+                service_seconds=service,
+                batch_size=len(batch.requests),
+                windows_evaluated=n_eval,
+                cache_hits=hits,
+                cache_misses=len(req.ts) - hits,
+                atoms=atoms,
+            )
+            out.append(Response(id=req.id, tag=req.tag, heat=heat, stats=stats))
+            self.stats.n_requests += 1
+            self.stats.n_windows_requested += len(req.ts)
+            self.stats.queue_seconds += stats.queue_seconds
+        self.stats.n_batches += 1
+        self.stats.n_windows_evaluated += n_eval
+        self.stats.n_rows_computed += len(misses)
+        self.stats.service_seconds += service
+        return out

@@ -1,0 +1,160 @@
+"""Edge-case coverage for Lixel Sharing's dominated sweep (paper §6).
+
+Four corners the main suites never isolate: an empty window set (W=0 must
+be a strict no-op), single-lixel query edges (the l_a < 3 direct path of
+``dominated_contribution``), a query edge whose every candidate is
+dominated (the Δ²/direct path carries the whole heatmap), and dominated
+edges holding *pending* DRFS events (the streaming branch of
+``dominated_moments_multi`` must fold unsealed events in).
+"""
+import numpy as np
+import pytest
+
+from repro.core import TNKDE
+from repro.core.events import Events
+from repro.core.lixel_sharing import classify_candidates, dominated_sweep
+from repro.core.network import RoadNetwork
+from repro.data.spatial import make_events, make_network
+
+DAY = 86400.0
+TS = [2.0 * DAY, 5.0 * DAY]
+
+
+def _path_net(lengths):
+    """v0 - v1 - ... - vn chain; far endpoints only reachable through the
+    chain, which is what makes whole edges dominated."""
+    n = len(lengths)
+    return RoadNetwork(
+        n_vertices=n + 1,
+        edge_src=np.arange(n, dtype=np.int32),
+        edge_dst=np.arange(1, n + 1, dtype=np.int32),
+        edge_len=np.asarray(lengths, np.float64),
+    )
+
+
+def _events_on(edge_ids, positions, times):
+    return Events(
+        np.asarray(edge_ids, np.int64),
+        np.asarray(positions, np.float64),
+        np.asarray(times, np.float64),
+    )
+
+
+def _collect_work(model):
+    """The (geom, side, cols) triples TNKDE.query defers to dominated_sweep."""
+    work = []
+    for geom in model.edge_geometries():
+        dom_c, dom_d, _, _ = classify_candidates(
+            geom, model.ctx, model.ev_min_pos, model.ev_max_pos
+        )
+        for side, mask in ((0, dom_c), (1, dom_d)):
+            cols = np.nonzero(mask)[0]
+            if len(cols):
+                work.append((geom, side, cols))
+    return work
+
+
+def _ls_stats_match(model_kw, net, ev, ts, rtol=1e-9):
+    """LS on == LS off on the same model config; returns the LS stats."""
+    ref = TNKDE(net, ev, lixel_sharing=False, **model_kw).query(ts)
+    m = TNKDE(net, ev, lixel_sharing=True, **model_kw)
+    got = m.query(ts)
+    np.testing.assert_allclose(
+        got, ref, rtol=rtol, atol=rtol * max(np.abs(ref).max(), 1.0)
+    )
+    return m.stats
+
+
+# ------------------------------------------------------------- empty windows
+@pytest.mark.parametrize("solution", ["rfs", "drfs"])
+def test_dominated_sweep_empty_window_set(solution):
+    net = _path_net([200.0, 100.0, 100.0])
+    ev = _events_on([2] * 6, np.linspace(2.0, 8.0, 6),
+                    np.linspace(1.0, 8.0, 6) * DAY)
+    m = TNKDE(net, ev, g=30.0, b_s=1500.0, b_t=2.0 * DAY, solution=solution,
+              engine="numpy", lixel_sharing=True, drfs_exact_leaf=True)
+    work = _collect_work(m)
+    assert work, "the chain must produce dominated candidates"
+    F = np.zeros((0, m.n_lixels))
+    dominated_sweep(F, m.index, m.ctx, work, [])  # W=0: strict no-op
+    assert F.shape == (0, m.n_lixels)
+    assert m.query([]).shape == (0, m.n_lixels)
+
+
+# --------------------------------------------------------- single-lixel edge
+def test_single_lixel_query_edges():
+    """g > edge length: every query edge has exactly one lixel, so the
+    triangular Δ² path is bypassed for the l_a < 3 direct evaluation."""
+    net = _path_net([30.0, 25.0, 30.0, 25.0])
+    ev = _events_on([0, 1, 2, 3, 2, 1], [5.0, 10.0, 20.0, 12.0, 8.0, 3.0],
+                    np.linspace(1.0, 8.0, 6) * DAY)
+    kw = dict(g=40.0, b_s=500.0, b_t=2.5 * DAY, solution="rfs", engine="numpy")
+    m = TNKDE(net, ev, lixel_sharing=True, **kw)
+    assert all(g.x.shape[0] == 1 for g in m.edge_geometries())
+    stats = _ls_stats_match(kw, net, ev, TS)
+    assert stats.n_pairs_dominated > 0
+
+
+# ------------------------------------------------------ all lixels dominated
+def test_all_candidates_dominated():
+    """Events clustered at the near end of the chain's far edge: every
+    (query-edge, candidate) pair classifies dominated, so the whole
+    off-edge heatmap flows through the dominated sweep."""
+    net = _path_net([200.0, 100.0, 100.0])
+    ev = _events_on([2] * 8, np.linspace(1.0, 9.0, 8),
+                    np.linspace(1.0, 8.5, 8) * DAY)
+    kw = dict(g=25.0, b_s=1500.0, b_t=2.0 * DAY, solution="rfs", engine="numpy")
+    m = TNKDE(net, ev, lixel_sharing=True, **kw)
+    for geom in m.edge_geometries():
+        dom_c, dom_d, out, normal = classify_candidates(
+            geom, m.ctx, m.ev_min_pos, m.ev_max_pos
+        )
+        assert normal.sum() == 0 and out.sum() == 0
+        assert (dom_c | dom_d).all()
+    stats = _ls_stats_match(kw, net, ev, TS)
+    assert stats.n_pairs_dominated > 0 and stats.n_pairs_normal == 0
+
+
+# ------------------------------------------------- pending events, DRFS path
+def test_dominated_edges_with_pending_events():
+    """Streamed-but-unsealed events must show up in dominated contributions
+    (dominated_moments_multi's pending branch) — LS on == LS off == exact."""
+    net, _ = _path_net([200.0, 100.0, 100.0]), None
+    base = _events_on([2] * 8, np.linspace(1.0, 9.0, 8),
+                      np.linspace(1.0, 6.0, 8) * DAY)
+    late = _events_on([2, 2], [3.0, 7.0], [6.5 * DAY, 7.0 * DAY])
+    kw = dict(g=25.0, b_s=1500.0, b_t=2.0 * DAY, solution="drfs",
+              engine="numpy", drfs_depth=3, drfs_exact_leaf=True)
+
+    def build(ls):
+        m = TNKDE(net, base, lixel_sharing=ls, **kw)
+        m.insert(late)
+        assert m.index._n_pending == late.n, "inserts must stay pending"
+        return m
+
+    ref = build(False).query(TS)
+    m = build(True)
+    got = m.query(TS)
+    np.testing.assert_allclose(
+        got, ref, rtol=1e-9, atol=1e-9 * max(np.abs(ref).max(), 1.0)
+    )
+    assert m.stats.n_pairs_dominated > 0
+    assert m.stats.n_pending_scanned > 0, "dominated sweep must scan pending"
+    # and the pending events genuinely matter: sealed-only result differs
+    sealed_only = TNKDE(net, base, lixel_sharing=True, **kw).query(TS)
+    assert not np.allclose(got, sealed_only)
+
+
+# ------------------------------------------------------- random-world sanity
+@pytest.mark.parametrize("solution", ["rfs", "drfs"])
+def test_ls_equivalence_random_world(solution):
+    """Broader guard: LS on == LS off on a random world where all four
+    classes (dominated both sides, out, normal) occur."""
+    net = make_network(20, 32, seed=3)
+    ev = make_events(net, 160, seed=4, span_days=9)
+    kw = dict(g=45.0, b_s=700.0, b_t=2.0 * DAY, solution=solution,
+              engine="numpy")
+    if solution == "drfs":
+        kw.update(drfs_depth=4, drfs_exact_leaf=True)
+    stats = _ls_stats_match(kw, net, ev, TS)
+    assert stats.n_pairs_dominated > 0

@@ -1,0 +1,265 @@
+"""Serving subsystem tests (repro.serve, DESIGN.md §6).
+
+The core concurrency-correctness property: interleaved insert / seal /
+query *via the scheduler* must match a fresh oracle evaluated at each
+request's pinned revision — requests admitted before a mutation and flushed
+after it answer from their pinned snapshot, on both engines and in both
+quantized and exact_leaf modes. Exact mode checks against the index-free
+SPS oracle; quantized mode against a fresh DRFS rebuilt to the snapshot's
+exact sealed/pending split (same depth, same quantization pattern).
+
+Plus: micro-batch coalescing (one engine pass, per-request rows), the
+epoch-keyed result cache (hit on repeat, natural invalidation on epoch
+move), lixel-subset slicing, window-class padding, and the steady-state
+zero-recompile property of the module-level jit caches.
+"""
+import numpy as np
+import pytest
+
+from repro.core import TNKDE
+from repro.core.events import Events
+from repro.data.spatial import make_events, make_network
+from repro.serve import (
+    InsertItem,
+    ProfileConfig,
+    QueryItem,
+    TNKDEServer,
+    jit_entries,
+    run_sequential,
+    run_server,
+    window_class,
+)
+
+KW = dict(g=40.0, b_s=600.0, b_t=2.0 * 86400.0)
+TS = [2.5 * 86400.0, 6.0 * 86400.0]
+DEPTH = 4
+ENGINES = ["numpy", "jax"]
+
+
+def _world(seed=7, n_events=240):
+    net = make_network(24, 40, seed=seed)
+    ev = make_events(net, n_events, seed=seed + 1, span_days=9)
+    order = np.argsort(ev.time, kind="stable")
+    return net, Events(ev.edge_id[order], ev.pos[order], ev.time[order])
+
+
+def _sub(ev, lo, hi):
+    return Events(ev.edge_id[lo:hi], ev.pos[lo:hi], ev.time[lo:hi])
+
+
+def _profile(engine, exact):
+    return ProfileConfig(
+        solution="drfs", engine=engine, drfs_depth=DEPTH,
+        drfs_exact_leaf=exact, **KW,
+    )
+
+
+def _sps_oracle(net, snap, ts):
+    """Index-free oracle over exactly the snapshot's pinned event set."""
+    e, p, t = snap.event_set()
+    return TNKDE(net, Events(e, p, t), solution="sps", **KW).query(ts)
+
+
+def _quantized_oracle(net, snap, ts):
+    """Fresh DRFS rebuilt to the snapshot's sealed/pending split: the same
+    quantization pattern (sealed leaves quantized, pending scanned exactly),
+    so quantized results must agree."""
+    E = net.n_edges
+    se = np.repeat(np.arange(E), np.diff(snap.ptr))
+    m = TNKDE(
+        net, Events(se, snap.pos.copy(), snap.time.copy()),
+        solution="drfs", engine="numpy", drfs_depth=DEPTH, **KW,
+    )
+    csr = snap.pending_csr()
+    if csr is not None:
+        pptr, pp, pt, _ = csr
+        pe = np.repeat(np.arange(E), np.diff(pptr))
+        m.insert(Events(pe, pp.copy(), pt.copy()))
+        # the oracle must mirror the snapshot's split — a surprise auto-seal
+        # would quantize events the snapshot scans exactly
+        assert m.index._n_pending == len(pp)
+    return m.query(ts)
+
+
+def _close(got, ref, msg=""):
+    np.testing.assert_allclose(
+        got, ref, rtol=1e-9, atol=1e-9 * max(np.abs(ref).max(), 1.0), err_msg=msg
+    )
+
+
+# --------------------------------------------------- concurrency correctness
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("exact", [True, False], ids=["exact_leaf", "quantized"])
+def test_interleaved_mutations_match_pinned_oracle(engine, exact):
+    """insert/seal between admissions; ONE late pump answers every request
+    from its own pinned revision."""
+    net, ev = _world()
+    srv = TNKDEServer(net, _sub(ev, 0, 100), {"default": _profile(engine, exact)},
+                      batch_cap=4)
+    model = srv.models["default"]
+    if engine == "jax":
+        assert model.engine == "jax", "device engine failed to promote"
+    pins = {}
+
+    def submit(tag):
+        srv.submit(TS, tag=tag)
+        pins[tag] = model.snapshot()  # same epoch the server just pinned
+
+    submit("t0")
+    srv.insert(_sub(ev, 100, 130))  # pending only
+    submit("t1")
+    srv.insert(_sub(ev, 130, 200))  # crosses the geometric-seal threshold
+    submit("t2")
+    srv.seal()
+    srv.insert(_sub(ev, 200, 215))
+    submit("t3")
+    assert len({p.epoch for p in pins.values()}) == 4, "mutations must move epochs"
+    resps = {r.tag: r for r in srv.pump()}
+    assert set(resps) == set(pins)
+    oracle = _sps_oracle if exact else _quantized_oracle
+    for tag, snap in pins.items():
+        assert resps[tag].stats.epoch == snap.epoch
+        _close(resps[tag].heat, oracle(net, snap, TS),
+               msg=f"engine={engine} exact={exact} tag={tag}")
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_pinned_result_stable_across_later_mutations(engine):
+    """The same snapshot re-queried after further mutations is bit-stable."""
+    net, ev = _world(seed=11)
+    m = TNKDE(net, _sub(ev, 0, 100), solution="drfs", engine=engine,
+              drfs_depth=DEPTH, drfs_exact_leaf=True, **KW)
+    snap = m.snapshot()
+    before = m.query(TS, at=snap)
+    m.insert(_sub(ev, 100, 170))
+    m.index.seal()
+    m.index.extend()
+    after_live = m.query(TS)
+    after_pinned = m.query(TS, at=snap)
+    np.testing.assert_array_equal(before, after_pinned)
+    assert not np.allclose(after_live, before), "live result must see inserts"
+
+
+def test_query_at_requires_drfs():
+    net, ev = _world(seed=5, n_events=80)
+    m = TNKDE(net, ev, solution="rfs", **KW)
+    with pytest.raises(ValueError, match="drfs"):
+        m.query(TS, at=object())
+
+
+# ----------------------------------------------------- batching + responses
+def test_coalescing_one_pass_per_batch_and_correct_rows():
+    net, ev = _world(seed=13)
+    srv = TNKDEServer(net, _sub(ev, 0, 150), {"default": _profile("auto", True)},
+                      batch_cap=8, window_cap=8)
+    t_a, t_b, t_c = TS[0], TS[1], 4.0 * 86400.0
+    srv.submit([t_a], tag="a")
+    srv.submit([t_b, t_a], tag="ba")
+    srv.submit([t_c], tag="c")
+    resps = {r.tag: r for r in srv.pump()}
+    assert srv.stats.n_batches == 1
+    assert all(r.stats.batch_size == 3 for r in resps.values())
+    # 3 distinct centers, padded to the window class of 3 (= 4)
+    assert srv.stats.n_rows_computed == 3
+    assert srv.stats.n_windows_evaluated == window_class(3, 8)
+    model = srv.models["default"]
+    ref = model.query([t_a, t_b, t_c])
+    _close(resps["a"].heat, ref[:1])
+    _close(resps["ba"].heat, np.stack([ref[1], ref[0]]))
+    _close(resps["c"].heat, ref[2:3])
+
+
+def test_result_cache_hit_and_epoch_invalidation():
+    net, ev = _world(seed=17)
+    srv = TNKDEServer(net, _sub(ev, 0, 150), {"default": _profile("auto", False)})
+    srv.submit(TS, tag="cold")
+    cold = {r.tag: r for r in srv.pump()}["cold"]
+    assert cold.stats.cache_hits == 0 and cold.stats.windows_evaluated > 0
+    srv.submit(TS, tag="warm")
+    warm = {r.tag: r for r in srv.pump()}["warm"]
+    assert warm.stats.cache_hits == len(TS)
+    assert warm.stats.windows_evaluated == 0  # served without the engines
+    np.testing.assert_array_equal(warm.heat, cold.heat)
+    srv.insert(_sub(ev, 150, 160))  # epoch moves -> natural invalidation
+    srv.submit(TS, tag="stale")
+    stale = {r.tag: r for r in srv.pump()}["stale"]
+    assert stale.stats.cache_hits == 0
+    assert stale.stats.epoch != cold.stats.epoch
+
+
+def test_lixel_subset_slicing():
+    net, ev = _world(seed=19)
+    srv = TNKDEServer(net, _sub(ev, 0, 120), {"default": _profile("auto", False)})
+    lix = np.array([0, 5, 11])
+    srv.submit([TS[0]], lixels=lix, tag="sub")
+    srv.submit([TS[0]], tag="full")
+    resps = {r.tag: r for r in srv.pump()}
+    assert resps["sub"].heat.shape == (1, 3)
+    np.testing.assert_array_equal(resps["sub"].heat, resps["full"].heat[:, lix])
+
+
+def test_mixed_epochs_never_share_a_batch():
+    net, ev = _world(seed=23)
+    srv = TNKDEServer(net, _sub(ev, 0, 120), {"default": _profile("auto", False)},
+                      batch_cap=8)
+    srv.submit([TS[0]], tag=0)
+    srv.insert(_sub(ev, 120, 140))
+    srv.submit([TS[0]], tag=1)
+    resps = srv.pump()
+    assert srv.stats.n_batches == 2
+    epochs = {r.tag: r.stats.epoch for r in resps}
+    assert epochs[0] != epochs[1]
+
+
+def test_insert_requires_streaming_profiles():
+    net, ev = _world(seed=29, n_events=80)
+    srv = TNKDEServer(net, ev, {"static": ProfileConfig(solution="rfs", **KW)})
+    with pytest.raises(ValueError, match="static"):
+        srv.insert(ev)
+
+
+def test_window_class_values():
+    assert [window_class(n, 8) for n in (1, 2, 3, 4, 5, 7, 8)] == [1, 2, 4, 4, 6, 8, 8]
+    assert window_class(11, 8) == 12  # oversized request: own even class
+
+
+# -------------------------------------------------------- steady-state jit
+def test_steady_state_batches_do_not_recompile():
+    net, ev = _world(seed=31)
+    srv = TNKDEServer(net, _sub(ev, 0, 150), {"default": _profile("jax", False)},
+                      batch_cap=4, window_cap=4)
+    rng = np.random.default_rng(0)
+
+    def burst(seed_off):
+        for i in range(4):
+            srv.submit([float(rng.uniform(2.0, 7.0) * 86400.0)], tag=i + seed_off)
+        return srv.pump()
+
+    burst(0)  # warm the shapes of this request class
+    j0 = jit_entries()
+    if j0 < 0:
+        pytest.skip("jax version exposes no jit cache probe")
+    burst(10)
+    burst(20)
+    assert jit_entries() == j0, "steady-state flushes must hit the jit cache"
+
+
+# ------------------------------------------------------------- load drivers
+def test_load_drivers_agree_with_each_other():
+    net, ev = _world(seed=37)
+    base, tail = _sub(ev, 0, 150), _sub(ev, 150, 190)
+    mix = [
+        QueryItem(ts=[TS[0]]),
+        QueryItem(ts=[TS[0], TS[1]]),
+        InsertItem(tail),
+        QueryItem(ts=[TS[1]]),
+    ]
+    srv = TNKDEServer(net, base, {"default": _profile("auto", True)}, batch_cap=4)
+    rep = run_server(srv, mix)
+    assert rep.latencies.shape == (3,)
+    assert rep.summary()["n"] == 3
+    seq_model = TNKDE(net, base, **_profile("auto", True).to_kwargs())
+    seq = run_sequential(seq_model, mix)
+    assert seq.latencies.shape == (3,)
+    # both drivers end at the same final state: same live result
+    _close(srv.models["default"].query(TS), seq_model.query(TS))
