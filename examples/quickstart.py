@@ -25,7 +25,7 @@ model = TNKDE(
     lixel_sharing=True,
 )
 print(f"built RFS over {model.n_lixels} lixels in {model.stats.build_seconds:.2f}s "
-      f"(index {model.stats.index_bytes/2**20:.1f} MiB)")
+      f"(index {model.stats.index_bytes/2**20:.1f} MiB, engine={model.engine_desc})")
 
 # 3. three online windows (morning / midday / evening of day 30)
 day = 30 * 86400.0

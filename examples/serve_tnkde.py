@@ -39,6 +39,8 @@ print(f"network |V|={meta['V']} |E|={meta['E']}; base={base.n} stream={stream.n}
 
 prof = ProfileConfig(g=50.0, b_s=800.0, b_t=b_t, drfs_depth=7)
 server = TNKDEServer(net, base, {"default": prof}, batch_cap=6, window_cap=8)
+print("profiles: " + ", ".join(
+    f"{name}={m.engine_desc}" for name, m in server.models.items()))
 
 # -- 1+2: pin a request, mutate, pin another, then flush ONE pump ----------
 # the streamed tail is the latest 10% of events, so a window ending at t1

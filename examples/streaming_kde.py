@@ -42,7 +42,7 @@ model = TNKDE(
     drfs_depth=7,           # tree depth H: accuracy/size dial (§5.2)
     drfs_exact_leaf=True,   # beyond-paper: scan boundary leaves -> exact
 )
-print(f"bootstrapped with {n0} events on engine={model.engine}")
+print(f"bootstrapped with {n0} events on engine={model.engine_desc}")
 
 # 3. the serving loop: ingest a batch, query a batch of windows, repeat
 ts = list(np.linspace(t0 + 0.25 * (t1 - t0), t1 - 0.05 * (t1 - t0), 5))

@@ -38,7 +38,13 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
 from .aggregation import N_COMBOS
-from .jax_engine import FlatAtoms, FlatForest, WindowBatch, eval_atoms_flat
+from .jax_engine import (
+    FlatAtoms,
+    FlatForest,
+    WindowBatch,
+    eval_atoms_flat,
+    rank_boundaries,
+)
 from .plan import AtomSet, build_atoms
 from .rfs import RangeForest, make_window_batch
 
@@ -205,10 +211,16 @@ class DistributedTNKDE:
         def shard_body(forest, fa, wb):
             forest = jax.tree.map(lambda x: x[0], forest)
             fa_local = jax.tree.map(lambda x: x[0], fa)
+            # the packed-plan hoist, shard-local: time-rank boundaries are
+            # resolved once per (shard, window batch) at EDGE scale and every
+            # atom of the shard gathers them — same layout the single-host
+            # executors consume (jax_engine.rank_boundaries)
+            ranks = rank_boundaries(forest, wb, search_steps=search_steps)
             vals = eval_atoms_flat(
                 forest,
                 fa_local,
                 wb,
+                ranks,
                 max_levels=max_levels,
                 search_steps=search_steps,
                 cascade=False,  # canonical decomposition: f32-friendly

@@ -14,7 +14,14 @@ the window — the atom's three position bounds, its spatial coefficient vector
 q_s, its edge block — is stored once per atom; only the time-rank interval
 and the temporal coefficient vector q_t vary along the Wh axis.
 
-Two engines, selected with the static ``cascade`` flag:
+Three jnp executors. The default is the **packed-plan** executor
+(:class:`PackedForest` / :func:`packed_walk`, DESIGN.md §7): a position-major
+transpose of the merge tree whose per-node window values are q_t-folded once
+per (snapshot, window batch) at node-count scale, leaving the per-atom walk
+one paired gather per level with window-independent [M] state — the
+gather-lean hot path. The two legacy executors below share its hoisted
+:func:`rank_boundaries` table and remain for the equivalence matrix and the
+distributed path; they are selected with the static ``cascade`` flag:
 
   * ``cascade=False`` — canonical bucket decomposition with a per-bucket
     binary search (the paper-faithful O(log²) path, identical to
@@ -43,12 +50,19 @@ import jax.numpy as jnp
 __all__ = [
     "FlatForest",
     "FlatAtoms",
+    "PackedForest",
     "WindowBatch",
     "FlatDynamicForest",
     "eval_atoms_flat",
     "eval_atoms_dyn",
+    "eval_atoms_packed",
+    "packed_node_tables",
+    "packed_root_ranks",
+    "packed_walk",
+    "rank_boundaries",
     "dyn_window_tables",
     "dyn_node_tables",
+    "dyn_node_base",
 ]
 
 
@@ -108,6 +122,37 @@ class FlatDynamicForest(NamedTuple):
     pend_phi: jnp.ndarray  # [Pp, 4, K]
 
 
+class PackedForest(NamedTuple):
+    """Position-major merge-tree tables — the packed-plan layout (DESIGN §7).
+
+    The transpose of :class:`FlatForest`: level ℓ buckets 2^ℓ consecutive
+    POSITION-ranks of an edge; inside a bucket events are TIME-sorted and
+    carry inclusive prefix sums of the raw moment block Φ. The swap moves
+    the per-query binary searches from the per-atom axis to the per-node
+    axis: the time boundaries of a window batch are resolved once per
+    (boundary, window, node) in :func:`packed_node_tables` — O(nodes) work,
+    already contracted with q_t — and an atom only converts its three
+    position bounds to a rank interval at the root (:func:`packed_root_ranks`,
+    window-independent, cached in the plan) and walks the canonical
+    ≤2-nodes-per-level decomposition gathering finished per-node values
+    (:func:`packed_walk`). The walk state is [M] ints (no window axis), and
+    each level costs ONE paired gather — the gather-lean executor.
+
+    ``node_base[e, lev]`` maps (edge, walk level, bucket) to the flat node
+    index of the value tables: id = node_base[e, lev] + bucket. The DRFS
+    engine reuses the same walk by supplying the complete-tree node_base.
+    """
+
+    pm_pos: jnp.ndarray  # [P] per-edge position-sorted values (+inf pad)
+    pos_base: jnp.ndarray  # [E] flat offset of each edge's pm_pos block
+    pm_time: jnp.ndarray  # [T] level-major bucket tables, time-sorted
+    pm_cum: jnp.ndarray  # [T, 4, K] inclusive prefix moments (bucket-local)
+    edge_base: jnp.ndarray  # [E] flat offset of each edge's level block
+    n_pad: jnp.ndarray  # [E] padded event count (power of two; 0 = empty)
+    n_lev: jnp.ndarray  # [E] level count
+    node_base: jnp.ndarray  # [E, Lmax] i32 flat node-id base per walk level
+
+
 class WindowBatch(NamedTuple):
     """Per-half-window query tables: Wh = 2 · n_window_centers entries."""
 
@@ -133,41 +178,21 @@ def _seg_search(vals, seg_lo, seg_hi, q, right, steps: int):
     return lo
 
 
-def _rank_intervals(forest: FlatForest, atoms: FlatAtoms, wb: WindowBatch, steps: int):
-    """Per (half-window, atom) local time-rank interval [r_lo, r_hi): [Wh, M].
-
-    The searches run once per (half-window, EDGE) — atoms on the same event
-    edge share their rank interval, so the per-atom step is a cheap gather.
-    """
-    Wh = wb.t_lo.shape[0]
-    E = forest.time_ptr.shape[0] - 1
-    s_lo = jnp.broadcast_to(forest.time_ptr[:-1][None, :], (Wh, E)).astype(jnp.int32)
-    s_hi = jnp.broadcast_to(forest.time_ptr[1:][None, :], (Wh, E)).astype(jnp.int32)
-    q_lo = jnp.broadcast_to(wb.t_lo[:, None], (Wh, E))
-    q_hi = jnp.broadcast_to(wb.t_hi[:, None], (Wh, E))
-    lo_r = jnp.broadcast_to(wb.lo_right[:, None], (Wh, E))
-    r_lo = _seg_search(forest.time_flat, s_lo, s_hi, q_lo, lo_r, steps) - s_lo
-    r_hi = _seg_search(forest.time_flat, s_lo, s_hi, q_hi, jnp.ones((Wh, E), bool), steps) - s_lo
-    eid = atoms.edge
-    return r_lo[:, eid].astype(jnp.int32), r_hi[:, eid].astype(jnp.int32)
-
-
 def _pref_diff(table, combo, seg_lo, i_lo, i_hi, on):
     """Masked per-bucket moment difference prefix(i_hi) - prefix(i_lo): [..., C].
 
     table: [T, n_combo, C]; seg_lo/i_lo/i_hi/on broadcast to a common shape;
-    combo broadcasts into the gather. Emits moment VECTORS — engines
-    accumulate these across levels and contract with the factored query
-    (q_s ⊗ q_t) exactly once at the end, so the level loop stays pure
-    gathers and adds.
+    combo broadcasts into the gather. The hi/lo prefix rows ride ONE stacked
+    gather (gather dispatch count is what dominates on the CPU backend).
+    Emits moment VECTORS — engines accumulate these across levels and
+    contract with the factored query (q_s ⊗ q_t) exactly once at the end,
+    so the level loop stays pure gathers and adds.
     """
     i_hi = jnp.maximum(i_hi, i_lo)
-
-    def pref(i):
-        v = table[jnp.maximum(i - 1, 0), combo]  # [..., C]
-        return jnp.where((i > seg_lo)[..., None], v, 0.0)
-
-    return jnp.where(on[..., None], pref(i_hi) - pref(i_lo), 0.0)
+    ii = jnp.stack([jnp.broadcast_to(i_hi, i_lo.shape), i_lo])  # [2, ...]
+    v = table[jnp.maximum(ii - 1, 0), combo[None]]  # [2, ..., C]
+    v = jnp.where((ii > seg_lo[None])[..., None], v, 0.0)
+    return jnp.where(on[..., None], v[0] - v[1], 0.0)
 
 
 def _contract(mom, atoms, wb, qt=None):
@@ -231,7 +256,7 @@ def _engine_search(forest, atoms, wb, combo, r_lo, r_hi, *, max_levels, search_s
 
 
 # -------------------------------------------------------------------- cascade
-def _engine_cascade(forest, atoms, wb, *, max_levels, search_steps):
+def _engine_cascade(forest, atoms, wb, ranks, *, max_levels, search_steps):
     """Prefix-path walks over the cascade bridges, one per window BOUNDARY.
 
     Requires the (left, right)-paired ``make_window_batch`` layout: window
@@ -264,22 +289,9 @@ def _engine_cascade(forest, atoms, wb, *, max_levels, search_steps):
     nlev = forest.n_lev[eid].astype(jnp.int32)
     top = jnp.maximum(nlev - 1, 0)
 
-    # ---- per-(boundary, window, EDGE) time-rank search, gathered per atom --
-    t_b = jnp.stack([wb.t_lo[0::2], wb.t_hi[0::2], wb.t_hi[1::2]])  # [3, W]
-    right_b = jnp.stack(
-        [jnp.zeros((W,), bool), jnp.ones((W,), bool), jnp.ones((W,), bool)]
-    )
-    s_lo = jnp.broadcast_to(forest.time_ptr[:-1][None, None, :], (3, W, E)).astype(jnp.int32)
-    s_hi = jnp.broadcast_to(forest.time_ptr[1:][None, None, :], (3, W, E)).astype(jnp.int32)
-    r_b = (
-        _seg_search(
-            forest.time_flat, s_lo, s_hi,
-            jnp.broadcast_to(t_b[..., None], (3, W, E)),
-            jnp.broadcast_to(right_b[..., None], (3, W, E)), search_steps,
-        )
-        - s_lo
-    )
-    k = r_b[:, :, eid].astype(jnp.int32)  # [3, W, M]
+    # ---- per-(boundary, window, EDGE) time-rank boundaries (hoisted into
+    # the plan via rank_boundaries), gathered per atom ----------------------
+    k = ranks[:, :, eid].astype(jnp.int32)  # [3, W, M]
 
     # ---- hoisted, window-independent: root-bucket position searches --------
     root_lo = base + top * npad
@@ -319,11 +331,10 @@ def _engine_cascade(forest, atoms, wb, *, max_levels, search_steps):
         half = (jnp.int32(1) << lev) >> 1
         go_right = active & (lev > 0) & (k >= a0 + half)
         nf = bsb + lev * npb + a0  # parent bucket flat offset
-
-        def to_left(i):
-            return jnp.where(i > 0, forest.bridge[nf + jnp.maximum(i - 1, 0)], 0)
-
-        bl = jnp.stack([to_left(loc[0]), to_left(loc[1])])
+        # both carried ranks cascade through ONE stacked bridge gather
+        bl = jnp.where(
+            loc > 0, forest.bridge[nf[None] + jnp.maximum(loc - 1, 0)], 0
+        )
         # one emission per step: the fully-covered LEFT child when stepping
         # right, or the leaf itself when the path bottoms out on an odd rank
         emit_leaf = active & (lev == 0)  # invariant: a0 < k <= a0+1 here
@@ -344,6 +355,190 @@ def _engine_cascade(forest, atoms, wb, *, max_levels, search_steps):
     val_l = _contract((mom[1] - mom[0])[..., :K], atoms, wb, wb.qt[0::2])
     val_r = _contract((mom[2] - mom[1])[..., K:], atoms, wb, wb.qt[1::2])
     return jnp.stack([val_l, val_r], axis=1).reshape(Wh, M)
+
+
+# ============================================================== packed plan
+def rank_boundaries(forest: FlatForest, wb: WindowBatch, *, search_steps: int):
+    """Per-(boundary, window, edge) time-rank boundaries: [3, W, E] i32.
+
+    The (lo, mid, hi) ranks of every window center against every edge's
+    time-sorted events — independent of atoms, so the plan computes them
+    once per (snapshot, window batch) and every flush re-uses them (the
+    hoist that makes per-flush time-search work zero in steady state).
+    """
+    W = wb.t_lo.shape[0] // 2
+    E = forest.time_ptr.shape[0] - 1
+    t_b, right_b = _dyn_boundaries(wb)
+    s_lo = jnp.broadcast_to(forest.time_ptr[:-1][None, None, :], (3, W, E)).astype(jnp.int32)
+    s_hi = jnp.broadcast_to(forest.time_ptr[1:][None, None, :], (3, W, E)).astype(jnp.int32)
+    r_b = (
+        _seg_search(
+            forest.time_flat, s_lo, s_hi,
+            jnp.broadcast_to(t_b[..., None], (3, W, E)),
+            jnp.broadcast_to(right_b[..., None], (3, W, E)), search_steps,
+        )
+        - s_lo
+    )
+    return r_b.astype(jnp.int32)
+
+
+def packed_root_ranks(pf: PackedForest, atoms: FlatAtoms, *, search_steps: int):
+    """Window-independent position-rank interval [r_lo, r_hi) per atom: [M].
+
+    The packed executor's only per-atom searches: the three position bounds
+    are resolved against the edge's position-sorted root row in ONE batched
+    search (stacked bound axis) and collapse to two ranks. Cached inside the
+    plan's atom blocks, so steady-state flushes pay no searches at all.
+    """
+    M = atoms.edge.shape[0]
+    eid = atoms.edge
+    s_lo = pf.pos_base[eid].astype(jnp.int32)
+    s_hi = s_lo + pf.n_pad[eid].astype(jnp.int32)
+    q = jnp.stack([atoms.pos_hi, atoms.pos_lo1, atoms.pos_lo2])
+    right = jnp.stack([jnp.ones((M,), bool), atoms.lo1_right, jnp.zeros((M,), bool)])
+    j = (
+        _seg_search(
+            pf.pm_pos,
+            jnp.broadcast_to(s_lo[None], (3, M)),
+            jnp.broadcast_to(s_hi[None], (3, M)),
+            q, right, search_steps,
+        )
+        - s_lo[None]
+    )
+    r_hi = j[0]
+    r_lo = jnp.minimum(jnp.maximum(j[1], j[2]), r_hi)
+    return r_lo.astype(jnp.int32), r_hi.astype(jnp.int32)
+
+
+def _fold_node_level(time_tab, cum_tab, s_lo, s_hi, t_b, right_b, qtl, qtr,
+                     steps: int, k_t: int):
+    """One level's q_t-folded paired node values: [NL·2, W, 2k_s].
+
+    The shared fold of :func:`packed_node_tables` and
+    :func:`dyn_node_tables`: per (boundary, window, node) binary search in
+    the node's time-sorted run [s_lo, s_hi), raw-Φ prefix difference
+    (node-local rounding), combo slice per side/half, q_t contraction, and
+    the paired [k_s left | k_s right] row packing with W inside the row —
+    exactly the layout :func:`packed_walk` consumes.
+    """
+    NL = s_lo.shape[0]
+    W = qtl.shape[0]
+    K = cum_tab.shape[-1]
+    k_s = K // k_t
+    i_b = _seg_search(
+        time_tab,
+        jnp.broadcast_to(s_lo[None, None], (3, W, NL)),
+        jnp.broadcast_to(s_hi[None, None], (3, W, NL)),
+        jnp.broadcast_to(t_b[..., None], (3, W, NL)),
+        jnp.broadcast_to(right_b[..., None], (3, W, NL)),
+        steps,
+    )
+
+    def pref(i):
+        v = cum_tab[jnp.maximum(i - 1, 0)]
+        return jnp.where((i > s_lo[None, None])[..., None, None], v, 0.0)
+
+    p = pref(i_b)
+    left = (p[1] - p[0])[..., 0::2, :].reshape(W, NL, 2, k_s, k_t)
+    right = (p[2] - p[1])[..., 1::2, :].reshape(W, NL, 2, k_s, k_t)
+    vl = jnp.einsum("wncst,wt->wncs", left, qtl)
+    vr = jnp.einsum("wncst,wt->wncs", right, qtr)
+    vv = jnp.concatenate([vl, vr], axis=-1)  # [W, NL, 2, 2k_s]
+    return jnp.transpose(vv, (1, 2, 0, 3)).reshape(NL * 2, W, 2 * k_s)
+
+
+def packed_node_tables(
+    pf: PackedForest,
+    wb: WindowBatch,
+    node_starts,
+    *,
+    steps_per_level: tuple,
+    k_t: int,
+):
+    """q_t-folded paired window values of EVERY position-rank node: [R·2, W, C].
+
+    ``node_starts`` is a tuple of per-level i32 arrays: the flat pm_time
+    offsets of every level-ℓ node's time-sorted run (length 2^ℓ). Per node
+    the three window boundaries are binary-searched in the run — O(nodes)
+    total, NOT O(atoms) — the raw-Φ prefix rows are differenced node-locally
+    and contracted with the temporal query vectors immediately, so the walk
+    gathers finished values. Row (node, side) = [k_s left-half | k_s right],
+    with the W axis inside the row: one walk gather moves every window's
+    value for a node at once. Node ids follow ``pf.node_base`` level-major.
+    """
+    t_b, right_b = _dyn_boundaries(wb)
+    qtl, qtr = wb.qt[0::2], wb.qt[1::2]
+    parts = []
+    for lev, ns in enumerate(node_starts):
+        s_lo = ns.astype(jnp.int32)
+        parts.append(
+            _fold_node_level(
+                pf.pm_time, pf.pm_cum, s_lo, s_lo + (1 << lev), t_b, right_b,
+                qtl, qtr, int(steps_per_level[lev]), k_t,
+            )
+        )
+    return jnp.concatenate(parts, axis=0)
+
+
+def packed_walk(nodeval, node_base_lvl, eid, side, r_lo, r_hi, *, max_levels: int):
+    """Canonical ≤2-nodes-per-level walk over finished node values: [M, W, C].
+
+    The shared executor core for the static packed forest AND the DRFS
+    exact-mode node tables (``node_base_lvl`` [Lmax, E] maps walk levels to
+    flat node bases; DRFS supplies the complete-tree arithmetic bases).
+    State is [M] ints — no window axis — and each level pays exactly ONE
+    paired gather ([2, M] node rows, every window riding inside the row).
+    """
+    M = eid.shape[0]
+    R2 = nodeval.shape[0]
+    W, C = nodeval.shape[1], nodeval.shape[2]
+    acc0 = jnp.zeros((M, W, C), nodeval.dtype)
+
+    def level_body(lev, state):
+        l, r, acc = state
+        nb = jax.lax.dynamic_index_in_dim(node_base_lvl, lev, 0, keepdims=False)[eid]
+        active = l < r
+        emit_l = active & ((l & 1) == 1)
+        b_l = l
+        l = jnp.where(emit_l, l + 1, l)
+        emit_r = (l < r) & ((r & 1) == 1)
+        b_r = r - 1
+        r = jnp.where(emit_r, r - 1, r)
+        on = jnp.stack([emit_l, emit_r])  # [2, M]
+        idx = (nb[None] + jnp.stack([b_l, b_r])) * 2 + side[None]
+        idx = jnp.clip(jnp.where(on, idx, 0), 0, R2 - 1)
+        rows = nodeval[idx]  # [2, M, W, C] — one paired gather per level
+        acc = acc + jnp.where(on[..., None, None], rows, 0.0).sum(0)
+        return l >> 1, r >> 1, acc
+
+    _, _, acc = jax.lax.fori_loop(
+        0, max_levels, level_body,
+        (r_lo.astype(jnp.int32), r_hi.astype(jnp.int32), acc0),
+    )
+    return acc
+
+
+def eval_atoms_packed(
+    nodeval, node_base_lvl, atoms: FlatAtoms, r_lo, r_hi, *, max_levels: int
+):
+    """Packed-plan per-atom aggregate for every half-window: [Wh, M].
+
+    Same output contract as :func:`eval_atoms_flat` (paired row layout;
+    callers fold halves and scatter onto lixels), but consuming the packed
+    plan: precomputed root rank intervals + q_t-folded node value tables.
+    """
+    k_s = atoms.qs.shape[1]
+    acc = packed_walk(
+        nodeval, node_base_lvl,
+        atoms.edge.astype(jnp.int32), atoms.side_feat.astype(jnp.int32),
+        r_lo, r_hi, max_levels=max_levels,
+    )
+    # elementwise multiply-reduce, NOT einsum: keeps duplicate window centers
+    # bitwise identical on CPU XLA (see eval_atoms_dyn note)
+    val_l = (acc[..., :k_s] * atoms.qs[:, None, :]).sum(-1)  # [M, W]
+    val_r = (acc[..., k_s:] * atoms.qs[:, None, :]).sum(-1)
+    out = jnp.stack([val_l.T, val_r.T], axis=1).reshape(-1, atoms.edge.shape[0])
+    return jnp.where(atoms.valid[None, :], out, 0.0)
 
 
 # ===================================================================== DRFS
@@ -414,12 +609,14 @@ def dyn_window_tables(
     per-node time searches: all O(log)-factor work scales with the *node
     count* E·2^hq, not with atoms × windows.
 
-    Returns lcum [W, E·(nleaf+1)·2, 2K]: per (window, leaf-prefix, side) the
-    raw paired moment vector [K left-half | K right-half]. Staying in raw Φ
-    space (q_t applied only after the caller differences two prefixes) keeps
-    the prefix magnitudes at the event scale — the same association the
-    NumPy path's per-node prefix scheme uses — so the leaf-prefix shortcut
-    costs no precision even for kernels with large alternating q_t entries.
+    Returns lcum [E·(nleaf+1)·2, W, 2K]: per (leaf-prefix, side) row the raw
+    paired moment vector [K left-half | K right-half] for every window (the
+    W axis rides INSIDE the row, so an atom's two prefix lookups are one
+    stacked gather serving all windows at once). Staying in raw Φ space
+    (q_t applied only after the caller differences two prefixes) keeps the
+    prefix magnitudes at the event scale — the same association the NumPy
+    path's per-node prefix scheme uses — so the leaf-prefix shortcut costs
+    no precision even for kernels with large alternating q_t entries.
     """
     Wh = wb.t_lo.shape[0]
     W = Wh // 2
@@ -450,12 +647,14 @@ def dyn_window_tables(
     left = (p[1] - p[0])[..., 0::2, :]  # [W, NL, 2, K] combos (ψ·left)
     right = (p[2] - p[1])[..., 1::2, :]  # combos (ψ·right)
     lv = jnp.concatenate([left, right], axis=-1)  # [W, NL, 2, 2K]
-    # per-edge inclusive leaf prefix with a leading zero row, flattened to
-    # [W, E*(nleaf+1)*2, 2K] for one-gather addressing
+    # per-edge inclusive leaf prefix with a leading zero row, laid out
+    # row-major [E*(nleaf+1)*2, W, 2K] for one-stacked-gather addressing
     cum = lv.reshape(W, E, nleaf, 2, 2 * K)
     cum = jnp.cumsum(cum, axis=2)
     cum = jnp.concatenate([jnp.zeros_like(cum[:, :, :1]), cum], axis=2)
-    return cum.reshape(W, E * (nleaf + 1) * 2, 2 * K)
+    return jnp.transpose(cum, (1, 2, 3, 0, 4)).reshape(
+        E * (nleaf + 1) * 2, W, 2 * K
+    )
 
 
 def dyn_node_tables(
@@ -477,46 +676,41 @@ def dyn_node_tables(
     that locality is what holds the ≤1e-12 cross-engine agreement even for
     kernels with large alternating q_t entries.
 
-    Returns (vl, vr), each [W, TN·2, k_s] with TN = E·(2^{hq+1}−1); node
-    (d, e, i) lives at flat index (E·(2^d−1) + e·2^d + i)·2 + side.
+    Returns the packed node-value layout consumed by :func:`packed_walk`:
+    nodeval [TN·2, W, 2k_s] with TN = E·(2^{hq+1}−1); node (d, e, i) lives
+    at flat row (E·(2^d−1) + e·2^d + i)·2 + side, each row packing
+    [k_s left-half | k_s right-half] for every window — the same executor
+    layout the static packed forest uses.
     """
-    Wh = wb.t_lo.shape[0]
-    W = Wh // 2
-    K = forest.cum_lvl.shape[-1]
     Np = forest.time_lvl.shape[0] // n_levels
     E = forest.pend_ptr.shape[0] - 1
     k_t = wb.qt.shape[1]
-    k_s = K // k_t
     t_b, right_b = _dyn_boundaries(wb)
     qtl, qtr = wb.qt[0::2], wb.qt[1::2]
-    parts_l, parts_r = [], []
+    parts = []
     for d in range(hq + 1):
         NL = E << d
         pb = E * ((1 << d) - 1) + d
         s_lo = (d * Np + forest.node_ptr[pb : pb + NL]).astype(jnp.int32)
         s_hi = (d * Np + forest.node_ptr[pb + 1 : pb + NL + 1]).astype(jnp.int32)
-        i_b = _seg_search(
-            forest.time_lvl,
-            jnp.broadcast_to(s_lo[None, None], (3, W, NL)),
-            jnp.broadcast_to(s_hi[None, None], (3, W, NL)),
-            jnp.broadcast_to(t_b[..., None], (3, W, NL)),
-            jnp.broadcast_to(right_b[..., None], (3, W, NL)),
-            int(steps_per_level[d]),
+        parts.append(
+            _fold_node_level(
+                forest.time_lvl, forest.cum_lvl, s_lo, s_hi, t_b, right_b,
+                qtl, qtr, int(steps_per_level[d]), k_t,
+            )
         )
+    return jnp.concatenate(parts, axis=0)
 
-        def pref(i, lo=s_lo):
-            v = forest.cum_lvl[jnp.maximum(i - 1, 0)]
-            return jnp.where((i > lo[None, None])[..., None, None], v, 0.0)
 
-        p = pref(i_b)
-        left = (p[1] - p[0])[..., 0::2, :].reshape(W, NL, 2, k_s, k_t)
-        right = (p[2] - p[1])[..., 1::2, :].reshape(W, NL, 2, k_s, k_t)
-        parts_l.append(jnp.einsum("wncst,wt->wncs", left, qtl))
-        parts_r.append(jnp.einsum("wncst,wt->wncs", right, qtr))
-    vl = jnp.concatenate(parts_l, axis=1)  # [W, TN, 2, k_s]
-    vr = jnp.concatenate(parts_r, axis=1)
-    TN = vl.shape[1]
-    return vl.reshape(W, TN * 2, k_s), vr.reshape(W, TN * 2, k_s)
+def dyn_node_base(E: int, hq: int) -> jnp.ndarray:
+    """[hq+1, E] complete-tree node bases for :func:`packed_walk`: walk level
+    ``lev`` reads depth d = hq − lev, whose edge-e block starts at
+    E·(2^d − 1) + e·2^d in the :func:`dyn_node_tables` layout."""
+    rows = []
+    for lev in range(hq + 1):
+        nb = 1 << (hq - lev)
+        rows.append(E * (nb - 1) + jnp.arange(E, dtype=jnp.int32) * nb)
+    return jnp.stack(rows)
 
 
 def eval_atoms_dyn(
@@ -530,8 +724,12 @@ def eval_atoms_dyn(
     scan_steps: int,
     pend_steps: int,
     exact: bool,
+    tree: bool = True,
 ) -> jnp.ndarray:
     """DRFS per-atom aggregate for every half-window: [Wh, M].
+
+    ``tree=False`` skips phase 1 (the Pallas executor answers the tree from
+    its kernels; only the scan phases run here).
 
     Same contract as :func:`eval_atoms_flat` (callers fold the two halves of
     each window center and scatter onto lixels; requires the paired
@@ -569,40 +767,21 @@ def eval_atoms_dyn(
     mom_l = jnp.zeros((W, M, K), forest.cum_lvl.dtype)
     mom_r = jnp.zeros((W, M, K), forest.cum_lvl.dtype)
     k_s = atoms.qs.shape[1]
-    if exact:
-        vl, vr = tables
-        acc_l = jnp.zeros((W, M, k_s), vl.dtype)
-        acc_r = jnp.zeros((W, M, k_s), vl.dtype)
-
-        def node_val(d, b, on, acc_l, acc_r):
-            nb = jnp.left_shift(jnp.int32(1), d)
-            nid = (E * (nb - 1) + eid * nb + jnp.clip(b, 0, nb - 1)) * 2 + side
-            onz = on[None, :, None]
-            acc_l = acc_l + jnp.where(onz, vl[:, nid], 0.0)
-            acc_r = acc_r + jnp.where(onz, vr[:, nid], 0.0)
-            return acc_l, acc_r
-
-        def level_body(lev, state):
-            l, r, acc_l, acc_r = state
-            d = jnp.int32(hq) - lev.astype(jnp.int32)
-            active = l < r
-            emit_l = active & ((l & 1) == 1)
-            acc_l, acc_r = node_val(d, l, emit_l, acc_l, acc_r)
-            l = jnp.where(emit_l, l + 1, l)
-            emit_r = (l < r) & ((r & 1) == 1)
-            acc_l, acc_r = node_val(d, r - 1, emit_r, acc_l, acc_r)
-            r = jnp.where(emit_r, r - 1, r)
-            return l >> 1, r >> 1, acc_l, acc_r
-
-        _, _, acc_l, acc_r = jax.lax.fori_loop(
-            0, hq + 1, level_body, (leaf_lo, leaf_hi, acc_l, acc_r)
-        )
-    else:
+    acc = None
+    if exact and tree:
+        (nodeval,) = tables
+        acc = packed_walk(
+            nodeval, dyn_node_base(E, hq), eid, side, leaf_lo, leaf_hi,
+            max_levels=hq + 1,
+        )  # [M, W, 2k_s]
+    elif tree:
         (lcum,) = tables
         base = eid * ((nleaf + 1) * 2) + side
-        tree = lcum[:, base + leaf_hi * 2] - lcum[:, base + leaf_lo * 2]
-        mom_l = mom_l + tree[..., :K]  # [W, M, 2K] paired halves
-        mom_r = mom_r + tree[..., K:]
+        idx = base[None] + jnp.stack([leaf_hi, leaf_lo]) * 2  # [2, M]
+        rows = lcum[idx]  # one stacked gather: [2, M, W, 2K]
+        tv = jnp.transpose(rows[0] - rows[1], (1, 0, 2))  # [W, M, 2K]
+        mom_l = mom_l + tv[..., :K]  # paired halves
+        mom_r = mom_r + tv[..., K:]
 
     def masked_event_scan(mom_l, mom_r, s_lo, s_hi, on, times, poss, steps, prefix):
         """Fixed-trip scan of the per-atom runs [s_lo, s_hi), masked by on.
@@ -619,10 +798,15 @@ def eval_atoms_dyn(
             idx = jnp.where(valid, i, 0)
             te = times[idx]
             p = poss[idx]
-            row = table[idx, side]  # [M, 2K]
             if prefix:
-                prev = jnp.where(j > 0, table[jnp.maximum(idx - 1, 0), side], 0.0)
-                row = row - prev  # per-event Φ from the inclusive prefix rows
+                # per-event Φ from the inclusive prefix rows, both rows in
+                # ONE stacked gather
+                idx2 = jnp.stack([idx, jnp.maximum(idx - 1, 0)])
+                rows2 = table[idx2, side[None]]  # [2, M, 2K]
+                prev = jnp.where(j > 0, rows2[1], 0.0)
+                row = rows2[0] - prev
+            else:
+                row = table[idx, side]  # [M, 2K]
             keep = valid & _dyn_pos_mask(atoms, p)
             m_l = (te[None] >= t_b[0][:, None]) & (te[None] <= t_b[1][:, None])
             m_r = (te[None] > t_b[1][:, None]) & (te[None] <= t_b[2][:, None])
@@ -678,12 +862,12 @@ def eval_atoms_dyn(
     val_r = jnp.einsum(
         "wmst,ms,wt->wm", mom_r.reshape(W, M, k_s, k_t), atoms.qs, wb.qt[1::2]
     )
-    if exact:
+    if acc is not None:
         # elementwise multiply-reduce, NOT einsum: the GEMM einsum lowers to
         # is not row-deterministic across the w batch on CPU XLA, which would
         # make duplicate window centers differ by an ulp
-        val_l = val_l + (acc_l * atoms.qs[None]).sum(-1)
-        val_r = val_r + (acc_r * atoms.qs[None]).sum(-1)
+        val_l = val_l + (acc[..., :k_s] * atoms.qs[:, None, :]).sum(-1).T
+        val_r = val_r + (acc[..., k_s:] * atoms.qs[:, None, :]).sum(-1).T
     out = jnp.stack([val_l, val_r], axis=1).reshape(Wh, M)
     return jnp.where(atoms.valid[None, :], out, 0.0)
 
@@ -693,6 +877,7 @@ def eval_atoms_flat(
     forest: FlatForest,
     atoms: FlatAtoms,
     wb: WindowBatch,
+    ranks=None,
     *,
     max_levels: int,
     search_steps: int,
@@ -701,17 +886,28 @@ def eval_atoms_flat(
     """Per-atom aggregated Q·A for every half-window: [Wh, M].
 
     Callers reduce the Wh axis (sum the two halves of each window center) and
-    scatter the M axis onto lixels. ``cascade=True`` additionally requires
-    the (left, right)-paired row layout produced by ``make_window_batch``
-    (rows 2w / 2w+1 are the two halves of center w).
+    scatter the M axis onto lixels. Requires the (left, right)-paired row
+    layout produced by ``make_window_batch`` (rows 2w / 2w+1 are the two
+    halves of center w). ``ranks`` optionally supplies the precomputed
+    :func:`rank_boundaries` table [3, W, E] (the plan hoist); ``None``
+    recomputes it inline (the distributed path).
     """
+    if ranks is None:
+        ranks = rank_boundaries(forest, wb, search_steps=search_steps)
     if cascade:
         acc = _engine_cascade(
-            forest, atoms, wb, max_levels=max_levels, search_steps=search_steps
+            forest, atoms, wb, ranks,
+            max_levels=max_levels, search_steps=search_steps,
         )
     else:
+        Wh = wb.t_lo.shape[0]
+        W = Wh // 2
+        eid = atoms.edge
+        M = eid.shape[0]
+        k = ranks[:, :, eid]  # [3, W, M] (lo, mid, hi) per center
+        r_lo = jnp.stack([k[0], k[1]], axis=1).reshape(Wh, M)
+        r_hi = jnp.stack([k[1], k[2]], axis=1).reshape(Wh, M)
         combo = atoms.side_feat.astype(jnp.int32)[None, :] * 2 + wb.half[:, None]
-        r_lo, r_hi = _rank_intervals(forest, atoms, wb, search_steps)
         acc = _engine_search(
             forest, atoms, wb, combo, r_lo, r_hi,
             max_levels=max_levels, search_steps=search_steps,

@@ -126,6 +126,19 @@ class AtomSet:
     def m(self) -> int:
         return int(self.lixel.shape[0])
 
+    def take(self, sel: np.ndarray) -> "AtomSet":
+        """Row subset (fancy-index every field)."""
+        return AtomSet(
+            lixel=self.lixel[sel],
+            edge=self.edge[sel],
+            side_feat=self.side_feat[sel],
+            qs=self.qs[sel],
+            pos_hi=self.pos_hi[sel],
+            pos_lo1=self.pos_lo1[sel],
+            lo1_right=self.lo1_right[sel],
+            pos_lo2=self.pos_lo2[sel],
+        )
+
     @staticmethod
     def concat(parts: Sequence["AtomSet"]) -> "AtomSet":
         parts = [p for p in parts if p.m]

@@ -20,7 +20,7 @@ flow — every step is a masked gather, so the whole thing batches over
 (lixels × edges × windows) and maps directly onto the Pallas ``tree_query``
 kernel.
 
-Two query engines, selectable with ``cascade``:
+NumPy query engines, selectable with ``cascade``:
   * ``cascade=False`` — per-bucket binary searches: O(log² n_e) compare steps
     per query (a binary search inside each canonical bucket).
   * ``cascade=True``  — fractional cascading (beyond-paper §Perf
@@ -28,6 +28,12 @@ Two query engines, selectable with ``cascade``:
     the root bucket, then walked down the two boundary paths with O(1)
     precomputed bridge gathers per level — restoring the paper's O(log n_e)
     bound (their Lemma 4.1) and cutting the vectorized step count ~log n ×.
+
+The device engines (``FlatForestEngine`` / ``FlatDynamicEngine``) run the
+packed query plan (DESIGN.md §7): host plans cached per snapshot epoch,
+window tables per ts tuple, and interchangeable executors — the gather-lean
+jnp ``packed`` walk (default), the legacy ``cascade``/``search`` jnp paths,
+and the Pallas kernels (``executor='pallas'``).
 """
 from __future__ import annotations
 
@@ -93,12 +99,16 @@ class RangeForest:
         # O(1) whole-edge window aggregates for Lixel Sharing: inclusive
         # prefix sums of Φ in raw time order, per edge.
         self.time_cum = np.cumsum(phi, axis=0, dtype=np.float64) if len(phi) else phi
+        # raw event moments, kept by reference: the packed-plan engine builds
+        # its position-major tables from these (exact rows, not prefix diffs)
+        self.phi = phi
         self._ptr = ee.ptr
         self.index_bytes = (
             self.pos_flat.nbytes
             + self.cum_flat.nbytes
             + (self.bridge.nbytes if build_bridges else 0)
             + self.time_cum.nbytes
+            + self.phi.nbytes
         )
 
         for e in range(E):
@@ -426,6 +436,104 @@ def make_window_batch(ctx: MomentContext, ts) -> Tuple[np.ndarray, ...]:
     return t_lo, t_hi, lo_right, half, qt
 
 
+def _device_nbytes(obj) -> int:
+    """Total bytes of every device array reachable from ``obj`` — the ONE
+    accounting helper for engine tables, atom packs and packed plans
+    (accepts arrays, NamedTuples, dicts, lists/tuples, and objects with a
+    ``nbytes`` attribute)."""
+    if obj is None:
+        return 0
+    if hasattr(obj, "shape") and hasattr(obj, "dtype"):
+        return int(np.prod(obj.shape)) * obj.dtype.itemsize
+    if isinstance(obj, dict):
+        return sum(_device_nbytes(v) for v in obj.values())
+    if isinstance(obj, (list, tuple)):
+        return sum(_device_nbytes(v) for v in obj)
+    nb = getattr(obj, "nbytes", None)
+    if nb is not None and not callable(nb):
+        return int(nb)
+    return 0
+
+
+def build_packed_host_tables(rf: RangeForest):
+    """Position-major merge-tree tables for the packed-plan executor.
+
+    The transpose of the ``RangeForest`` build: level ℓ buckets 2^ℓ
+    consecutive POSITION-ranks; inside a bucket events are time-sorted and
+    carry inclusive prefix sums of raw Φ. Returns a dict of host arrays for
+    ``jax_engine.PackedForest`` plus the per-level node-start offsets
+    (``node_starts``) and per-level search trip counts the node-table
+    builder needs. Block sizes (n_pad, n_levels, edge_base) are shared with
+    the time-major layout, so the two are the same size.
+    """
+    net, ee, ctx, phi = rf.net, rf.ee, rf.ctx, rf.phi
+    E = net.n_edges
+    counts = np.diff(ee.ptr)
+    K = ctx.K
+    n_pad = rf.n_pad
+    n_lev = rf.n_levels
+    edge_base = rf.edge_base
+    Lmax = max(rf.max_levels, 1)
+    pos_base = np.zeros(E + 1, dtype=np.int64)
+    np.cumsum(n_pad, out=pos_base[1:])
+    P = int(pos_base[-1])
+    T = int(edge_base[-1])
+    pm_pos = np.full(max(P, 1), np.inf)
+    pm_time = np.full(max(T, 1), np.inf)
+    pm_cum = np.zeros((max(T, 1), N_COMBOS, K))
+    node_base = np.zeros((E, Lmax), np.int64)
+    starts: list = [[] for _ in range(Lmax)]
+    nid = 0
+    for lev in range(Lmax):
+        for e in range(E):
+            if lev >= n_lev[e]:
+                continue
+            nb_e = int(n_pad[e]) >> lev
+            node_base[e, lev] = nid
+            starts[lev].append(
+                edge_base[e] + lev * n_pad[e] + np.arange(nb_e, dtype=np.int64) * (1 << lev)
+            )
+            nid += nb_e
+    node_starts = tuple(
+        np.concatenate(s).astype(np.int32) if s else np.zeros(1, np.int32)
+        for s in starts
+    )
+    for e in range(E):
+        n = int(counts[e])
+        if n == 0:
+            continue
+        npad = int(n_pad[e])
+        lo = int(ee.ptr[e])
+        order0 = np.argsort(ee.pos[lo : lo + n], kind="stable")
+        pm_pos[pos_base[e] : pos_base[e] + n] = ee.pos[lo : lo + n][order0]
+        tms = np.full(npad, np.inf)
+        tms[:n] = ee.time[lo : lo + n][order0]
+        ph = np.zeros((npad, N_COMBOS, K))
+        ph[:n] = phi[lo : lo + n][order0]
+        ranks = np.arange(npad, dtype=np.int64)
+        base = int(edge_base[e])
+        for lev in range(int(n_lev[e])):
+            bucket = ranks >> lev
+            order = np.lexsort((tms, bucket))
+            bptr = np.arange(0, npad + 1, 1 << lev)
+            sl = base + lev * npad
+            pm_time[sl : sl + npad] = tms[order]
+            pm_cum[sl : sl + npad] = segmented_cumsum(ph[order], bptr)
+    return dict(
+        pm_pos=pm_pos,
+        pos_base=pos_base[:-1],
+        pm_time=pm_time,
+        pm_cum=pm_cum,
+        edge_base=edge_base[:-1].copy(),
+        n_pad=n_pad,
+        n_lev=n_lev,
+        node_base=node_base.astype(np.int32),
+        node_starts=node_starts,
+        n_nodes=nid,
+        steps_per_level=tuple(lev + 1 for lev in range(Lmax)),
+    )
+
+
 _JIT_FLUSH = None  # persistent across FlatForestEngine instances: the jit
 # cache under it is keyed on (size class, Wh, L) shapes plus the static
 # (max_levels, search_steps, cascade) — repeated flushes never recompile.
@@ -438,22 +546,63 @@ def _get_flush():
 
         import jax
 
-        from .jax_engine import eval_atoms_flat
+        from .jax_engine import eval_atoms_flat, rank_boundaries
 
         @functools.partial(
             jax.jit, static_argnames=("max_levels", "search_steps", "cascade")
         )
-        def _flush(forest, fa, wb, heat, *, max_levels, search_steps, cascade):
+        def _flush(forest, fa, wb, ranks, heat, *, max_levels, search_steps, cascade):
             vals = eval_atoms_flat(
-                forest, fa, wb,
+                forest, fa, wb, ranks,
                 max_levels=max_levels, search_steps=search_steps, cascade=cascade,
             )  # [Wh, Mpad]
             W = heat.shape[1]
             per_win = vals.reshape(W, 2, -1).sum(axis=1)  # fold window halves
             return heat.at[fa.lixel].add(per_win.T)  # scatter onto [L, W]
 
-        _JIT_FLUSH = _flush
+        ranks_fn = functools.partial(jax.jit, static_argnames=("search_steps",))(
+            rank_boundaries
+        )
+        _JIT_FLUSH = (_flush, ranks_fn)
     return _JIT_FLUSH
+
+
+_JIT_PACKED = None  # packed-plan executor jits: (node tables, root ranks,
+# flush). Keyed on the (node count, W, size class) shapes plus the static
+# trip counts — steady-state serving hits existing entries only.
+
+
+def _get_packed():
+    global _JIT_PACKED
+    if _JIT_PACKED is None:
+        import functools
+
+        import jax
+
+        from .jax_engine import (
+            eval_atoms_packed,
+            packed_node_tables,
+            packed_root_ranks,
+        )
+
+        tables_fn = functools.partial(
+            jax.jit, static_argnames=("steps_per_level", "k_t")
+        )(packed_node_tables)
+        roots_fn = functools.partial(jax.jit, static_argnames=("search_steps",))(
+            packed_root_ranks
+        )
+
+        @functools.partial(jax.jit, static_argnames=("max_levels",))
+        def _flush(nodeval, node_base_lvl, fa, r_lo, r_hi, heat, *, max_levels):
+            vals = eval_atoms_packed(
+                nodeval, node_base_lvl, fa, r_lo, r_hi, max_levels=max_levels
+            )  # [Wh, Mpad]
+            W = heat.shape[1]
+            per_win = vals.reshape(W, 2, -1).sum(axis=1)  # fold window halves
+            return heat.at[fa.lixel].add(per_win.T)  # scatter onto [L, W]
+
+        _JIT_PACKED = (tables_fn, roots_fn, _flush)
+    return _JIT_PACKED
 
 
 class _DeviceEngine:
@@ -465,22 +614,38 @@ class _DeviceEngine:
         import jax
         import jax.numpy as jnp
 
+        from .query_plan import PlanCache
+
         self._jax = jax
         self._jnp = jnp
+        self._wb_cache = PlanCache(8)
+        # op accounting for QueryStats (n_rank_searches / n_moment_gathers):
+        # time-boundary search problems solved and prefix/node moment rows
+        # gathered, host-side formulas matching what the jits dispatch
+        self.counters = {"rank_searches": 0, "moment_gathers": 0}
 
     def window_batch(self, ctx: MomentContext, ts):
+        """Device WindowBatch for the ts tuple, LRU-cached — repeated queries
+        over the same centers reuse one device object (and everything keyed
+        on it downstream: rank tables, node values, leaf prefixes)."""
         from .jax_engine import WindowBatch
 
+        ts_key = tuple(float(t) for t in ts)
+        hit = self._wb_cache.get(ts_key)
+        if hit is not None:
+            return hit
         t_lo, t_hi, lo_right, half, qt = make_window_batch(ctx, ts)
         jnp = self._jnp
         with self._jax.experimental.enable_x64():
-            return WindowBatch(
+            wb = WindowBatch(
                 t_lo=jnp.asarray(t_lo),
                 t_hi=jnp.asarray(t_hi),
                 lo_right=jnp.asarray(lo_right),
                 half=jnp.asarray(half),
                 qt=jnp.asarray(qt),
             )
+        self._wb_cache.put(ts_key, wb)
+        return wb
 
     def new_heatmap(self, n_lixels: int, n_windows: int):
         with self._jax.experimental.enable_x64():
@@ -521,25 +686,60 @@ class _DeviceEngine:
 class FlatForestEngine(_DeviceEngine):
     """Device-resident window-batched query engine over a built RangeForest.
 
-    Solves the multiple-temporal-KDE hot loop (§8.2) on the accelerator: the
-    flat merge-tree tables live on device (float64 — exactness is part of the
-    paper's claim), atom flushes are padded into power-of-two size classes
-    and evaluated for *all* W windows in one jit'd call, scatter-accumulating
-    into a device-resident [L, W] heatmap that is transferred once per query.
+    Solves the multiple-temporal-KDE hot loop (§8.2) on the accelerator with
+    interchangeable executors over the packed query plan (DESIGN.md §7):
+
+      executor='packed'   (default) gather-lean jnp executor: position-major
+                          node tables with q_t folded in, built ONCE per
+                          (snapshot, window batch) and LRU-cached; atoms
+                          carry cached root rank intervals, so a steady-state
+                          flush is one canonical walk with one paired gather
+                          per level — no searches at all.
+      executor='cascade'  the fractional-cascading prefix-path walk (legacy
+                          jnp path; time-major tables, bridges required).
+      executor='search'   per-bucket binary-search decomposition (legacy).
+      executor='pallas'   the Pallas ``tree_query`` kernel over per-edge
+                          grouped tables (TPU layout; interpret mode here).
+
+    All executors answer all W windows per flush into a device-resident
+    [L, W] heatmap (float64 — exactness is part of the paper's claim),
+    transferred once per query.
     """
 
-    def __init__(self, rf: RangeForest):
+    def __init__(self, rf: RangeForest, *, executor: str = "packed"):
         self._init_jax()
-        jax = self._jax
-        jnp = self._jnp
+        if executor in ("auto", None):
+            executor = "packed"
+        if executor not in ("packed", "cascade", "search", "pallas"):
+            raise ValueError(f"unknown rfs executor {executor!r}")
+        if executor == "cascade" and not rf.has_bridges:
+            executor = "search"
+        from .query_plan import PlanCache
 
-        from .jax_engine import FlatForest
+        jnp = self._jnp
         self.rf = rf
+        self.executor = executor
         self.max_levels = max(rf.max_levels, 1)
         npmax = max(int(rf.n_pad.max(initial=1)), 1)
         nemax = max(int(np.diff(rf.ee.ptr).max(initial=1)), 1)
         self.search_steps = max(int(np.ceil(np.log2(max(npmax, nemax) + 1))) + 1, 1)
         self.cascade_ok = rf.has_bridges
+        self._flat = None  # time-major FlatForest (legacy + pallas executors)
+        self._packed = None  # PackedForest + node metadata (packed executor)
+        self._tab_cache = PlanCache(2)  # ts_key -> window tables (plans)
+        self._pack_cache = PlanCache(2)  # plan.key -> device atom packs
+        if executor == "packed":
+            self._get_packed_forest()
+        else:
+            self._get_flat_forest()
+
+    # ------------------------------------------------------------- packing
+    def _get_flat_forest(self):
+        if self._flat is not None:
+            return self._flat
+        from .jax_engine import FlatForest
+
+        rf, jnp = self.rf, self._jnp
 
         def pad1(x, fill):
             # gather-safe: flat tables must never be empty
@@ -548,8 +748,8 @@ class FlatForestEngine(_DeviceEngine):
             return np.full((1,) + x.shape[1:], fill, x.dtype)
 
         bridge = rf.bridge if rf.bridge is not None else np.zeros(1, np.int32)
-        with jax.experimental.enable_x64():
-            self.forest = FlatForest(
+        with self._jax.experimental.enable_x64():
+            self._flat = FlatForest(
                 pos_flat=jnp.asarray(pad1(rf.pos_flat, np.inf)),
                 cum_flat=jnp.asarray(pad1(rf.cum_flat, 0.0)),
                 edge_base=jnp.asarray(rf.edge_base[:-1]),
@@ -559,33 +759,208 @@ class FlatForestEngine(_DeviceEngine):
                 time_ptr=jnp.asarray(rf.ee.ptr),
                 bridge=jnp.asarray(pad1(bridge, 0)),
             )
-        self.device_bytes = sum(
-            int(np.prod(x.shape)) * x.dtype.itemsize for x in self.forest
+        return self._flat
+
+    def _get_packed_forest(self):
+        if self._packed is not None:
+            return self._packed
+        from .jax_engine import PackedForest
+
+        jnp = self._jnp
+        host = build_packed_host_tables(self.rf)
+        with self._jax.experimental.enable_x64():
+            pf = PackedForest(
+                pm_pos=jnp.asarray(host["pm_pos"]),
+                pos_base=jnp.asarray(host["pos_base"]),
+                pm_time=jnp.asarray(host["pm_time"]),
+                pm_cum=jnp.asarray(host["pm_cum"]),
+                edge_base=jnp.asarray(host["edge_base"]),
+                n_pad=jnp.asarray(host["n_pad"]),
+                n_lev=jnp.asarray(host["n_lev"]),
+                node_base=jnp.asarray(host["node_base"]),
+            )
+            node_starts = tuple(jnp.asarray(s) for s in host["node_starts"])
+            # walk-level -> node base, transposed for dynamic level indexing
+            node_base_lvl = jnp.asarray(host["node_base"].T.copy())
+        self._packed = dict(
+            pf=pf,
+            node_starts=node_starts,
+            node_base_lvl=node_base_lvl,
+            steps_per_level=host["steps_per_level"],
+            n_nodes=int(host["n_nodes"]),
+        )
+        return self._packed
+
+    @property
+    def device_bytes(self) -> int:
+        """Index tables + cached packed plans (atom packs, window tables)."""
+        return _device_nbytes(
+            [
+                self._flat,
+                self._packed,
+                list(self._tab_cache.values()),
+                list(self._pack_cache.values()),
+            ]
         )
 
-    # ------------------------------------------------------------ per query
-    def flush(self, heat, atoms: AtomSet, wb, *, cascade: bool = True, **_):
-        """heat[L, W] += window-batched contributions of one atom block.
-
-        Atoms are partitioned into LEVEL classes (by their event edge's tree
-        depth, rounded up to multiples of 3) so shallow-edge atoms never walk
-        the deepest edge's level count — each class is a separate jit entry
-        with its own static ``max_levels``.
+    # ----------------------------------------------------- plan-side caches
+    def _atom_packs(self, plan):
+        """Device atom packs for a HostPlan: per block, per LEVEL class
+        (edge tree depth rounded up to multiples of 3, so shallow-edge atoms
+        never walk the deepest edge's level count), the padded FlatAtoms —
+        plus, for the packed executor, the cached window-independent root
+        position-rank interval of every atom (searched once per plan, ever).
         """
-        if atoms.m == 0:
-            return heat
-        nl = self.rf.n_levels[atoms.edge]
-        cls = np.minimum(-(-nl // 3) * 3, self.max_levels).astype(np.int64)
-        for c in np.unique(cls):
-            sel = np.nonzero(cls == c)[0]
+        key = (plan.key, self.executor)
+        hit = self._pack_cache.get(key)
+        if hit is not None:
+            return hit
+        packs = []
+        for atoms in plan.blocks:
+            if self.executor == "pallas":
+                packs.extend(self._pallas_pack(atoms))
+                continue
+            nl = self.rf.n_levels[atoms.edge]
+            cls = np.minimum(-(-nl // 3) * 3, self.max_levels).astype(np.int64)
+            for c in np.unique(cls):
+                sel = np.nonzero(cls == c)[0]
+                with self._jax.experimental.enable_x64():
+                    fa = self._pad_atoms(atoms, sel)
+                    entry = dict(max_levels=int(c), fa=fa, m=len(sel))
+                    if self.executor == "packed":
+                        pk = self._get_packed_forest()
+                        _, roots_fn, _ = _get_packed()
+                        r_lo, r_hi = roots_fn(
+                            pk["pf"], fa, search_steps=self.search_steps
+                        )
+                        entry["r_lo"], entry["r_hi"] = r_lo, r_hi
+                packs.append(entry)
+        self._pack_cache.put(key, packs)
+        return packs
+
+    def _pallas_pack(self, atoms):
+        """Per-edge grouped kernel layout for one atom block: one entry per
+        NPAD size class (every group in a call shares its table shape)."""
+        from .query_plan import group_atoms_by_edge
+
+        rf, jnp = self.rf, self._jnp
+        K4 = N_COMBOS * rf.ctx.K
+        entries = []
+        npad_of = rf.n_pad[atoms.edge]
+        for p in np.unique(npad_of):
+            sel = np.nonzero(npad_of == p)[0]
+            sub = atoms.take(sel)
+            _, cnt = np.unique(sub.edge, return_counts=True)
+            qp = _size_class(int(cnt.max(initial=1)), floor=16)
+            edges, fields, _ = group_atoms_by_edge(sub, q_pad=qp)
+            p_i, lvl = int(p), int(p).bit_length()
+            G = len(edges)
+            pos_g = np.empty((G, lvl, p_i))
+            cum_g = np.empty((G, lvl, p_i, K4))
+            for g, e in enumerate(edges):
+                lo = int(rf.edge_base[e])
+                hi = lo + lvl * p_i
+                pos_g[g] = rf.pos_flat[lo:hi].reshape(lvl, p_i)
+                cum_g[g] = rf.cum_flat[lo:hi].reshape(lvl, p_i, K4)
             with self._jax.experimental.enable_x64():
-                fa = self._pad_atoms(atoms, sel)
-                heat = _get_flush()(
-                    self.forest, fa, wb, heat,
-                    max_levels=int(c),
-                    search_steps=self.search_steps,
-                    cascade=bool(cascade and self.cascade_ok),
+                entries.append(
+                    dict(
+                        kind="pallas",
+                        edges=jnp.asarray(edges),
+                        fields={k: jnp.asarray(v) for k, v in fields.items()},
+                        pos=jnp.asarray(pos_g),
+                        cum=jnp.asarray(cum_g),
+                        tq=min(128, qp),
+                        m=sub.m,
+                        max_levels=lvl,
+                    )
                 )
+        return entries
+
+    def window_tables(self, wb, ts_key):
+        """Per-(window batch) derived tables, LRU-cached by the ts tuple.
+
+        packed: q_t-folded paired node values (the plan's core hoist — every
+        time search and every per-node prefix gather happens HERE, at node
+        count scale, never per atom). legacy executors: the [3, W, E]
+        time-rank boundary table shared by every flush of the query.
+        """
+        key = (ts_key, self.executor)
+        hit = self._tab_cache.get(key)
+        if hit is not None:
+            return hit
+        W = len(ts_key)
+        with self._jax.experimental.enable_x64():
+            if self.executor == "packed":
+                pk = self._get_packed_forest()
+                tables_fn, _, _ = _get_packed()
+                tabs = tables_fn(
+                    pk["pf"], wb, pk["node_starts"],
+                    steps_per_level=pk["steps_per_level"],
+                    k_t=int(self.rf.ctx.k_t),
+                )
+                nn = max(pk["n_nodes"], 1)
+                self.counters["rank_searches"] += 3 * W * nn
+                self.counters["moment_gathers"] += 3 * W * nn
+            else:
+                _, ranks_fn = _get_flush()
+                tabs = ranks_fn(
+                    self._get_flat_forest(), wb, search_steps=self.search_steps
+                )
+                E = self.rf.net.n_edges
+                self.counters["rank_searches"] += 3 * W * E
+        self._tab_cache.put(key, tabs)
+        return tabs
+
+    # ------------------------------------------------------------ per query
+    def flush_plan(self, heat, plan, wb, ts_key, **_):
+        """heat[L, W] += every atom block of the plan, all W windows.
+
+        One jit'd call per (block, level class); all window-dependent tables
+        come from the ts-keyed cache, all atom-side state from the plan's
+        pack cache — in steady state the only work left is the walks.
+        """
+        if plan.n_atoms == 0:
+            return heat
+        tabs = self.window_tables(wb, ts_key)
+        packs = self._atom_packs(plan)
+        W = len(ts_key)
+        for entry in packs:
+            c, m = entry["max_levels"], entry["m"]
+            with self._jax.experimental.enable_x64():
+                if self.executor == "packed":
+                    pk = self._packed
+                    _, _, flush_fn = _get_packed()
+                    heat = flush_fn(
+                        tabs, pk["node_base_lvl"], entry["fa"],
+                        entry["r_lo"], entry["r_hi"], heat, max_levels=c,
+                    )
+                    self.counters["moment_gathers"] += 2 * c * m
+                elif self.executor == "pallas":
+                    from ..kernels.ops import INTERPRET
+
+                    rfs_flush, _, _ = _get_pallas()
+                    heat = rfs_flush(
+                        entry["pos"], entry["cum"], tabs, entry["edges"],
+                        entry["fields"], wb, heat,
+                        tq=entry["tq"], interpret=INTERPRET,
+                    )
+                    self.counters["moment_gathers"] += 4 * 2 * W * m * c
+                else:
+                    flush_fn, _ = _get_flush()
+                    cascade = self.executor == "cascade"
+                    heat = flush_fn(
+                        self._get_flat_forest(), entry["fa"], wb, tabs, heat,
+                        max_levels=c,
+                        search_steps=self.search_steps,
+                        cascade=cascade,
+                    )
+                    # paired hi/lo prefix rows: cascade pays one stacked
+                    # gather per (boundary, level); search two buckets of
+                    # two rows per (half-window, level)
+                    self.counters["moment_gathers"] += (
+                        2 * 3 * W * m * (c + 1) if cascade else 4 * 2 * W * m * c
+                    )
         return heat
 
 
@@ -615,14 +990,17 @@ def _get_dyn():
 
         @functools.partial(
             jax.jit,
-            static_argnames=("n_levels", "hq", "scan_steps", "pend_steps", "exact"),
+            static_argnames=(
+                "n_levels", "hq", "scan_steps", "pend_steps", "exact", "tree"
+            ),
         )
         def _flush(forest, fa, wb, tables, heat, *, n_levels, hq,
-                   scan_steps, pend_steps, exact):
+                   scan_steps, pend_steps, exact, tree=True):
             vals = eval_atoms_dyn(
                 forest, fa, wb, tables,
                 n_levels=n_levels, hq=hq,
                 scan_steps=scan_steps, pend_steps=pend_steps, exact=exact,
+                tree=tree,
             )  # [Wh, Mpad]
             W = heat.shape[1]
             per_win = vals.reshape(W, 2, -1).sum(axis=1)  # fold window halves
@@ -630,6 +1008,136 @@ def _get_dyn():
 
         _JIT_DYN = (leaf_tables, node_tables, _flush)
     return _JIT_DYN
+
+
+_JIT_PALLAS = None  # pallas executor wrappers: (rfs flush, dyn flush) — the
+# table/q_vec assembly, kernel call and heat scatter in one jit each.
+
+
+def _get_pallas():
+    global _JIT_PALLAS
+    if _JIT_PALLAS is None:
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        from ..kernels.dyn_query import dyn_leaf_query_pallas, dyn_node_walk_pallas
+        from ..kernels.tree_query import tree_query_pallas
+        from .jax_engine import FlatAtoms, _dyn_leaf_range
+
+        @functools.partial(jax.jit, static_argnames=("tq", "interpret"))
+        def _rfs_flush(pos_g, cum_g, ranks, edges, f, wb, heat, *, tq, interpret):
+            """Grouped tree_query kernel pass: [G, Wh, Qp] → heat[L, W]."""
+            G = pos_g.shape[0]
+            Wh = wb.t_lo.shape[0]
+            W = Wh // 2
+            Qp = f["qs"].shape[1]
+            k_s = f["qs"].shape[-1]
+            k_t = wb.qt.shape[1]
+            k = ranks[:, :, edges]  # [3, W, G] (lo, mid, hi) per center
+            r_lo = jnp.stack([k[0], k[1]], axis=1).reshape(Wh, G).T
+            r_hi = jnp.stack([k[1], k[2]], axis=1).reshape(Wh, G).T
+            r_lo = jnp.broadcast_to(r_lo[:, :, None], (G, Wh, Qp))
+            r_hi = jnp.broadcast_to(r_hi[:, :, None], (G, Wh, Qp))
+            # q_vec over the 4-combo axis: the atom's (side, half) slot holds
+            # q_s ⊗ q_t, the rest zeros — the kernel stays combo-agnostic
+            qfull = (
+                f["qs"][:, None, :, :, None] * wb.qt[None, :, None, None, :]
+            ).reshape(G, Wh, Qp, k_s * k_t)
+            combo = f["side_feat"][:, None, :] * 2 + wb.half[None, :, None]
+            oh = jnp.arange(4)[None, None, None] == combo[..., None]
+            qvec = (oh[..., None] * qfull[..., None, :]).reshape(
+                G, Wh, Qp, 4 * k_s * k_t
+            )
+            qvec = qvec * f["valid"][:, None, :, None]
+            out = tree_query_pallas(
+                pos_g, cum_g, r_lo, r_hi,
+                f["pos_hi"], f["pos_lo1"], f["lo1_right"], f["pos_lo2"], qvec,
+                # interpret mode keeps the engine's f64 tables (bit-comparable
+                # to the oracle); a compiled TPU kernel must cast to f32
+                tq=tq, interpret=interpret, precise=interpret,
+            )  # [G, Wh, Qp]
+            per_win = out.reshape(G, W, 2, Qp).sum(2)  # fold window halves
+            flat = jnp.transpose(per_win, (0, 2, 1)).reshape(-1, W)
+            return heat.at[f["lixel"].reshape(-1)].add(flat)
+
+        @functools.partial(jax.jit, static_argnames=("hq", "exact", "E"))
+        def _dyn_group(tables, edges, *, hq, exact, E):
+            """Per-edge grouped kernel tables from the flat window tables.
+
+            Depends only on (window tables, plan edges) — both stable across
+            warm flushes — so the engine caches the result alongside the
+            window tables instead of re-gathering it per flush.
+            """
+            G = edges.shape[0]
+            if exact:
+                (nodeval,) = tables  # [TN·2, W, 2k_s] flat level-major
+                W, C = nodeval.shape[1], nodeval.shape[2]
+                parts = []
+                for d in range(hq + 1):
+                    lo = E * ((1 << d) - 1) * 2
+                    hi = E * ((1 << (d + 1)) - 1) * 2
+                    seg = nodeval[lo:hi].reshape(E, (1 << d) * 2, W, C)
+                    parts.append(seg[edges])
+                nv_g = jnp.concatenate(parts, axis=1)  # [G, R2, W, C]
+                return nv_g.reshape(G, nv_g.shape[1], W * C)
+            (lcum,) = tables  # [E·(nleaf+1)·2, W, 2K]
+            R = (1 << hq) * 2 + 2
+            WK = lcum.shape[1] * lcum.shape[2]
+            return lcum.reshape(E, R, -1)[edges].reshape(G, R, WK)
+
+        @functools.partial(
+            jax.jit, static_argnames=("hq", "tq", "interpret", "exact")
+        )
+        def _dyn_flush(forest, grouped, edges, f, wb, heat, *, hq, tq,
+                       interpret, exact):
+            """Grouped DRFS kernel pass (tree phase only): scans ride the
+            jnp flush with ``tree=False``."""
+            G, Qp = f["pos_hi"].shape
+            W = wb.t_lo.shape[0] // 2
+            k_s = f["qs"].shape[-1]
+            k_t = wb.qt.shape[1]
+            edge2 = jnp.broadcast_to(edges[:, None], (G, Qp))
+            fa = FlatAtoms(
+                lixel=f["lixel"].reshape(-1),
+                edge=edge2.reshape(-1),
+                side_feat=f["side_feat"].reshape(-1),
+                qs=f["qs"].reshape(G * Qp, -1),
+                pos_hi=f["pos_hi"].reshape(-1),
+                pos_lo1=f["pos_lo1"].reshape(-1),
+                lo1_right=f["lo1_right"].reshape(-1),
+                pos_lo2=f["pos_lo2"].reshape(-1),
+                valid=f["valid"].reshape(-1),
+            )
+            leaf_lo, leaf_hi = _dyn_leaf_range(forest, fa, hq)
+            leaf_hi = jnp.maximum(leaf_hi, leaf_lo)
+            leaf_lo = leaf_lo.reshape(G, Qp)
+            leaf_hi = leaf_hi.reshape(G, Qp)
+            qs_m = f["qs"] * f["valid"][..., None]
+            if exact:
+                out = dyn_node_walk_pallas(
+                    grouped, leaf_lo, leaf_hi, f["side_feat"], qs_m,
+                    hq=hq, tq=tq, interpret=interpret,
+                )  # [G, W, Qp]
+            else:
+                qtl, qtr = wb.qt[0::2], wb.qt[1::2]  # [W, k_t]
+                qv_l = (
+                    qs_m[:, None, :, :, None] * qtl[None, :, None, None, :]
+                ).reshape(G, W, Qp, k_s * k_t)
+                qv_r = (
+                    qs_m[:, None, :, :, None] * qtr[None, :, None, None, :]
+                ).reshape(G, W, Qp, k_s * k_t)
+                out = dyn_leaf_query_pallas(
+                    grouped, leaf_lo, leaf_hi, f["side_feat"], qv_l, qv_r,
+                    tq=tq, interpret=interpret,
+                )  # [G, W, Qp]
+            out = out * f["valid"][:, None, :]
+            flat = jnp.transpose(out, (0, 2, 1)).reshape(-1, W)
+            return heat.at[f["lixel"].reshape(-1)].add(flat)
+
+        _JIT_PALLAS = (_rfs_flush, _dyn_flush, _dyn_group)
+    return _JIT_PALLAS
 
 
 def jit_entry_count() -> int:
@@ -642,9 +1150,13 @@ def jit_entry_count() -> int:
     """
     fns = []
     if _JIT_FLUSH is not None:
-        fns.append(_JIT_FLUSH)
+        fns.extend(_JIT_FLUSH)
+    if _JIT_PACKED is not None:
+        fns.extend(_JIT_PACKED)
     if _JIT_DYN is not None:
         fns.extend(_JIT_DYN)
+    if _JIT_PALLAS is not None:
+        fns.extend(_JIT_PALLAS)
     total = 0
     for f in fns:
         probe = getattr(f, "_cache_size", None)
@@ -700,16 +1212,28 @@ class FlatDynamicEngine(_DeviceEngine):
     QueryStats counters host-side (same units as the NumPy path).
     """
 
-    def __init__(self, df, *, max_snapshots: int = 2):
+    def __init__(self, df, *, max_snapshots: int = 2, executor: str = "packed"):
         self._init_jax()
+        if executor in ("auto", None):
+            executor = "packed"
+        if executor not in ("packed", "pallas"):
+            raise ValueError(f"unknown drfs executor {executor!r}")
         self.df = df
+        self.executor = executor
         self.max_snapshots = max(int(max_snapshots), 1)
         from collections import OrderedDict
 
+        from .query_plan import PlanCache
+
         self._sealed_packs = OrderedDict()  # (revision, depth) -> _SealedPack
         self._pend_packs = OrderedDict()  # pend_revision -> _PendPack
-        self._tab_cache = OrderedDict()  # (id(wb), rev, depth, hq, exact) -> (wb, tabs)
-        self.device_bytes = 0
+        # (ts_key, revision, depth, hq, exact) -> window tables (packed plans)
+        self._tab_cache = OrderedDict()
+        # plan.key -> device atom packs (epoch-independent: padded atoms and
+        # the grouped kernel layout derive from the plan's host blocks only)
+        self._pack_cache = PlanCache(2)
+        # (table key, plan.key, block) -> per-edge grouped kernel tables
+        self._group_cache = PlanCache(8)
         snap = df.snapshot()
         self._get_sealed(snap)
         self._get_pending(snap)
@@ -757,15 +1281,21 @@ class FlatDynamicEngine(_DeviceEngine):
             # drop window tables derived from the evicted structure epoch
             for tk in [k for k in self._tab_cache if k[1:3] == old_key]:
                 del self._tab_cache[tk]
-        self._recount_bytes()
         return pack
 
-    def _recount_bytes(self) -> None:
-        # sealed + pending packs; the window-table cache is excluded (its
-        # entries are derived data, sized by W and dropped with their epoch)
-        self.device_bytes = sum(
-            p.nbytes for p in self._sealed_packs.values()
-        ) + sum(p.nbytes for p in self._pend_packs.values())
+    @property
+    def device_bytes(self) -> int:
+        """Sealed + pending packs + cached packed plans (window tables and
+        atom packs) — one shared accounting helper with the static engine."""
+        return _device_nbytes(
+            [
+                list(self._sealed_packs.values()),
+                list(self._pend_packs.values()),
+                list(self._tab_cache.values()),
+                list(self._pack_cache.values()),
+                list(self._group_cache.values()),
+            ]
+        )
 
     def _get_pending(self, snap) -> _PendPack:
         """Pending-CSR tables for the snapshot's pending epoch (LRU)."""
@@ -809,7 +1339,6 @@ class FlatDynamicEngine(_DeviceEngine):
         self._pend_packs[key] = pack
         while len(self._pend_packs) > self.max_snapshots + 2:
             self._pend_packs.popitem(last=False)
-        self._recount_bytes()
         return pack
 
     def _forest(self, sealed: _SealedPack, pend: _PendPack):
@@ -818,60 +1347,95 @@ class FlatDynamicEngine(_DeviceEngine):
         return FlatDynamicForest(**sealed.tables, **pend.tables)
 
     # ------------------------------------------------------------ per query
-    def window_tables(self, wb, snap, sealed: _SealedPack, hq: int, exact: bool):
-        """Window tables for (wb, snapshot epoch, hq, mode), LRU-cached.
+    def window_tables(self, wb, ts_key, snap, sealed: _SealedPack, hq: int, exact: bool):
+        """Window tables for (ts tuple, snapshot epoch, hq, mode), LRU-cached.
 
         The tables are the engine's core hoist: all per-node time searches
-        (and the q_t contraction, in exact mode) are paid once per query at
-        node-count scale, so every atom flush within the query costs O(1)
-        table gathers per atom — quantized mode reads the leaf prefix tables
-        (jax_engine.dyn_window_tables), exact mode the per-node value tables
-        (jax_engine.dyn_node_tables) that the canonical walk consumes. The
-        tables depend only on the sealed structure (never the pending
-        buffers), so the cache key is (WindowBatch identity, structure
-        epoch, hq, mode) — each entry holds the WindowBatch itself so the
-        id() cannot be recycled by GC while the entry is alive.
+        (and the q_t contraction, in exact mode) are paid once per (window
+        batch, structure epoch) at node-count scale, so every atom flush
+        within — and every WARM QUERY over the same centers — costs O(1)
+        table gathers per atom. Quantized mode reads the leaf prefix tables
+        (jax_engine.dyn_window_tables), exact mode the packed node-value
+        tables (jax_engine.dyn_node_tables) the shared canonical walk
+        consumes. The tables depend only on the sealed structure (never the
+        pending buffers), so the key is (ts, structure epoch, hq, mode) —
+        re-keying from WindowBatch identity to the ts tuple is what lets
+        repeated queries hit (the batch object is itself ts-cached).
         """
-        key = (id(wb), snap.revision, snap.depth, int(hq), bool(exact))
+        key = (ts_key, snap.revision, snap.depth, int(hq), bool(exact))
         hit = self._tab_cache.get(key)
-        if hit is not None and hit[0] is wb:
+        if hit is not None:
             self._tab_cache.move_to_end(key)
-            return hit[1]
+            return hit
         leaf_fn, node_fn, _ = _get_dyn()
 
         def steps(occ):
             return max(int(np.ceil(np.log2(int(occ) + 1))) + 1, 1)
 
+        E = snap.net.n_edges
+        W = len(ts_key)
         forest = self._forest(sealed, self._get_pending(snap))
         with self._jax.experimental.enable_x64():
             if exact:
                 spl = tuple(steps(o) for o in sealed.max_occ[: hq + 1])
-                tabs = node_fn(
+                tabs = (node_fn(
                     forest, wb,
                     n_levels=sealed.n_levels, hq=int(hq), steps_per_level=spl,
-                )
+                ),)
+                nn = E * ((1 << (hq + 1)) - 1)
             else:
                 tabs = (leaf_fn(
                     forest, wb,
                     n_levels=sealed.n_levels, hq=int(hq),
                     search_steps=steps(sealed.max_occ[hq]),
                 ),)
-        self._tab_cache[key] = (wb, tabs)
+                nn = E * (1 << hq)
+            self.counters["rank_searches"] += 3 * W * nn
+            self.counters["moment_gathers"] += 3 * W * nn
+        self._tab_cache[key] = tabs
         while len(self._tab_cache) > 4 * self.max_snapshots:
             self._tab_cache.popitem(last=False)
         return tabs
 
-    def flush(self, heat, atoms: AtomSet, wb, *, h0=None, exact_leaf=False,
-              snapshot=None, **_):
-        """heat[L, W] += one atom block, all W windows, snapshot-consistent.
+    def _atom_packs(self, plan):
+        """Padded device atom blocks for a HostPlan, LRU-cached per plan.
+
+        The pallas executor additionally carries the per-edge grouped layout
+        its kernels consume (the flat block still serves the scan phases).
+        """
+        hit = self._pack_cache.get(plan.key)
+        if hit is not None:
+            return hit
+        from .query_plan import group_atoms_by_edge
+
+        jnp = self._jnp
+        packs = []
+        for atoms in plan.blocks:
+            with self._jax.experimental.enable_x64():
+                entry = dict(fa=self._pad_atoms(atoms, np.arange(atoms.m)),
+                             atoms=atoms, m=atoms.m)
+                if self.executor == "pallas":
+                    _, cnt = np.unique(atoms.edge, return_counts=True)
+                    qp = _size_class(int(cnt.max(initial=1)), floor=16)
+                    edges, fields, _ = group_atoms_by_edge(atoms, q_pad=qp)
+                    entry["edges"] = jnp.asarray(edges)
+                    entry["fields"] = {k: jnp.asarray(v) for k, v in fields.items()}
+                    entry["tq"] = min(128, qp)
+                packs.append(entry)
+        self._pack_cache.put(plan.key, packs)
+        return packs
+
+    def flush_plan(self, heat, plan, wb, ts_key, *, h0=None, exact_leaf=False,
+                   snapshot=None, **_):
+        """heat[L, W] += every atom block of the plan, snapshot-consistent.
 
         Packs (or re-uses) the device tables of the targeted snapshot's
         epoch, then answers the fully-covered leaf ranges from the cached
         window tables plus boundary/pending scans, in one jit'd device call
-        per atom size class. ``snapshot=None`` pins the live head — the
-        pre-MVCC behaviour.
+        per atom block. ``snapshot=None`` pins the live head — the pre-MVCC
+        behaviour.
         """
-        if atoms.m == 0:
+        if plan.n_atoms == 0:
             return heat
         snap = snapshot if snapshot is not None else self.df.snapshot()
         sealed = self._get_sealed(snap)
@@ -883,22 +1447,58 @@ class FlatDynamicEngine(_DeviceEngine):
             # wasting at most 7 masked trips (pow-of-two rounding wastes ~2x)
             occ = int(sealed.max_occ[hq])
             scan_steps = -(-occ // 8) * 8 if occ else 0
-        # work accounting (same units as the NumPy scans: (atom, event) pairs
-        # examined, per half-window for partial leaves / per window pending)
         W = heat.shape[1]
-        snap.counters["pending"] += snap.pending_scan_pairs(atoms) * W
-        if exact_leaf:
-            snap.counters["partial"] += snap.partial_scan_pairs(atoms, hq) * 2 * W
-        tables = self.window_tables(wb, snap, sealed, hq, bool(exact_leaf))
+        tables = self.window_tables(wb, ts_key, snap, sealed, hq, bool(exact_leaf))
         _, _, flush_fn = _get_dyn()
-        with self._jax.experimental.enable_x64():
-            fa = self._pad_atoms(atoms, np.arange(atoms.m))
-            heat = flush_fn(
-                self._forest(sealed, pend), fa, wb, tables, heat,
-                n_levels=sealed.n_levels,
-                hq=int(hq),
-                scan_steps=int(scan_steps),
-                pend_steps=int(pend.pend_steps),
-                exact=bool(exact_leaf),
+        forest = self._forest(sealed, pend)
+        tab_key = (ts_key, snap.revision, snap.depth, int(hq), bool(exact_leaf))
+        for bi, entry in enumerate(self._atom_packs(plan)):
+            atoms = entry["atoms"]
+            # work accounting (same units as the NumPy scans: (atom, event)
+            # pairs examined, per half-window for partials / window pending)
+            snap.counters["pending"] += snap.pending_scan_pairs(atoms) * W
+            if exact_leaf:
+                snap.counters["partial"] += snap.partial_scan_pairs(atoms, hq) * 2 * W
+            self.counters["moment_gathers"] += (
+                2 * (hq + 1) * entry["m"] if exact_leaf else 2 * entry["m"]
             )
+            with self._jax.experimental.enable_x64():
+                if self.executor == "pallas":
+                    # tree phase on the kernels; scans stay in the jnp flush
+                    from ..kernels.ops import INTERPRET
+
+                    _, dyn_flush, dyn_group = _get_pallas()
+                    gkey = (tab_key, plan.key, bi)
+                    grouped = self._group_cache.get(gkey)
+                    if grouped is None:
+                        grouped = dyn_group(
+                            tables, entry["edges"],
+                            hq=int(hq), exact=bool(exact_leaf),
+                            E=snap.net.n_edges,
+                        )
+                        self._group_cache.put(gkey, grouped)
+                    heat = dyn_flush(
+                        forest, grouped, entry["edges"], entry["fields"], wb,
+                        heat, hq=int(hq), tq=entry["tq"],
+                        interpret=INTERPRET, exact=bool(exact_leaf),
+                    )
+                    if scan_steps or pend.pend_steps:
+                        heat = flush_fn(
+                            forest, entry["fa"], wb, (), heat,
+                            n_levels=sealed.n_levels,
+                            hq=int(hq),
+                            scan_steps=int(scan_steps),
+                            pend_steps=int(pend.pend_steps),
+                            exact=bool(exact_leaf),
+                            tree=False,
+                        )
+                else:
+                    heat = flush_fn(
+                        forest, entry["fa"], wb, tables, heat,
+                        n_levels=sealed.n_levels,
+                        hq=int(hq),
+                        scan_steps=int(scan_steps),
+                        pend_steps=int(pend.pend_steps),
+                        exact=bool(exact_leaf),
+                    )
         return heat

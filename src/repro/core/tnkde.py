@@ -17,7 +17,7 @@ the index in large vectorized blocks — the same batching the distributed
 (shard_map) and Pallas paths use.
 
 ``engine`` selects the flush backend for the forest solutions (DESIGN.md
-§4/§5):
+§4/§5/§7):
 
   engine='jax'    window-batched jit'd flat engine, all W windows per flush,
                   device-resident [W, L] heatmap (the default when available).
@@ -25,8 +25,15 @@ the index in large vectorized blocks — the same batching the distributed
                   drfs -> rfs.FlatDynamicEngine (streaming bisection tree:
                   insert/seal/extend re-pack lazily, pending events are
                   scanned on device so insert -> query never rebuilds)
+  engine='pallas' same engines, tree phase routed through the Pallas kernels
   engine='numpy'  the host reference path (one eval_atoms pass per window)
   engine='auto'   'jax' for rfs/drfs, 'numpy' otherwise / on jax failure
+
+``executor`` picks the jnp executor flavour over the packed query plan:
+'packed' (gather-lean default), 'cascade' / 'search' (the legacy rfs
+decompositions), 'pallas' (same as engine='pallas'). Every query reuses the
+plan cached for its (epoch, LS) pair — warm queries skip planning entirely —
+and window-side tables cached by the ts tuple (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -41,9 +48,9 @@ from .aggregation import build_event_moments
 from .drfs import DynamicRangeForest
 from .events import Events, group_events_by_edge
 from .kernels_math import get_kernel
-from .lixel_sharing import classify_candidates, dominated_sweep
+from .lixel_sharing import dominated_sweep
 from .network import RoadNetwork, build_lixels
-from .plan import build_atoms, build_edge_geometry
+from .plan import build_edge_geometry
 from .rfs import RangeForest
 from .shortest_path import adjacency_csr, bounded_dijkstra
 from .sps import sps_eval_edge
@@ -68,6 +75,13 @@ class QueryStats:
     # the geometric seal keeps amortized).
     n_pending_scanned: int = 0
     n_partial_scanned: int = 0
+    # device-engine op accounting (the packed-plan hoist invariants,
+    # DESIGN.md §7): time-boundary binary-search problems solved, and
+    # prefix/node moment rows gathered. Searches scale with the NODE count
+    # of the window tables (zero on a warm plan hit), never with atoms;
+    # the packed walk gathers one paired node row per (level, atom).
+    n_rank_searches: int = 0
+    n_moment_gathers: int = 0
 
 
 class TNKDE:
@@ -83,6 +97,7 @@ class TNKDE:
         temporal_kernel: str = "triangular",
         solution: str = "rfs",
         engine: str = "auto",
+        executor: str = "auto",
         lixel_sharing: bool = False,
         cascade: bool = True,
         drfs_depth: int = 8,
@@ -93,12 +108,17 @@ class TNKDE:
     ):
         if solution not in ("sps", "ada", "rfs", "drfs"):
             raise ValueError(f"unknown solution {solution!r}")
-        if engine not in ("auto", "numpy", "jax"):
+        if engine not in ("auto", "numpy", "jax", "pallas"):
             raise ValueError(f"unknown engine {engine!r}")
-        if engine == "jax" and solution not in ("rfs", "drfs"):
+        if engine in ("jax", "pallas") and solution not in ("rfs", "drfs"):
             raise ValueError(
-                "engine='jax' accelerates the forest flush (solution='rfs'/'drfs')"
+                "engine='jax'/'pallas' accelerates the forest flush "
+                "(solution='rfs'/'drfs')"
             )
+        if executor not in ("auto", "packed", "search", "cascade", "pallas"):
+            raise ValueError(f"unknown executor {executor!r}")
+        if solution == "drfs" and executor in ("search", "cascade"):
+            raise ValueError("search/cascade executors are rfs-only")
         if lixel_sharing and solution == "sps":
             raise ValueError("lixel sharing needs an aggregation index (ada/rfs/drfs)")
         t0 = _time.perf_counter()
@@ -125,20 +145,28 @@ class TNKDE:
             self.index = AggregateDistanceIndex(net, self.ee, self.ctx)
         self._phi_dim = phi.shape[-1] if phi.size else self.ctx.K
         # ---- engine resolution: promote the jit'd flat engines -------------
+        # engine='pallas' (or executor='pallas') routes the tree phase of
+        # every flush through the Pallas kernels; the jnp executors are the
+        # packed-plan default (DESIGN.md §7)
         self.engine = "numpy"
         self._fe = None
+        if engine == "pallas":
+            executor = "pallas"
         if solution in ("rfs", "drfs") and engine != "numpy":
             try:
                 from .rfs import FlatDynamicEngine, FlatForestEngine
 
                 self._fe = (
-                    FlatForestEngine(self.index)
+                    FlatForestEngine(self.index, executor=executor)
                     if solution == "rfs"
-                    else FlatDynamicEngine(self.index)
+                    else FlatDynamicEngine(
+                        self.index,
+                        executor="pallas" if executor == "pallas" else "packed",
+                    )
                 )
-                self.engine = "jax"
+                self.engine = "pallas" if executor == "pallas" else "jax"
             except Exception as e:
-                if engine == "jax":
+                if engine in ("jax", "pallas"):
                     raise
                 # engine='auto': fall back to the host path, but loudly — a
                 # silent fallback would mask real engine bugs as slowness
@@ -146,6 +174,9 @@ class TNKDE:
 
                 warnings.warn(f"jax engine unavailable, using numpy path: {e!r}")
                 self._fe = None
+        from .query_plan import PlanCache
+
+        self._plan_cache = PlanCache(2)
         self._adj = adjacency_csr(net)
         # per-edge event extremes for window-independent LS classification
         E = net.n_edges
@@ -164,6 +195,15 @@ class TNKDE:
     @property
     def n_lixels(self) -> int:
         return self.lix.n_lixels
+
+    @property
+    def engine_desc(self) -> str:
+        """Human-readable backend/executor that actually answers queries,
+        e.g. ``'jax/packed'``, ``'pallas/pallas'`` or ``'numpy'`` — what
+        benchmarks and examples print so auto-resolution is never silent."""
+        if self._fe is None:
+            return "numpy"
+        return f"{self.engine}/{self._fe.executor}"
 
     @property
     def epoch(self):
@@ -247,6 +287,30 @@ class TNKDE:
                 if geom.x.shape[0]:
                     yield geom
 
+    def _host_plan(self, snap):
+        """The window-independent packed query plan for the pinned epoch.
+
+        One planning walk (Dijkstra + geometry + atoms + LS classification)
+        per (epoch, LS-mode), LRU-cached — a warm query, and every serve
+        batch pinned to a live epoch, skips planning entirely (DESIGN.md §7).
+        """
+        from .query_plan import build_host_plan
+
+        epoch = snap.epoch if snap is not None else self.epoch
+        key = (epoch, self.ls)
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            cap = (
+                self.atom_flush
+                if self._fe is None
+                # device blocks are capped so the walk state (O(W · M) per
+                # flush) stays within device memory
+                else min(self.atom_flush, 200_000)
+            )
+            plan = build_host_plan(self, key, flush_cap=cap, ls=self.ls)
+            self._plan_cache.put(key, plan)
+        return plan
+
     def query(self, ts: Sequence[float], *, at=None) -> np.ndarray:
         """KDE values for every lixel, for each window center in ts: [W, L].
 
@@ -273,91 +337,59 @@ class TNKDE:
         if snap is None and self.solution == "drfs":
             snap = self.index.snapshot()
         idx = snap if snap is not None else self.index
-        net, lix, ee, ctx = self.net, self.lix, self.ee, self.ctx
-        pend_atoms: List = []
-        pend_count = 0
-        dominated_work: List = []  # (geom, side, candidate cols) triples
-        use_jax = self.engine == "jax" and self._fe is not None
+        ee, ctx = self.ee, self.ctx
         scan0 = dict(getattr(self.index, "counters", {}))  # DRFS work snapshot
-        flush_cap = self.atom_flush
-        if use_jax:
-            # all W windows ride one device pass per flush; the heatmap stays
-            # device-resident until the end of the query. Blocks are capped so
-            # the walk state (O(W · M) per flush) stays within device memory.
-            wb = self._fe.window_batch(ctx, ts)
-            heat = self._fe.new_heatmap(L, W)
-            flush_cap = min(flush_cap, 200_000)
-
-        def flush():
-            nonlocal pend_atoms, pend_count, heat
-            if not pend_atoms:
-                return
-            from .plan import AtomSet
-
-            atoms = AtomSet.concat(pend_atoms)
-            self.stats.n_atoms += atoms.m
-            if use_jax:
-                heat = self._fe.flush(
-                    heat, atoms, wb,
-                    cascade=self.cascade,
-                    h0=self.drfs_h0,
-                    exact_leaf=self.drfs_exact_leaf,
-                    snapshot=snap,
-                )
-                pend_atoms = []
-                pend_count = 0
-                return
-            for w, t in enumerate(ts):
-                vals = idx.eval_atoms(
-                    atoms,
-                    t,
-                    cascade=self.cascade,
-                    h0=self.drfs_h0,
-                    exact_leaf_scan=self.drfs_exact_leaf,
-                ) if self.solution == "drfs" else self.index.eval_atoms(
-                    atoms, t, cascade=self.cascade
-                ) if self.solution == "rfs" else self.index.eval_atoms(atoms, t)
-                np.add.at(F[w], atoms.lixel, vals)
-            pend_atoms = []
-            pend_count = 0
-
-        for geom in self.edge_geometries():
-            l_a = geom.x.shape[0]
-            sl = slice(geom.lix_base, geom.lix_base + l_a)
-            if self.solution == "sps":
+        if self.solution == "sps":
+            for geom in self.edge_geometries():
+                sl = slice(geom.lix_base, geom.lix_base + geom.x.shape[0])
                 for w, t in enumerate(ts):
                     F[w, sl] += sps_eval_edge(geom, ee, ctx, t)
-                continue
-            mask = None
-            if self.ls:
-                dom_c, dom_d, out, normal = classify_candidates(
-                    geom, ctx, self.ev_min_pos, self.ev_max_pos
-                )
-                self.stats.n_pairs_dominated += int(dom_c.sum() + dom_d.sum())
-                self.stats.n_pairs_out += int(out.sum())
-                self.stats.n_pairs_normal += int(normal.sum())
-                mask = normal
-                for side, dmask in ((0, dom_c), (1, dom_d)):
-                    cols = np.nonzero(dmask)[0]
-                    if len(cols):
-                        # defer: one batched dominated_moments sweep per side
-                        dominated_work.append((geom, side, cols))
-            atoms = build_atoms(geom, ctx, mask)
-            if atoms.m:
-                pend_atoms.append(atoms)
-                pend_count += atoms.m
-            if pend_count >= flush_cap:
-                flush()
-        flush()
+            self.stats.query_seconds += _time.perf_counter() - t0
+            return F
+        # ---- packed plan: atoms + dominated work, cached per epoch ---------
+        plan = self._host_plan(snap)
+        self.stats.n_atoms += plan.n_atoms
+        self.stats.n_pairs_dominated += plan.pairs[0]
+        self.stats.n_pairs_out += plan.pairs[1]
+        self.stats.n_pairs_normal += plan.pairs[2]
+        use_jax = self.engine in ("jax", "pallas") and self._fe is not None
+        eng0 = dict(self._fe.counters) if use_jax else {}
         if use_jax:
+            # all W windows ride one device pass per block; the heatmap stays
+            # device-resident until the end of the query
+            wb = self._fe.window_batch(ctx, ts)
+            heat = self._fe.new_heatmap(L, W)
+            heat = self._fe.flush_plan(
+                heat, plan, wb, tuple(ts),
+                h0=self.drfs_h0,
+                exact_leaf=self.drfs_exact_leaf,
+                snapshot=snap,
+            )
             F += self._fe.to_numpy(heat)
+        else:
+            for atoms in plan.blocks:
+                for w, t in enumerate(ts):
+                    vals = idx.eval_atoms(
+                        atoms,
+                        t,
+                        cascade=self.cascade,
+                        h0=self.drfs_h0,
+                        exact_leaf_scan=self.drfs_exact_leaf,
+                    ) if self.solution == "drfs" else self.index.eval_atoms(
+                        atoms, t, cascade=self.cascade
+                    ) if self.solution == "rfs" else self.index.eval_atoms(atoms, t)
+                    np.add.at(F[w], atoms.lixel, vals)
         # ---- Lixel Sharing: dominated edges, batched across the network ----
-        if dominated_work:
-            dominated_sweep(F, idx, ctx, dominated_work, ts)
+        if plan.dominated:
+            dominated_sweep(F, idx, ctx, plan.dominated, ts)
         scan1 = getattr(self.index, "counters", None)
         if scan1 is not None:
             self.stats.n_pending_scanned += scan1["pending"] - scan0.get("pending", 0)
             self.stats.n_partial_scanned += scan1["partial"] - scan0.get("partial", 0)
+        if use_jax:
+            eng1 = self._fe.counters
+            self.stats.n_rank_searches += eng1["rank_searches"] - eng0.get("rank_searches", 0)
+            self.stats.n_moment_gathers += eng1["moment_gathers"] - eng0.get("moment_gathers", 0)
         self.stats.query_seconds += _time.perf_counter() - t0
         if self.index is not None and hasattr(self.index, "index_bytes"):
             self.stats.index_bytes = self.index.index_bytes  # ADA builds lazily

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the perf-critical compute layers:
 
-  tree_query       — the RFS/DRFS merge-tree range query (paper Alg. 2)
+  tree_query       — the static RFS merge-tree range query (paper Alg. 2)
+  dyn_query        — the DRFS packed-plan layouts: leaf-prefix (quantized)
+                     and q_t-folded node-value walk (exact), DESIGN.md §7
   minplus          — blocked (min,+) matmul for batched shortest paths
   flash_attention  — LM-side blocked attention (train/prefill hot spot)
 

@@ -10,11 +10,19 @@ import os
 
 import jax.numpy as jnp
 
+from .dyn_query import dyn_leaf_query_pallas, dyn_node_walk_pallas
 from .flash_attention import flash_attention_pallas
 from .minplus import minplus_matmul_pallas
 from .tree_query import tree_query_pallas
 
-__all__ = ["minplus_matmul", "tree_query", "flash_attention", "INTERPRET"]
+__all__ = [
+    "minplus_matmul",
+    "tree_query",
+    "dyn_leaf_query",
+    "dyn_node_walk",
+    "flash_attention",
+    "INTERPRET",
+]
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
@@ -29,6 +37,20 @@ def tree_query(*args, **kw) -> jnp.ndarray:
     [G, W, Q] window axis; position bounds stay [G, Q] (see tree_query.py)."""
     kw.setdefault("interpret", INTERPRET)
     return tree_query_pallas(*args, **kw)
+
+
+def dyn_leaf_query(*args, **kw) -> jnp.ndarray:
+    """Quantized DRFS tree phase over per-edge leaf-prefix tables (see
+    dyn_query.py): [G, W, Q], halves folded per window center."""
+    kw.setdefault("interpret", INTERPRET)
+    return dyn_leaf_query_pallas(*args, **kw)
+
+
+def dyn_node_walk(*args, **kw) -> jnp.ndarray:
+    """Exact-mode DRFS tree phase over q_t-folded per-edge node values (see
+    dyn_query.py): [G, W, Q], halves folded per window center."""
+    kw.setdefault("interpret", INTERPRET)
+    return dyn_node_walk_pallas(*args, **kw)
 
 
 def flash_attention(q, k, v, **kw) -> jnp.ndarray:

@@ -8,7 +8,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["minplus_matmul", "tree_query", "flash_attention"]
+__all__ = [
+    "minplus_matmul",
+    "tree_query",
+    "dyn_leaf_query",
+    "dyn_node_walk",
+    "flash_attention",
+]
 
 
 def minplus_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -100,6 +106,71 @@ def tree_query(
         return jax.vmap(per_window)(rl_g, rh_g, qv_g)
 
     return jax.vmap(one_group)(pos, cum, r_lo, r_hi, pos_hi, pos_lo1, lo1_right, pos_lo2, q_vec)
+
+
+def dyn_leaf_query(
+    tab: jnp.ndarray,  # [G, (nleaf+1)·2, W·2K] per-edge leaf-prefix tables
+    leaf_lo: jnp.ndarray,  # [G, Q]
+    leaf_hi: jnp.ndarray,  # [G, Q]
+    side: jnp.ndarray,  # [G, Q] in {0, 1}
+    qv_l: jnp.ndarray,  # [G, W, Q, K]
+    qv_r: jnp.ndarray,  # [G, W, Q, K]
+) -> jnp.ndarray:
+    """Quantized DRFS tree phase over the leaf-prefix layout: [G, W, Q].
+
+    Per (edge g, atom q): difference of the two leaf-prefix rows selected by
+    the fully-covered leaf range (side-interleaved rows, halves paired in
+    the last axis, W inside the row), contracted with the per-half query
+    vectors and folded per window center.
+    """
+    G, R, WK = tab.shape
+    W, Q, K = qv_l.shape[1], qv_l.shape[2], qv_l.shape[3]
+    gi = jnp.arange(G)[:, None]
+    idx_hi = leaf_hi.astype(jnp.int32) * 2 + side.astype(jnp.int32)
+    idx_lo = leaf_lo.astype(jnp.int32) * 2 + side.astype(jnp.int32)
+    diff = (tab[gi, idx_hi] - tab[gi, idx_lo]).reshape(G, Q, W, 2 * K)
+    vl = jnp.einsum("gqwk,gwqk->gwq", diff[..., :K], qv_l)
+    vr = jnp.einsum("gqwk,gwqk->gwq", diff[..., K:], qv_r)
+    return vl + vr
+
+
+def dyn_node_walk(
+    nodeval: jnp.ndarray,  # [G, (2^{hq+1}−1)·2, W·2k_s] per-edge node values
+    r_lo: jnp.ndarray,  # [G, Q] fully-covered leaf range lo
+    r_hi: jnp.ndarray,  # [G, Q]
+    side: jnp.ndarray,  # [G, Q]
+    qs: jnp.ndarray,  # [G, Q, k_s]
+    *,
+    hq: int,
+) -> jnp.ndarray:
+    """Exact-mode DRFS tree phase: canonical walk over q_t-folded node
+    values, halves folded per window center: [G, W, Q]."""
+    G, R2, WC = nodeval.shape
+    Q, ks = qs.shape[1], qs.shape[2]
+    W = WC // (2 * ks)
+    gi = jnp.arange(G)[:, None]
+    l = r_lo.astype(jnp.int32)
+    r = r_hi.astype(jnp.int32)
+    side = side.astype(jnp.int32)
+    acc = jnp.zeros((G, Q, WC), nodeval.dtype)
+    for lev in range(hq + 1):
+        off = (1 << (hq - lev)) - 1
+        active = l < r
+        emit_l = active & ((l & 1) == 1)
+        acc = acc + jnp.where(
+            emit_l[..., None], nodeval[gi, (off + l) * 2 + side], 0.0
+        )
+        l = jnp.where(emit_l, l + 1, l)
+        emit_r = (l < r) & ((r & 1) == 1)
+        acc = acc + jnp.where(
+            emit_r[..., None],
+            nodeval[gi, jnp.maximum(off + r - 1, 0) * 2 + side],
+            0.0,
+        )
+        r = jnp.where(emit_r, r - 1, r)
+        l, r = l >> 1, r >> 1
+    acc = acc.reshape(G, Q, W, 2, ks)
+    return jnp.einsum("gqwcs,gqs->gwq", acc, qs)
 
 
 def flash_attention(

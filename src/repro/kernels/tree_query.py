@@ -41,6 +41,7 @@ __all__ = ["tree_query_pallas"]
 
 def _kernel(pos_ref, cum_ref, rlo_ref, rhi_ref, bnd_ref, l1r_ref, qv_ref, o_ref, *, lvl, npad, nw):
     TQ = o_ref.shape[-1]
+    dt = cum_ref.dtype  # f32 on TPU; f64 when the engine runs interpret mode
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, npad), 1)  # [1, NPAD]
     ph = bnd_ref[0, :, 0]
     pl1 = bnd_ref[0, :, 1]
@@ -48,7 +49,7 @@ def _kernel(pos_ref, cum_ref, rlo_ref, rhi_ref, bnd_ref, l1r_ref, qv_ref, o_ref,
     l1r = l1r_ref[0, :] != 0
     ls = [rlo_ref[0, w, :].astype(jnp.int32) for w in range(nw)]  # each [TQ]
     rs = [rhi_ref[0, w, :].astype(jnp.int32) for w in range(nw)]
-    accs = [jnp.zeros((TQ,), jnp.float32) for _ in range(nw)]
+    accs = [jnp.zeros((TQ,), dt) for _ in range(nw)]
 
     for lev in range(lvl):
         p_row = pos_ref[0, lev, :]  # [NPAD]
@@ -84,7 +85,7 @@ def _kernel(pos_ref, cum_ref, rlo_ref, rhi_ref, bnd_ref, l1r_ref, qv_ref, o_ref,
 
                 def pref(i):
                     oh = (iota == (i - 1)[:, None]) & (i > seg_lo)[:, None]
-                    return oh.astype(jnp.float32) @ c_lvl  # [TQ, K] (MXU)
+                    return oh.astype(dt) @ c_lvl  # [TQ, K] (MXU)
 
                 mom = pref(i_hi) - pref(i_lo)
                 return jnp.where(on, jnp.sum(qv * mom, axis=1), 0.0)
@@ -99,7 +100,7 @@ def _kernel(pos_ref, cum_ref, rlo_ref, rhi_ref, bnd_ref, l1r_ref, qv_ref, o_ref,
     o_ref[0, :, :] = jnp.stack(accs)
 
 
-@functools.partial(jax.jit, static_argnames=("tq", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tq", "interpret", "precise"))
 def tree_query_pallas(
     pos: jnp.ndarray,  # [G, LVL, NPAD] f32 (+inf padded)
     cum: jnp.ndarray,  # [G, LVL, NPAD, K] f32
@@ -113,11 +114,18 @@ def tree_query_pallas(
     *,
     tq: int = 128,
     interpret: bool = True,
+    precise: bool = False,
 ) -> jnp.ndarray:
-    """Window-batched merge-tree range query: [G, W, Q]."""
+    """Window-batched merge-tree range query: [G, W, Q].
+
+    ``precise=True`` keeps the input dtype (float64 interpret mode — the
+    engine executor path, bit-comparable to the NumPy oracle); the default
+    casts to float32, the TPU-compiled layout.
+    """
     G, LVL, NPAD = pos.shape
     K = cum.shape[-1]
     W, Q = r_lo.shape[1], r_lo.shape[2]
+    ft = pos.dtype if precise else jnp.float32
     tq = min(tq, Q) or 1
     qp = -(-Q // tq) * tq
 
@@ -130,7 +138,7 @@ def tree_query_pallas(
         return out.at[..., :Q, :].set(x)
 
     bounds = jnp.stack(
-        [pos_hi.astype(jnp.float32), pos_lo1.astype(jnp.float32), pos_lo2.astype(jnp.float32)],
+        [pos_hi.astype(ft), pos_lo1.astype(ft), pos_lo2.astype(ft)],
         axis=-1,
     )
     out = pl.pallas_call(
@@ -146,15 +154,15 @@ def tree_query_pallas(
             pl.BlockSpec((1, W, tq, K), lambda g, q: (g, 0, q, 0)),
         ],
         out_specs=pl.BlockSpec((1, W, tq), lambda g, q: (g, 0, q)),
-        out_shape=jax.ShapeDtypeStruct((G, W, qp), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((G, W, qp), ft),
         interpret=interpret,
     )(
-        pos.astype(jnp.float32),
-        cum.astype(jnp.float32),
+        pos.astype(ft),
+        cum.astype(ft),
         padq(r_lo.astype(jnp.int32)),
         padq(r_hi.astype(jnp.int32)),
         padq_t(bounds),
         padq(lo1_right.astype(jnp.int32)),
-        padq_t(q_vec.astype(jnp.float32)),
+        padq_t(q_vec.astype(ft)),
     )
     return out[:, :, :Q]

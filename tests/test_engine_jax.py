@@ -110,9 +110,72 @@ def test_drfs_jax_engine_exact_all_kernels(world, ks, kt):
     assert np.abs(got - ref).max() <= 1e-12 * max(np.abs(ref).max(), 1.0)
 
 
+# ---------------------------------------------------------------------------
+# Executor equivalence matrix (ISSUE 4 satellite): every kernels_math family
+# × the rfs jnp executors {packed, search, cascade} and drfs modes
+# {quantized, exact_leaf} × {jnp, pallas-interpret}, ≤ 1e-12 vs the NumPy
+# oracle. Pallas rows run interpret mode step-by-step → scheduled slow tier.
+MATRIX_MODES = ["packed", "search", "cascade", "quantized", "exact_leaf"]
+MATRIX_TS = [3 * 86400.0, 6 * 86400.0]
+MATRIX_KW = dict(g=60.0, b_s=600.0, b_t=2.5 * 86400.0)
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    net = make_network(30, 50, seed=23)
+    ev = make_events(net, 300, seed=24, span_days=12)
+    return net, ev
+
+
+_MATRIX_REF = {}
+
+
+def _matrix_reference(small_world, ks, kt, mode):
+    sol = "drfs" if mode in ("quantized", "exact_leaf") else "rfs"
+    key = (ks, kt, sol, mode == "exact_leaf")
+    if key not in _MATRIX_REF:
+        net, ev = small_world
+        kw = dict(MATRIX_KW)
+        if sol == "drfs":
+            kw.update(drfs_depth=5, drfs_exact_leaf=(mode == "exact_leaf"))
+        _MATRIX_REF[key] = TNKDE(
+            net, ev, solution=sol, engine="numpy",
+            spatial_kernel=ks, temporal_kernel=kt, **kw
+        ).query(MATRIX_TS)
+    return _MATRIX_REF[key]
+
+
+@pytest.mark.parametrize("backend", [
+    "jnp", pytest.param("pallas", marks=pytest.mark.slow)
+])
+@pytest.mark.parametrize("mode", MATRIX_MODES)
+@pytest.mark.parametrize("ks,kt", KERNEL_FAMILIES)
+def test_executor_equivalence_matrix(small_world, ks, kt, mode, backend):
+    if backend == "pallas" and mode in ("search", "cascade"):
+        pytest.skip("pallas has one rfs layout; covered by the packed row")
+    net, ev = small_world
+    ref = _matrix_reference(small_world, ks, kt, mode)
+    sol = "drfs" if mode in ("quantized", "exact_leaf") else "rfs"
+    kw = dict(MATRIX_KW)
+    if sol == "drfs":
+        kw.update(drfs_depth=5, drfs_exact_leaf=(mode == "exact_leaf"))
+        executor = "pallas" if backend == "pallas" else "auto"
+    else:
+        executor = "pallas" if backend == "pallas" else mode
+    m = TNKDE(
+        net, ev, solution=sol, engine="pallas" if backend == "pallas" else "jax",
+        executor=executor, spatial_kernel=ks, temporal_kernel=kt, **kw
+    )
+    got = m.query(MATRIX_TS)
+    assert np.abs(got - ref).max() <= 1e-12 * max(np.abs(ref).max(), 1.0), (
+        m.engine_desc, np.abs(got - ref).max()
+    )
+
+
 def test_engine_auto_promotes_rfs(world):
     net, ev = world
-    assert TNKDE(net, ev, solution="rfs", **KW).engine == "jax"
+    m_rfs = TNKDE(net, ev, solution="rfs", **KW)
+    assert (m_rfs.engine, m_rfs.engine_desc) == ("jax", "jax/packed")
     assert TNKDE(net, ev, solution="drfs", **KW).engine == "jax"
     assert TNKDE(net, ev, solution="ada", **KW).engine == "numpy"
 

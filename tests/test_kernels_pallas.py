@@ -100,6 +100,51 @@ def test_tree_query_matches_bruteforce(n_events, K, Q, W):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
 
 
+# ------------------------------------------------------- DRFS packed layouts
+@pytest.mark.parametrize("nleaf,K,Q,W", [(4, 2, 7, 1), (8, 4, 33, 3), (16, 3, 65, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_dyn_leaf_query_matches_ref(nleaf, K, Q, W, dtype):
+    """Leaf-prefix layout kernel (quantized DRFS tree phase) vs oracle."""
+    rng = np.random.default_rng(nleaf * 100 + Q)
+    G = 3
+    R = (nleaf + 1) * 2
+    tab = np.cumsum(rng.normal(size=(G, R, W * 2 * K)), axis=1)  # prefix-like
+    leaf_lo = rng.integers(0, nleaf + 1, (G, Q))
+    leaf_hi = np.maximum(rng.integers(0, nleaf + 1, (G, Q)), leaf_lo)
+    side = rng.integers(0, 2, (G, Q))
+    qv_l = rng.normal(size=(G, W, Q, K))
+    qv_r = rng.normal(size=(G, W, Q, K))
+    with jax.experimental.enable_x64(dtype == jnp.float64):
+        args = [jnp.asarray(x, dtype) if np.issubdtype(np.asarray(x).dtype, np.floating)
+                else jnp.asarray(x) for x in (tab, leaf_lo, leaf_hi, side, qv_l, qv_r)]
+        got = np.asarray(ops.dyn_leaf_query(*args, tq=32))
+        want = np.asarray(ref.dyn_leaf_query(*args))
+    tol = 1e-12 if dtype == jnp.float64 else 1e-4
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * np.abs(want).max())
+
+
+@pytest.mark.parametrize("hq,ks,Q,W", [(2, 2, 7, 1), (3, 3, 33, 2), (4, 2, 65, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_dyn_node_walk_matches_ref(hq, ks, Q, W, dtype):
+    """Node-value layout kernel (exact DRFS tree phase) vs oracle."""
+    rng = np.random.default_rng(hq * 100 + Q)
+    G = 3
+    R2 = ((1 << (hq + 1)) - 1) * 2
+    nv = rng.normal(size=(G, R2, W * 2 * ks))
+    nleaf = 1 << hq
+    r_lo = rng.integers(0, nleaf + 1, (G, Q))
+    r_hi = np.maximum(rng.integers(0, nleaf + 1, (G, Q)), r_lo)
+    side = rng.integers(0, 2, (G, Q))
+    qs = rng.normal(size=(G, Q, ks))
+    with jax.experimental.enable_x64(dtype == jnp.float64):
+        args = [jnp.asarray(x, dtype) if np.issubdtype(np.asarray(x).dtype, np.floating)
+                else jnp.asarray(x) for x in (nv, r_lo, r_hi, side, qs)]
+        got = np.asarray(ops.dyn_node_walk(*args, hq=hq, tq=32))
+        want = np.asarray(ref.dyn_node_walk(*args, hq=hq))
+    tol = 1e-12 if dtype == jnp.float64 else 1e-4
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * np.abs(want).max())
+
+
 # ----------------------------------------------------------- flash attention
 @pytest.mark.parametrize("b,h,hkv,s,d", [(1, 2, 2, 64, 16), (2, 4, 2, 128, 32), (1, 8, 1, 256, 64)])
 @pytest.mark.parametrize("causal", [True, False])

@@ -1,0 +1,142 @@
+"""Packed query plan: hoist invariants, op counters, caches, accounting.
+
+The invariants ISSUE 4 pins (DESIGN.md §7):
+  * time-boundary searches scale with the NODE count of the window tables —
+    never with atoms × windows — and a warm (plan-hit) query pays ZERO;
+  * the packed walk gathers one paired node row per (level, atom): strictly
+    fewer moment rows than the legacy cascade executor moves;
+  * plans are cached per (epoch, LS) and window tables per ts tuple, so
+    steady state neither re-plans nor recompiles;
+  * ``device_bytes`` counts index tables AND cached packed plans through the
+    one shared helper.
+"""
+import numpy as np
+import pytest
+
+from repro.core import TNKDE
+from repro.data.spatial import make_events, make_network
+
+KW = dict(b_s=600.0, b_t=2.5 * 86400.0)
+TS = [3 * 86400.0, 6 * 86400.0]
+
+
+@pytest.fixture(scope="module")
+def world():
+    net = make_network(30, 50, seed=31)
+    ev = make_events(net, 400, seed=32, span_days=12)
+    return net, ev
+
+
+def _query_deltas(m, ts):
+    s0 = (m.stats.n_rank_searches, m.stats.n_moment_gathers)
+    m.query(ts)
+    return (m.stats.n_rank_searches - s0[0], m.stats.n_moment_gathers - s0[1])
+
+
+def test_rank_searches_scale_with_nodes_not_atoms(world):
+    """Same index, 4x the lixel density -> identical search count."""
+    net, ev = world
+    coarse = TNKDE(net, ev, g=80.0, solution="rfs", engine="jax", **KW)
+    fine = TNKDE(net, ev, g=20.0, solution="rfs", engine="jax", **KW)
+    s_coarse = _query_deltas(coarse, TS)[0]
+    s_fine = _query_deltas(fine, TS)[0]
+    assert fine.stats.n_atoms > 2 * coarse.stats.n_atoms  # the load differs
+    assert s_fine == s_coarse > 0  # ... the time-search work does not
+    # and the count is exactly 3 boundaries x W x node count
+    nn = fine._fe._get_packed_forest()["n_nodes"]
+    assert s_fine == 3 * len(TS) * nn
+
+
+def test_warm_query_pays_zero_searches(world):
+    net, ev = world
+    m = TNKDE(net, ev, g=40.0, solution="rfs", engine="jax", **KW)
+    cold = _query_deltas(m, TS)
+    warm = _query_deltas(m, TS)
+    assert cold[0] > 0 and warm[0] == 0  # plan hit: no searches at all
+    assert warm[1] > 0  # the walk still gathers node rows
+    # one paired gather per (level, atom): 2 rows x levels x atoms, summed
+    # over level classes -> bounded by 2 * max_levels * atoms per query
+    atoms = m.stats.n_atoms // 2  # two queries accumulated so far
+    assert warm[1] <= 2 * m._fe.max_levels * atoms
+
+
+def test_packed_gathers_strictly_fewer_than_cascade(world):
+    net, ev = world
+    packed = TNKDE(net, ev, g=40.0, solution="rfs", engine="jax",
+                   executor="packed", **KW)
+    cascade = TNKDE(net, ev, g=40.0, solution="rfs", engine="jax",
+                    executor="cascade", **KW)
+    g_packed = _query_deltas(packed, TS)[1]
+    g_cascade = _query_deltas(cascade, TS)[1]
+    assert 0 < g_packed < g_cascade
+
+
+def test_drfs_searches_atom_independent(world):
+    net, ev = world
+    coarse = TNKDE(net, ev, g=80.0, solution="drfs", engine="jax",
+                   drfs_depth=5, **KW)
+    fine = TNKDE(net, ev, g=20.0, solution="drfs", engine="jax",
+                 drfs_depth=5, **KW)
+    s_coarse = _query_deltas(coarse, TS)[0]
+    s_fine = _query_deltas(fine, TS)[0]
+    assert s_fine == s_coarse == 3 * len(TS) * net.n_edges * (1 << 5)
+
+
+def test_plan_cache_reuse_and_epoch_invalidation(world):
+    """Warm queries reuse the plan bitwise; inserts move the epoch key."""
+    from repro.core.events import Events
+
+    net, ev = world
+    # exact mode: a streamed index answers identically to a fresh build
+    # (quantized mode legitimately differs — pending events scan exactly)
+    m = TNKDE(net, ev, g=40.0, solution="drfs", engine="jax", drfs_depth=5,
+              drfs_exact_leaf=True, **KW)
+    a = m.query(TS)
+    key0 = (m.epoch, m.ls)
+    assert m._plan_cache.get(key0) is not None
+    b = m.query(TS)
+    np.testing.assert_array_equal(a, b)
+    # an insert bumps the epoch: the old plan no longer serves the live head
+    extra = Events(
+        np.array([0, 1], np.int64),
+        np.array([1.0, 2.0]),
+        np.array([4 * 86400.0, 4.1 * 86400.0]),
+    )
+    m.insert(extra)
+    assert (m.epoch, m.ls) != key0
+    c = m.query(TS)
+    assert not np.array_equal(a, c)  # the new events are visible
+    ref = TNKDE(net, Events(
+        np.concatenate([ev.edge_id, extra.edge_id]),
+        np.concatenate([ev.pos, extra.pos]),
+        np.concatenate([ev.time, extra.time]),
+    ), g=40.0, solution="drfs", engine="numpy", drfs_depth=5,
+        drfs_exact_leaf=True, **KW).query(TS)
+    np.testing.assert_allclose(c, ref, rtol=1e-9, atol=1e-12 * max(ref.max(), 1.0))
+
+
+def test_device_bytes_counts_packed_plans(world):
+    net, ev = world
+    m = TNKDE(net, ev, g=40.0, solution="rfs", engine="jax", **KW)
+    before = m._fe.device_bytes
+    assert before > 0  # index tables
+    m.query(TS)
+    after = m._fe.device_bytes
+    assert after > before  # + window tables + atom packs (the cached plans)
+    # the dynamic engine shares the same helper and property contract
+    d = TNKDE(net, ev, g=40.0, solution="drfs", engine="jax", drfs_depth=5, **KW)
+    b0 = d._fe.device_bytes
+    d.query(TS)
+    assert d._fe.device_bytes > b0 > 0
+
+
+def test_steady_state_zero_recompiles(world):
+    from repro.core.rfs import jit_entry_count
+
+    net, ev = world
+    m = TNKDE(net, ev, g=40.0, solution="rfs", engine="jax", **KW)
+    m.query(TS)
+    n0 = jit_entry_count()
+    for _ in range(3):
+        m.query(TS)
+    assert jit_entry_count() == n0  # warm queries never recompile
