@@ -1,0 +1,122 @@
+"""Sharded packed-engine benchmark — BENCH_dist.json.
+
+Runs a 2-shard host-platform rung (XLA_FLAGS device-count override in a
+subprocess so the parent's jax stays single-device) against the single-host
+packed engine on the same world:
+
+  * ``shard2_speedup`` — warm W-window query, sharded / single-host. On one
+    physical CPU two host "devices" time-slice the same cores, so this
+    measures collective overhead, not a speedup — it is tracked for
+    trajectory (a regression means the sharded path got heavier), not
+    gated on an absolute floor.
+  * ``bytes_per_shard_frac`` — per-shard device bytes / single-device
+    bytes. THE load-bearing number: the 1/devices memory-scaling claim of
+    DESIGN.md §3, measured (≈0.5 + padding slack at 2 shards; the CI gate
+    fails above 0.65).
+
+Both modes run: static RFS and streaming DRFS (quantized), warm.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_WORKER = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import sys, json, time
+    sys.path.insert(0, "src")
+    import numpy as np
+    from repro.core import TNKDE
+    from repro.compat import host_mesh
+    from repro.data.spatial import make_dataset
+
+    scale = float(sys.argv[1])
+    n_windows = int(sys.argv[2])
+    net, ev, meta = make_dataset("berkeley", scale=scale, seed=0)
+    span = float(ev.time.max() - ev.time.min())
+    t0 = float(ev.time.min())
+    ts = [t0 + (i + 1) * span / (n_windows + 1) for i in range(n_windows)]
+    b_t = span / 4
+    mesh = host_mesh(2)
+    out = {"scale": scale, "W": n_windows, "N": int(ev.n), "rungs": []}
+
+    def timed(m):
+        m.query(ts)  # warm: compile + populate the plan/table caches
+        best = float("inf")
+        for _ in range(3):
+            t = time.perf_counter()
+            m.query(ts)
+            best = min(best, time.perf_counter() - t)
+        return best
+
+    for mode, kw in (
+        ("rfs", dict(solution="rfs")),
+        ("drfs_quantized", dict(solution="drfs", drfs_depth=6)),
+    ):
+        base = dict(g=50.0, b_s=400.0, b_t=b_t, **kw)
+        single = TNKDE(net, ev, engine="jax", **base)
+        t_single = timed(single)
+        sharded = TNKDE(net, ev, mesh=mesh, **base)
+        t_shard = timed(sharded)
+        out["rungs"].append(dict(
+            mode=mode,
+            engine=sharded.engine_desc,
+            t_single=round(t_single, 4),
+            t_shard2=round(t_shard, 4),
+            shard2_speedup=round(t_single / max(t_shard, 1e-9), 3),
+            bytes_single=int(single._fe.bytes_per_shard),
+            bytes_per_shard=int(sharded.stats.bytes_per_shard),
+            bytes_per_shard_frac=round(
+                sharded.stats.bytes_per_shard / max(single._fe.bytes_per_shard, 1), 3
+            ),
+        ))
+    print(json.dumps(out))
+    """
+)
+
+
+def run_dist_bench(scale: float = 0.04, n_windows: int = 5,
+                   out_json: str = "BENCH_dist.json") -> dict:
+    worker = os.path.join(os.path.dirname(os.path.abspath(__file__)), "_dist_worker.py")
+    with open(worker, "w") as f:
+        f.write(_WORKER)
+    try:
+        res = subprocess.run(
+            [sys.executable, worker, str(scale), str(n_windows)],
+            capture_output=True, text=True, timeout=1800,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        if res.returncode != 0:
+            raise RuntimeError(f"dist bench worker failed:\n{res.stderr[-3000:]}")
+        rec = json.loads(res.stdout.strip().splitlines()[-1])
+    finally:
+        os.unlink(worker)
+    for r in rec["rungs"]:
+        print(
+            f"dist/{r['mode']},0.0,engine={r['engine']};"
+            f"shard2_speedup={r['shard2_speedup']};"
+            f"bytes_frac={r['bytes_per_shard_frac']}"
+        )
+        # the measured memory-scaling claim: one slab must be roughly half
+        # of the single-device index (padding + replicated window batches
+        # allow slack, but 2 shards must never approach a full copy each)
+        assert r["bytes_per_shard_frac"] <= 0.75, r
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--json", default="BENCH_dist.json")
+    args = ap.parse_args()
+    scale = args.scale if args.scale is not None else (0.02 if args.smoke else 0.04)
+    run_dist_bench(scale=scale, out_json=args.json)

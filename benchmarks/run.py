@@ -36,11 +36,18 @@ def _emit_serve(scale: float) -> None:
     run_serve_bench(scale=scale, out_json="BENCH_serve.json")
 
 
+def _emit_dist(scale: float) -> None:
+    from benchmarks.perf_dist import run_dist_bench
+
+    run_dist_bench(scale=scale, out_json="BENCH_dist.json")
+
+
 #: every BENCH_*.json producer: (filename, callable(scale))
 EMITTERS = [
     ("BENCH_kde.json", _emit_kde),
     ("BENCH_stream.json", _emit_stream),
     ("BENCH_serve.json", _emit_serve),
+    ("BENCH_dist.json", _emit_dist),
 ]
 
 
@@ -63,6 +70,16 @@ def _bench_metrics(name: str, rec: dict):
     elif name == "BENCH_serve.json":
         if rec.get("speedup_vs_sequential"):
             out["speedup_vs_sequential"] = float(rec["speedup_vs_sequential"])
+    elif name == "BENCH_dist.json":
+        for r in rec.get("rungs", []):
+            if not isinstance(r, dict):
+                continue
+            if r.get("shard2_speedup"):
+                out[f"shard2_speedup_{r['mode']}"] = float(r["shard2_speedup"])
+            if r.get("bytes_per_shard_frac"):
+                out[f"bytes_per_shard_frac_{r['mode']}"] = float(
+                    r["bytes_per_shard_frac"]
+                )
     return scale, out
 
 
@@ -129,10 +146,27 @@ def perf_gate(floor_ratio: float = 0.75, floor_abs: float = 1.0) -> int:
     failures = []
     for r in summary["rows"]:
         ratio = r.get("ratio_vs_baseline")
-        if ratio is not None and ratio < floor_ratio:
+        # bytes_per_shard_frac is LOWER-is-better: the generic ratio floor
+        # would fail CI on a memory-scaling improvement, so it is gated only
+        # by the direction-correct absolute cap below
+        lower_is_better = r["metric"].startswith("bytes_per_shard_frac")
+        if ratio is not None and ratio < floor_ratio and not lower_is_better:
             failures.append(f"{r['bench']}:{r['metric']} ratio {ratio} < {floor_ratio}")
-        if "speedup" in r["metric"] and r["current"] < floor_abs:
+        # shard2_speedup is exempt from the absolute floor: two host devices
+        # on one physical CPU time-slice the same cores, so it tracks
+        # collective overhead (ratio-gated above), not a real speedup. The
+        # sharded path's absolute gate is the MEMORY claim instead.
+        if (
+            "speedup" in r["metric"]
+            and not r["metric"].startswith("shard")
+            and r["current"] < floor_abs
+        ):
             failures.append(f"{r['bench']}:{r['metric']} {r['current']} < {floor_abs}x")
+        if r["metric"].startswith("bytes_per_shard_frac") and r["current"] > 0.65:
+            failures.append(
+                f"{r['bench']}:{r['metric']} {r['current']} > 0.65 — per-shard "
+                f"index bytes no longer scale ~1/devices"
+            )
     if failures:
         print("PERF GATE FAILED:")
         for f_ in failures:
@@ -191,6 +225,7 @@ def main(argv=None) -> None:
     )
     ap.add_argument("--kde-scale", type=float, default=0.08)
     ap.add_argument("--serve-scale", type=float, default=0.04)
+    ap.add_argument("--dist-scale", type=float, default=0.04)
     ap.add_argument(
         "--gate",
         action="store_true",
@@ -213,7 +248,10 @@ def main(argv=None) -> None:
     if not args.no_json and not args.only:
         for name, emit in EMITTERS:
             print(f"# -- emit {name} --", flush=True)
-            scale = args.serve_scale if name == "BENCH_serve.json" else args.kde_scale
+            scale = {
+                "BENCH_serve.json": args.serve_scale,
+                "BENCH_dist.json": args.dist_scale,
+            }.get(name, args.kde_scale)
             try:
                 emit(scale)
             except Exception as e:  # one broken emitter must not hide the rest

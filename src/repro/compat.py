@@ -13,7 +13,7 @@ from typing import Iterable, Optional, Sequence
 
 import jax
 
-__all__ = ["make_mesh", "shard_map"]
+__all__ = ["make_mesh", "host_mesh", "shard_map"]
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
@@ -25,6 +25,30 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
         except TypeError:  # make_mesh predates axis_types
             pass
     return jax.make_mesh(shape, axes)
+
+
+def host_mesh(n_shards: int, axes: Sequence[str] = ("data",)):
+    """A mesh over the FIRST ``n_shards`` local devices.
+
+    ``jax.make_mesh`` insists on using every visible device; the sharded-KDE
+    tests force 8 host devices and then want 2- and 4-shard meshes in the
+    same process, so this builds a plain Mesh over a device prefix instead.
+    Multi-axis shapes fold the prefix row-major (axes[0] outermost).
+    """
+    import numpy as np
+
+    if isinstance(n_shards, int):
+        shape = (n_shards,)
+    else:
+        shape = tuple(n_shards)
+    total = 1
+    for s in shape:
+        total *= int(s)
+    devs = jax.devices()
+    if total > len(devs):
+        raise ValueError(f"host_mesh needs {total} devices, have {len(devs)}")
+    arr = np.array(devs[:total]).reshape(shape)
+    return jax.sharding.Mesh(arr, tuple(axes))
 
 
 def shard_map(

@@ -1,86 +1,79 @@
-"""Distributed TN-KDE: the paper's estimator as a shard_map workload.
+"""Sharded TN-KDE: the packed-plan executor with sharding as a first axis.
 
-Distribution scheme (DESIGN.md §3):
+Distribution scheme (DESIGN.md §3): the *index* — not the query — dominates
+memory at fleet scale, so the packed position-major tables are slabbed
+across the mesh's data axes and the canonical executors run unchanged under
+``shard_map``:
 
-  * the event edges — and their merge-tree tables — are **sharded** across the
-    mesh's data axes: each device owns a contiguous slab of (rebased) flat
-    tables. Index memory scales 1/devices, the property that matters at
-    fleet scale (the NY dataset's forest is ~10 GB; 256 devices make it 40MB).
-  * edges are assigned to shards by greedy balanced packing over n_e log n_e
-    work (descending first-fit) — the KDE analogue of straggler mitigation:
-    no device owns all the heavy edges.
-  * query atoms are routed to the shard that owns their edge, padded to the
-    per-shard max, and evaluated with the *same* jit'd window-batched flat
-    engine the single-host path uses (``jax_engine.eval_atoms_flat``): one
-    shard_map call answers every (window, half) at once, and the per-device
-    partial [L, W] heatmaps are ``psum``-reduced over the data axes.
+  * edges are assigned to shards by greedy balanced packing over
+    n_e log n_e work (:func:`assign_edges`); each shard holds a **rebased,
+    compacted slab** of the `jax_engine.PackedForest` layout — per-shard
+    tables address shard-LOCAL edge slots, so every table (values *and*
+    metadata) scales ~1/devices;
+  * query atoms come from the same cached host plans every executor uses
+    (`query_plan.py`); a plan block is routed once to the shard owning its
+    edge (`query_plan.route_atoms_by_shard`) with local edge ids, and the
+    window-independent root rank interval of every atom is resolved per
+    shard and cached in the pack — exactly the single-host plan contract;
+  * the per-(window batch) node tables (`packed_node_tables`), the canonical
+    walk (`packed_walk` via `eval_atoms_packed`) and the DRFS table builders
+    (`dyn_node_tables` / `dyn_window_tables` / `eval_atoms_dyn`) run
+    **verbatim** inside the shard_map bodies — sharding adds only the slab
+    unstacking and one ``psum`` of the per-shard [L, W] heatmap delta, so
+    per-atom values are bitwise identical to the single-host packed executor
+    and the full heatmaps agree to summation-order noise (≤1e-12, pinned by
+    tests/test_distributed_kde.py);
+  * DRFS snapshots slab the same way per (revision, depth) epoch — sealed
+    level CSRs, leaf/node tables and the pending-event CSR are all
+    shard-local, so streaming insert → seal → query works sharded with the
+    same MVCC contract as `rfs.FlatDynamicEngine`.
 
-Atoms come from ``TNKDE.edge_geometries()`` — the identical planning loop the
-host query runs — so the sharded and single-host paths share both the
-decomposition logic and the engine; only atom routing and the psum differ.
-
-``DistributedTNKDE`` is mesh-agnostic: tests run it on 8 host devices;
-launch/dryrun.py lowers the same program for the production 16x16 and
-2x16x16 meshes.
+The engines are mesh-agnostic: tests run them on 2/4/8 forced host devices;
+``launch/dryrun.py --kde`` lowers the same programs for the production
+16x16 and 2x16x16 meshes. Entry point: ``TNKDE(..., mesh=...)``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import Sequence
+from collections import OrderedDict
+from typing import Sequence, Tuple
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from .aggregation import N_COMBOS, next_pow2
+from .query_plan import PlanCache, route_atoms_by_shard
+from .rfs import _DeviceEngine, _device_nbytes, _size_class
 
-from repro.compat import shard_map
-
-from .aggregation import N_COMBOS
-from .jax_engine import (
-    FlatAtoms,
-    FlatForest,
-    WindowBatch,
-    eval_atoms_flat,
-    rank_boundaries,
-)
-from .plan import AtomSet, build_atoms
-from .rfs import RangeForest, make_window_batch
-
-__all__ = ["ShardedForest", "DistributedTNKDE", "assign_edges", "build_sharded", "pack_atoms"]
-
-
-@dataclasses.dataclass
-class ShardedForest:
-    """Stacked per-shard flat tables: leading axis = shard (one per device)."""
-
-    pos_flat: np.ndarray  # [S, Tmax]
-    cum_flat: np.ndarray  # [S, Tmax, 4, K]
-    edge_base: np.ndarray  # [S, E]  (rebased; 0 for edges not in shard)
-    n_pad: np.ndarray  # [S, E]   (0 for edges not in shard)
-    n_lev: np.ndarray  # [S, E]
-    time_flat: np.ndarray  # [S, Nmax] (+inf pad)
-    time_ptr: np.ndarray  # [S, E+1]
-    bridge: np.ndarray  # [S, Tmax] i32 (zeros when the forest has no bridges)
-    shard_of_edge: np.ndarray  # [E]
-    max_levels: int
-    search_steps: int
-    n_shards: int
-
-    @property
-    def bytes_per_shard(self) -> int:
-        return (
-            self.pos_flat.nbytes + self.cum_flat.nbytes + self.time_flat.nbytes
-        ) // max(self.n_shards, 1)
+__all__ = [
+    "assign_edges",
+    "ShardedPackedForest",
+    "build_sharded_packed",
+    "ShardedForestEngine",
+    "ShardedDynamicEngine",
+]
 
 
 def assign_edges(counts: np.ndarray, n_shards: int) -> np.ndarray:
-    """Greedy balanced assignment by n log n work, descending first-fit."""
+    """Greedy balanced edge→shard assignment by n log n work: [E] i64.
+
+    Descending first-fit over the per-edge event counts. Degenerate cases
+    yield valid (possibly empty) slabs: with more shards than edges some
+    shards simply own nothing, and zero-event edges are given unit weight so
+    they spread across shards instead of piling onto shard 0 (they carry no
+    event tables, but they do occupy a local edge slot — round-robining them
+    keeps the per-shard metadata width at ~E/S instead of E).
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    n_shards = max(int(n_shards), 1)
+    out = np.zeros(len(counts), np.int64)
+    if len(counts) == 0:
+        return out
     w = counts * np.maximum(np.log2(np.maximum(counts, 2)), 1.0)
+    w = np.where(counts > 0, w, 1.0)
     order = np.argsort(-w, kind="stable")
     load = np.zeros(n_shards)
-    out = np.zeros(len(counts), np.int64)
     for e in order:
         s = int(np.argmin(load))
         out[e] = s
@@ -88,180 +81,737 @@ def assign_edges(counts: np.ndarray, n_shards: int) -> np.ndarray:
     return out
 
 
-def build_sharded(rf: RangeForest, n_shards: int) -> ShardedForest:
-    """Repack a built RangeForest's flat tables into per-shard rebased slabs."""
+def _owned_lists(shard_of: np.ndarray, n_shards: int):
+    """(owned edge-id list per shard, El = padded local edge capacity,
+    edge_slot [E] global→local map). Owned lists are ascending, so local
+    slot order matches global edge order within a shard."""
+    owned = [np.nonzero(shard_of == s)[0] for s in range(n_shards)]
+    El = max(max((len(o) for o in owned), default=0), 1)
+    edge_slot = np.zeros(len(shard_of), np.int64)
+    for o in owned:
+        edge_slot[o] = np.arange(len(o))
+    return owned, El, edge_slot
+
+
+@dataclasses.dataclass
+class ShardedPackedForest:
+    """Stacked per-shard slabs of the packed position-major layout.
+
+    Every array carries a leading shard axis; per-shard contents are the
+    `jax_engine.PackedForest` tables of that shard's edges, rebased to the
+    slab and addressed by shard-LOCAL edge slots (``edge_slot`` maps global
+    edge ids; atoms are routed with local ids, so non-owned edges simply do
+    not exist on a shard). Slabs are padded to the max across shards —
+    shard_map requires uniform shapes — with +inf position/time pads and
+    node-start slot 0 for the padding nodes (their folded values are never
+    gathered by the walk).
+    """
+
+    pm_pos: np.ndarray  # [S, Pmax]
+    pos_base: np.ndarray  # [S, El]
+    pm_time: np.ndarray  # [S, Tmax]
+    pm_cum: np.ndarray  # [S, Tmax, 4, K]
+    edge_base: np.ndarray  # [S, El]
+    n_pad: np.ndarray  # [S, El]
+    n_lev: np.ndarray  # [S, El]
+    node_base_lvl: np.ndarray  # [S, Lmax, El] walk level → local node base
+    node_starts: Tuple[np.ndarray, ...]  # per level: [S, NLmax_lev] run offsets
+    shard_of_edge: np.ndarray  # [E]
+    edge_slot: np.ndarray  # [E] global edge → local slot on its shard
+    events_per_shard: np.ndarray  # [S]
+    max_levels: int
+    search_steps: int
+    steps_per_level: tuple
+    n_shards: int
+    n_nodes: int  # padded per-shard node count (uniform)
+    # per-shard byte accounting lives on the engines (_ShardedBase.
+    # bytes_per_shard over the actual device arrays) — one accounting path
+
+
+def build_sharded_packed(rf, n_shards: int) -> ShardedPackedForest:
+    """Slab a built RangeForest's packed tables into per-shard rebased slabs.
+
+    Builds the position-major host tables once (`rfs.build_packed_host_tables`
+    — the identical transpose the single-host engine uploads) and relocates
+    each edge's blocks into its shard's slab; node ids are re-assigned
+    level-major within the shard with per-level blocks padded to the max
+    across shards, so `packed_node_tables`'s concatenated nodeval layout and
+    ``node_base_lvl`` agree on every shard.
+    """
+    from .rfs import build_packed_host_tables
+
+    host = build_packed_host_tables(rf)
     E = rf.net.n_edges
     counts = np.diff(rf.ee.ptr)
     shard_of = assign_edges(counts, n_shards)
+    S = max(int(n_shards), 1)
+    owned, El, edge_slot = _owned_lists(shard_of, S)
+    n_pad_g = np.asarray(host["n_pad"], np.int64)
+    n_lev_g = np.asarray(host["n_lev"], np.int64)
     K = rf.ctx.K
-    blocks = (rf.n_pad * rf.n_levels).astype(np.int64)
-    t_sizes = np.bincount(shard_of, weights=blocks.astype(np.float64), minlength=n_shards).astype(np.int64)
-    n_sizes = np.bincount(shard_of, weights=counts.astype(np.float64), minlength=n_shards).astype(np.int64)
-    tmax = max(int(t_sizes.max(initial=0)), 1)
-    nmax = max(int(n_sizes.max(initial=0)), 1)
-    pos = np.full((n_shards, tmax), np.inf, np.float32)
-    cum = np.zeros((n_shards, tmax, N_COMBOS, K), np.float32)
-    base = np.zeros((n_shards, E), np.int64)
-    npad = np.zeros((n_shards, E), np.int64)
-    nlev = np.zeros((n_shards, E), np.int64)
-    times = np.full((n_shards, nmax), np.inf, np.float64)
-    tptr = np.zeros((n_shards, E + 1), np.int64)
-    # the sharded engine runs cascade=False (f32-friendly canonical
-    # decomposition), so ship a 1-slot dummy bridge instead of replicating a
-    # Tmax-sized dead table to every device
-    bridge = np.zeros((n_shards, 1), np.int32)
-    t_off = np.zeros(n_shards, np.int64)
-    n_off = np.zeros(n_shards, np.int64)
-    for e in range(E):
-        s = shard_of[e]
-        blk = int(blocks[e])
-        if blk:
-            src = int(rf.edge_base[e])
-            pos[s, t_off[s] : t_off[s] + blk] = rf.pos_flat[src : src + blk]
-            cum[s, t_off[s] : t_off[s] + blk] = rf.cum_flat[src : src + blk]
-            base[s, e] = t_off[s]
-            npad[s, e] = rf.n_pad[e]
-            nlev[s, e] = rf.n_levels[e]
-            t_off[s] += blk
-        c = int(counts[e])
-        lo = int(rf.ee.ptr[e])
-        times[s, n_off[s] : n_off[s] + c] = rf.ee.time[lo : lo + c]
-        n_off[s] += c
-    for s in range(n_shards):
-        own = np.where(shard_of == s, counts, 0)
-        tptr[s, 1:] = np.cumsum(own)
-    steps = max(int(np.ceil(np.log2(max(int(rf.n_pad.max(initial=1)), 1) + 1))) + 1, 1)
-    return ShardedForest(
-        pos_flat=pos,
-        cum_flat=cum,
-        edge_base=base,
-        n_pad=npad,
-        n_lev=nlev,
-        time_flat=times,
-        time_ptr=tptr,
-        bridge=bridge,
+    Lmax = max(rf.max_levels, 1)
+    Pmax = max(max((int(n_pad_g[o].sum()) for o in owned), default=0), 1)
+    Tmax = max(max((int((n_pad_g[o] * n_lev_g[o]).sum()) for o in owned), default=0), 1)
+    nl_cnt = np.zeros((S, Lmax), np.int64)
+    for s, o in enumerate(owned):
+        for lev in range(Lmax):
+            sel = o[n_lev_g[o] > lev]
+            nl_cnt[s, lev] = int((n_pad_g[sel] >> lev).sum())
+    NL = np.maximum(nl_cnt.max(axis=0, initial=0), 1)  # [Lmax] padded widths
+    lev_base = np.concatenate([[0], np.cumsum(NL)])
+
+    pm_pos = np.full((S, Pmax), np.inf)
+    pm_time = np.full((S, Tmax), np.inf)
+    pm_cum = np.zeros((S, Tmax, N_COMBOS, K))
+    pos_base = np.zeros((S, El), np.int64)
+    edge_base = np.zeros((S, El), np.int64)
+    n_pad = np.zeros((S, El), np.int64)
+    n_lev = np.zeros((S, El), np.int64)
+    node_base_lvl = np.zeros((S, Lmax, El), np.int32)
+    node_starts = [np.zeros((S, int(NL[lev])), np.int32) for lev in range(Lmax)]
+    for s, o in enumerate(owned):
+        p_off = t_off = 0
+        n_off = np.zeros(Lmax, np.int64)
+        for j, e in enumerate(o):
+            npd, nlv = int(n_pad_g[e]), int(n_lev_g[e])
+            n_pad[s, j] = npd
+            n_lev[s, j] = nlv
+            if npd == 0:
+                continue
+            gp, gt = int(host["pos_base"][e]), int(host["edge_base"][e])
+            pm_pos[s, p_off : p_off + npd] = host["pm_pos"][gp : gp + npd]
+            pos_base[s, j] = p_off
+            p_off += npd
+            blk = npd * nlv
+            pm_time[s, t_off : t_off + blk] = host["pm_time"][gt : gt + blk]
+            pm_cum[s, t_off : t_off + blk] = host["pm_cum"][gt : gt + blk]
+            edge_base[s, j] = t_off
+            for lev in range(nlv):
+                nb = npd >> lev
+                node_base_lvl[s, lev, j] = lev_base[lev] + n_off[lev]
+                node_starts[lev][s, n_off[lev] : n_off[lev] + nb] = (
+                    t_off + lev * npd + np.arange(nb, dtype=np.int64) * (1 << lev)
+                )
+                n_off[lev] += nb
+            t_off += blk
+    ev_per_shard = np.bincount(shard_of, weights=counts.astype(np.float64), minlength=S)
+    return ShardedPackedForest(
+        pm_pos=pm_pos,
+        pos_base=pos_base,
+        pm_time=pm_time,
+        pm_cum=pm_cum,
+        edge_base=edge_base,
+        n_pad=n_pad,
+        n_lev=n_lev,
+        node_base_lvl=node_base_lvl,
+        node_starts=tuple(node_starts),
         shard_of_edge=shard_of,
-        max_levels=rf.max_levels,
-        search_steps=steps,
-        n_shards=n_shards,
+        edge_slot=edge_slot,
+        events_per_shard=ev_per_shard.astype(np.int64),
+        max_levels=Lmax,
+        search_steps=max(int(np.ceil(np.log2(max(int(n_pad_g.max(initial=1)), 1) + 1))) + 1, 1),
+        steps_per_level=tuple(host["steps_per_level"]),
+        n_shards=S,
+        n_nodes=int(lev_base[-1]),
     )
 
 
-def pack_atoms(sf: ShardedForest, atoms: AtomSet) -> FlatAtoms:
-    """Route atoms to their edge's shard; pad each shard to the global max.
+# ------------------------------------------------------------- programs
+_PROGRAMS: dict = {}  # (mesh, axes) -> dict of jitted shard_map programs
+# Module-level cache: every engine instance on the same mesh reuses one
+# program set, so the jit caches underneath are keyed on shapes + statics
+# only (shard count never multiplies compiles — one program per mesh, not
+# per shard; tests/test_distributed_kde.py audits this via jit_entry_count).
 
-    Window-independent — one packing serves every query window.
-    """
-    S = sf.n_shards
-    shard = sf.shard_of_edge[atoms.edge]
-    order = np.argsort(shard, kind="stable")
-    counts = np.bincount(shard, minlength=S)
-    mp = max(int(counts.max()), 1)
 
-    def packed(x, fill=0):
-        out = np.full((S, mp) + x.shape[1:], fill, x.dtype)
-        off = 0
-        for s in range(S):
-            c = int(counts[s])
-            out[s, :c] = x[order[off : off + c]]
-            off += c
-        return out
+def _get_programs(mesh, axes: Tuple[str, ...]):
+    key = (mesh, tuple(axes))
+    hit = _PROGRAMS.get(key)
+    if hit is not None:
+        return hit
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
 
-    return FlatAtoms(
-        lixel=packed(atoms.lixel),
-        edge=packed(atoms.edge),
-        side_feat=packed(atoms.side_feat.astype(np.int32)),
-        qs=packed(atoms.qs.astype(np.float32), 0.0),
-        pos_hi=packed(atoms.pos_hi.astype(np.float32), np.float32(-np.inf)),
-        pos_lo1=packed(atoms.pos_lo1.astype(np.float32), np.float32(np.inf)),
-        lo1_right=packed(atoms.lo1_right, False),
-        pos_lo2=packed(atoms.pos_lo2.astype(np.float32), np.float32(np.inf)),
-        valid=packed(np.ones(atoms.m, bool), False),
+    from repro.compat import shard_map
+
+    from .jax_engine import (
+        dyn_node_tables,
+        dyn_window_tables,
+        eval_atoms_dyn,
+        eval_atoms_packed,
+        packed_node_tables,
+        packed_root_ranks,
     )
+    from .rfs import register_jit_fns
+
+    spec = P(tuple(axes))
+    rep = P()
+    ax = tuple(axes)
+
+    def _local(t):
+        return jax.tree.map(lambda x: x[0], t)
+
+    def _smap(body, in_specs, out_specs):
+        return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+    def _psum_delta(vals, fa_l, heat):
+        """Fold half-windows, scatter the shard's atoms, psum the delta.
+
+        ``heat`` rides in replicated so multi-block flushes accumulate
+        across calls — only the shard-local delta is reduced.
+        """
+        W = heat.shape[1]
+        per_win = vals.reshape(W, 2, -1).sum(axis=1)
+        delta = jnp.zeros_like(heat).at[fa_l.lixel].add(per_win.T)
+        return heat + jax.lax.psum(delta, ax)
+
+    # ---- static RFS: node tables, root ranks, flush ------------------------
+    @functools.partial(jax.jit, static_argnames=("steps_per_level", "k_t"))
+    def rfs_tables(pf, wb, node_starts, *, steps_per_level, k_t):
+        def body(pf, wb, node_starts):
+            ns = tuple(x[0] for x in node_starts)
+            out = packed_node_tables(
+                _local(pf), wb, ns, steps_per_level=steps_per_level, k_t=k_t
+            )
+            return out[None]
+
+        return _smap(body, (spec, rep, spec), spec)(pf, wb, node_starts)
+
+    @functools.partial(jax.jit, static_argnames=("search_steps",))
+    def rfs_roots(pf, fa, *, search_steps):
+        def body(pf, fa):
+            r_lo, r_hi = packed_root_ranks(
+                _local(pf), _local(fa), search_steps=search_steps
+            )
+            return r_lo[None], r_hi[None]
+
+        return _smap(body, (spec, spec), (spec, spec))(pf, fa)
+
+    @functools.partial(jax.jit, static_argnames=("max_levels",))
+    def rfs_flush(nodeval, node_base_lvl, fa, r_lo, r_hi, heat, *, max_levels):
+        def body(nodeval, node_base_lvl, fa, r_lo, r_hi, heat):
+            fa_l = _local(fa)
+            vals = eval_atoms_packed(
+                nodeval[0], node_base_lvl[0], fa_l, r_lo[0], r_hi[0],
+                max_levels=max_levels,
+            )
+            return _psum_delta(vals, fa_l, heat)
+
+        return _smap(body, (spec, spec, spec, spec, spec, rep), rep)(
+            nodeval, node_base_lvl, fa, r_lo, r_hi, heat
+        )
+
+    # ---- DRFS: window tables + flush ---------------------------------------
+    @functools.partial(
+        jax.jit,
+        static_argnames=("n_levels", "hq", "search_steps", "steps_per_level", "exact"),
+    )
+    def dyn_tables(forest, wb, *, n_levels, hq, search_steps, steps_per_level, exact):
+        def body(forest, wb):
+            f = _local(forest)
+            if exact:
+                out = dyn_node_tables(
+                    f, wb, n_levels=n_levels, hq=hq, steps_per_level=steps_per_level
+                )
+            else:
+                out = dyn_window_tables(
+                    f, wb, n_levels=n_levels, hq=hq, search_steps=search_steps
+                )
+            return out[None]
+
+        return _smap(body, (spec, rep), spec)(forest, wb)
+
+    @functools.partial(
+        jax.jit,
+        static_argnames=("n_levels", "hq", "scan_steps", "pend_steps", "exact"),
+    )
+    def dyn_flush(forest, fa, wb, tables, heat, *, n_levels, hq, scan_steps,
+                  pend_steps, exact):
+        def body(forest, fa, wb, tables, heat):
+            fa_l = _local(fa)
+            vals = eval_atoms_dyn(
+                _local(forest), fa_l, wb, tuple(t[0] for t in tables),
+                n_levels=n_levels, hq=hq, scan_steps=scan_steps,
+                pend_steps=pend_steps, exact=exact,
+            )
+            return _psum_delta(vals, fa_l, heat)
+
+        return _smap(body, (spec, spec, rep, spec, rep), rep)(
+            forest, fa, wb, tables, heat
+        )
+
+    progs = dict(
+        rfs_tables=rfs_tables,
+        rfs_roots=rfs_roots,
+        rfs_flush=rfs_flush,
+        dyn_tables=dyn_tables,
+        dyn_flush=dyn_flush,
+    )
+    register_jit_fns(progs.values())
+    _PROGRAMS[key] = progs
+    return progs
 
 
-class DistributedTNKDE:
-    """Multi-device front end over a built (host) TNKDE with solution='rfs'."""
+class _ShardedBase(_DeviceEngine):
+    """Shared plumbing for the sharded engines: the single-host device
+    plumbing (window batches, heatmap, device->host transfer, counters)
+    plus mesh bookkeeping, atom routing/upload and per-shard accounting —
+    subclassing `_DeviceEngine` keeps the two engine families from
+    drifting apart."""
 
-    def __init__(self, tnkde, mesh: Mesh, axes: Sequence[str] = ("data",)):
-        if tnkde.solution != "rfs":
-            raise ValueError("distributed evaluation shards the RFS index")
-        self.tnkde = tnkde
+    def _init_mesh(self, mesh, axes: Sequence[str]):
         self.mesh = mesh
         self.axes = tuple(axes)
-        n_shards = int(math.prod(mesh.shape[a] for a in self.axes))
-        self.sf = build_sharded(tnkde.index, n_shards)
-        self.atoms = self._collect_atoms()
-        self._fn = None
+        missing = [a for a in self.axes if a not in mesh.shape]
+        if missing:
+            raise ValueError(f"mesh has no axes {missing}; got {dict(mesh.shape)}")
+        self.n_shards = int(math.prod(mesh.shape[a] for a in self.axes))
+        self._progs = _get_programs(mesh, self.axes)
+        from jax.sharding import NamedSharding, PartitionSpec as P
 
-    def _collect_atoms(self) -> AtomSet:
-        """Window-independent atoms from the *shared* host planner loop."""
-        t = self.tnkde
-        parts = [build_atoms(geom, t.ctx) for geom in t.edge_geometries()]
-        return AtomSet.concat([p for p in parts if p.m])
+        self._slab_sharding = NamedSharding(mesh, P(self.axes))
 
-    def _shard_fn(self):
-        if self._fn is not None:
-            return self._fn
-        axes = self.axes
-        spec = P(axes)
-        L = self.tnkde.n_lixels
-        max_levels, search_steps = self.sf.max_levels, self.sf.search_steps
+    def _shard_put(self, x):
+        """Upload a stacked [S, ...] host array with its shard axis placed
+        over the mesh. Plain ``jnp.asarray`` would commit the WHOLE stack to
+        the default device and reshard inside every collective — on a real
+        multi-device mesh that is both a device-0 memory hot spot and a
+        per-flush transfer; placing at upload time is what actually realizes
+        the 1/devices scaling on hardware (callers must hold the x64
+        context so float64 tables survive canonicalization)."""
+        return self._jax.device_put(x, self._slab_sharding)
 
-        def shard_body(forest, fa, wb):
-            forest = jax.tree.map(lambda x: x[0], forest)
-            fa_local = jax.tree.map(lambda x: x[0], fa)
-            # the packed-plan hoist, shard-local: time-rank boundaries are
-            # resolved once per (shard, window batch) at EDGE scale and every
-            # atom of the shard gathers them — same layout the single-host
-            # executors consume (jax_engine.rank_boundaries)
-            ranks = rank_boundaries(forest, wb, search_steps=search_steps)
-            vals = eval_atoms_flat(
-                forest,
-                fa_local,
-                wb,
-                ranks,
-                max_levels=max_levels,
-                search_steps=search_steps,
-                cascade=False,  # canonical decomposition: f32-friendly
-            )  # [Wh, M_local]
-            W = vals.shape[0] // 2
-            per_win = vals.reshape(W, 2, -1).sum(axis=1)  # fold window halves
-            f = jnp.zeros((L, W), vals.dtype).at[fa_local.lixel].add(per_win.T)
-            return jax.lax.psum(f, axes)
+    def _upload_fa(self, fields: dict):
+        """Host-routed [S, Mp] atom fields → a device FlatAtoms, sharded."""
+        from .jax_engine import FlatAtoms
 
-        in_specs = (
-            FlatForest(*(spec,) * len(FlatForest._fields)),
-            FlatAtoms(*(spec,) * len(FlatAtoms._fields)),
-            WindowBatch(*(P(),) * len(WindowBatch._fields)),
+        with self._jax.experimental.enable_x64():
+            return FlatAtoms(**{k: self._shard_put(v) for k, v in fields.items()})
+
+    @property
+    def bytes_per_shard(self) -> int:
+        """Per-shard device bytes: stacked arrays divided by the shard count
+        (slabs are padded to the max, so this is within padding of the
+        heaviest shard). The measured counterpart of the 1/devices
+        memory-scaling claim — surfaced as ``QueryStats.bytes_per_shard``."""
+        return self.device_bytes // max(self.n_shards, 1)
+
+
+class ShardedForestEngine(_ShardedBase):
+    """Sharded packed-plan query engine over a built RangeForest.
+
+    The :class:`rfs.FlatForestEngine` contract (window_batch / new_heatmap /
+    flush_plan / to_numpy / counters / device_bytes) over per-shard slabs of
+    the same position-major layout. Every flush is ONE collective program:
+    per shard the canonical `eval_atoms_packed` walk — verbatim the
+    single-host executor — followed by a psum of the [L, W] heatmap delta.
+    Cache structure mirrors the single-host engine exactly: window tables
+    per ts tuple, atom packs (with cached per-shard root rank intervals)
+    per host plan, both keyed with the mesh so two meshes never alias.
+    """
+
+    executor = "packed"
+
+    def __init__(self, rf, mesh, axes: Sequence[str] = ("data",)):
+        self._init_jax()
+        self._init_mesh(mesh, axes)
+        self.rf = rf
+        self.sf = build_sharded_packed(rf, self.n_shards)
+        self.max_levels = self.sf.max_levels
+        self.search_steps = self.sf.search_steps
+        from .jax_engine import PackedForest
+
+        with self._jax.experimental.enable_x64():
+            self._nbl = self._shard_put(self.sf.node_base_lvl)
+            self._pf = PackedForest(
+                pm_pos=self._shard_put(self.sf.pm_pos),
+                pos_base=self._shard_put(self.sf.pos_base),
+                pm_time=self._shard_put(self.sf.pm_time),
+                pm_cum=self._shard_put(self.sf.pm_cum),
+                edge_base=self._shard_put(self.sf.edge_base),
+                n_pad=self._shard_put(self.sf.n_pad),
+                n_lev=self._shard_put(self.sf.n_lev),
+                # no sharded program reads pf.node_base (the walk takes the
+                # level-major _nbl directly) — reuse that buffer instead of
+                # uploading a second transposed copy the memory metric would
+                # then count
+                node_base=self._nbl,
+            )
+            self._node_starts = tuple(self._shard_put(s) for s in self.sf.node_starts)
+        self._tab_cache = PlanCache(2)
+        self._pack_cache = PlanCache(2)
+        self._mesh_key = (tuple(sorted(mesh.shape.items())), self.axes)
+
+    @property
+    def device_bytes(self) -> int:
+        # _nbl is aliased into self._pf.node_base — listing both would
+        # double-count the one buffer
+        return _device_nbytes(
+            [
+                self._pf,
+                list(self._node_starts),
+                list(self._tab_cache.values()),
+                list(self._pack_cache.values()),
+            ]
         )
-        self._fn = jax.jit(
-            shard_map(shard_body, mesh=self.mesh, in_specs=in_specs, out_specs=P())
-        )
-        return self._fn
 
-    def query(self, ts: Sequence[float]) -> np.ndarray:
-        """[W, L] heatmaps, evaluated across the mesh in one collective call."""
-        t = self.tnkde
-        fn = self._shard_fn()
-        forest = FlatForest(
-            pos_flat=jnp.asarray(self.sf.pos_flat),
-            cum_flat=jnp.asarray(self.sf.cum_flat),
-            edge_base=jnp.asarray(self.sf.edge_base),
-            n_pad=jnp.asarray(self.sf.n_pad),
-            n_lev=jnp.asarray(self.sf.n_lev),
-            time_flat=jnp.asarray(self.sf.time_flat.astype(np.float32)),
-            time_ptr=jnp.asarray(self.sf.time_ptr),
-            bridge=jnp.asarray(self.sf.bridge),
+    def window_tables(self, wb, ts_key):
+        """Sharded q_t-folded node values [S, R·2, W, 2k_s], LRU per ts.
+
+        Same hoist, same builder (`packed_node_tables`), run per shard over
+        the slab's node runs — all time searches stay at node-count scale.
+        """
+        key = (ts_key, self._mesh_key)
+        hit = self._tab_cache.get(key)
+        if hit is not None:
+            return hit
+        W = len(ts_key)
+        with self._jax.experimental.enable_x64():
+            tabs = self._progs["rfs_tables"](
+                self._pf, wb, self._node_starts,
+                steps_per_level=self.sf.steps_per_level,
+                k_t=int(self.rf.ctx.k_t),
+            )
+        nn = self.sf.n_nodes * self.n_shards
+        self.counters["rank_searches"] += 3 * W * nn
+        self.counters["moment_gathers"] += 3 * W * nn
+        self._tab_cache.put(key, tabs)
+        return tabs
+
+    def _atom_packs(self, plan):
+        """Per-block sharded atom packs with cached root rank intervals."""
+        key = (plan.key, self._mesh_key)
+        hit = self._pack_cache.get(key)
+        if hit is not None:
+            return hit
+        packs = []
+        for atoms in plan.blocks:
+            fields = route_atoms_by_shard(
+                atoms, self.sf.shard_of_edge, self.sf.edge_slot, self.n_shards
+            )
+            fa = self._upload_fa(fields)
+            with self._jax.experimental.enable_x64():
+                r_lo, r_hi = self._progs["rfs_roots"](
+                    self._pf, fa, search_steps=self.search_steps
+                )
+            packs.append(dict(fa=fa, r_lo=r_lo, r_hi=r_hi, m=atoms.m))
+        self._pack_cache.put(key, packs)
+        return packs
+
+    def flush_plan(self, heat, plan, wb, ts_key, **_):
+        """heat[L, W] += every atom block, all shards, one collective each."""
+        if plan.n_atoms == 0:
+            return heat
+        tabs = self.window_tables(wb, ts_key)
+        for entry in self._atom_packs(plan):
+            with self._jax.experimental.enable_x64():
+                heat = self._progs["rfs_flush"](
+                    tabs, self._nbl, entry["fa"], entry["r_lo"], entry["r_hi"],
+                    heat, max_levels=self.max_levels,
+                )
+            self.counters["moment_gathers"] += 2 * self.max_levels * entry["m"]
+        return heat
+
+    def lower_flush(self, wb, plan, n_lixels: int):
+        """Lower (never execute) the sharded flush collective — the dry-run
+        hook ``launch/dryrun.py --kde`` uses to compile-prove the packed
+        program on the production meshes. Table and root-rank shapes come
+        from ``jax.eval_shape`` over the real programs, so what is lowered
+        is exactly what :meth:`flush_plan` would dispatch.
+        """
+        import functools as ft
+
+        jax, jnp = self._jax, self._jnp
+        atoms = plan.blocks[0]
+        fields = route_atoms_by_shard(
+            atoms, self.sf.shard_of_edge, self.sf.edge_slot, self.n_shards
         )
-        fa = jax.tree.map(jnp.asarray, pack_atoms(self.sf, self.atoms))
-        t_lo, t_hi, lo_right, half, qt = make_window_batch(t.ctx, ts)
-        wb = WindowBatch(
-            t_lo=jnp.asarray(t_lo.astype(np.float32)),
-            t_hi=jnp.asarray(t_hi.astype(np.float32)),
-            lo_right=jnp.asarray(lo_right),
-            half=jnp.asarray(half),
-            qt=jnp.asarray(qt.astype(np.float32)),
+        with jax.experimental.enable_x64():
+            fa = self._upload_fa(fields)
+            tabs_s = jax.eval_shape(
+                ft.partial(
+                    self._progs["rfs_tables"],
+                    steps_per_level=self.sf.steps_per_level,
+                    k_t=int(self.rf.ctx.k_t),
+                ),
+                self._pf, wb, self._node_starts,
+            )
+            r_s = jax.eval_shape(
+                ft.partial(self._progs["rfs_roots"], search_steps=self.search_steps),
+                self._pf, fa,
+            )
+            heat_s = jax.ShapeDtypeStruct((n_lixels, wb.t_lo.shape[0] // 2), jnp.float64)
+            return self._progs["rfs_flush"].lower(
+                tabs_s, self._nbl, fa, r_s[0], r_s[1], heat_s,
+                max_levels=self.max_levels,
+            )
+
+
+class _ShardedSealed:
+    """Stacked device tables for one sealed structure epoch, all shards."""
+
+    __slots__ = ("tables", "n_levels", "max_occ", "nbytes")
+
+
+class _ShardedPend:
+    """Stacked device tables for one pending-buffer epoch, all shards."""
+
+    __slots__ = ("tables", "pend_steps", "nbytes")
+
+
+class ShardedDynamicEngine(_ShardedBase):
+    """Sharded streaming DRFS engine — `rfs.FlatDynamicEngine` over slabs.
+
+    Mutations stay on the host (`drfs.py`); this engine slabs **per snapshot
+    epoch**: sealed level CSRs and event tables are compacted to each
+    shard's owned edges (shard-local node_ptr over El local edge slots, so
+    `eval_atoms_dyn` and the `dyn_*` table builders run verbatim per shard),
+    and the pending CSR is sliced the same way — insert → query never
+    rebuilds, exactly the single-host MVCC contract. Shard assignment is
+    fixed at construction from the initial per-edge event counts; streamed
+    events follow their edge's shard.
+    """
+
+    executor = "packed"
+
+    def __init__(self, df, mesh, axes: Sequence[str] = ("data",), *,
+                 max_snapshots: int = 2):
+        self._init_jax()
+        self._init_mesh(mesh, axes)
+        self.df = df
+        self.max_snapshots = max(int(max_snapshots), 1)
+        counts = np.diff(df.ptr)
+        self.shard_of = assign_edges(counts, self.n_shards)
+        self._owned, self.El, self.edge_slot = _owned_lists(self.shard_of, self.n_shards)
+        self._own_mask = [
+            np.zeros(df.net.n_edges, bool) for _ in range(self.n_shards)
+        ]
+        for s, o in enumerate(self._owned):
+            self._own_mask[s][o] = True
+        lens_local = np.ones((self.n_shards, self.El))
+        for s, o in enumerate(self._owned):
+            lens_local[s, : len(o)] = df.lens[o]
+        with self._jax.experimental.enable_x64():
+            self._lens_dev = self._shard_put(lens_local)
+        self._sealed_packs: "OrderedDict" = OrderedDict()
+        self._pend_packs: "OrderedDict" = OrderedDict()
+        self._tab_cache: "OrderedDict" = OrderedDict()
+        self._pack_cache = PlanCache(2)
+        self._mesh_key = (tuple(sorted(mesh.shape.items())), self.axes)
+        snap = df.snapshot()
+        self._get_sealed(snap)
+        self._get_pending(snap)
+
+    @property
+    def device_bytes(self) -> int:
+        return _device_nbytes(
+            [
+                self._lens_dev,
+                list(self._sealed_packs.values()),
+                list(self._pend_packs.values()),
+                list(self._tab_cache.values()),
+                list(self._pack_cache.values()),
+            ]
         )
-        f = fn(forest, fa, wb)
-        return np.asarray(f, np.float64).T
+
+    # ------------------------------------------------------------- packing
+    def _get_sealed(self, snap) -> _ShardedSealed:
+        """Stacked sealed level tables for the snapshot's structure epoch."""
+        key = (snap.revision, snap.depth)
+        pack = self._sealed_packs.get(key)
+        if pack is not None:
+            self._sealed_packs.move_to_end(key)
+            return pack
+        S, El = self.n_shards, self.El
+        E = snap.net.n_edges
+        Lv = snap.depth + 1
+        K = snap.ctx.K
+        edge_of_event = np.repeat(np.arange(E, dtype=np.int64), np.diff(snap.ptr))
+        n_s = np.bincount(self.shard_of[edge_of_event], minlength=S) if len(
+            edge_of_event
+        ) else np.zeros(S, np.int64)
+        Np = _size_class(max(int(n_s.max(initial=1)), 1))
+        time_lvl = np.full((S, Lv * Np), np.inf)
+        pos_lvl = np.full((S, Lv * Np), np.inf)
+        cum_lvl = np.zeros((S, Lv * Np, N_COMBOS, K))
+        ptr_len = sum(El * (1 << d) + 1 for d in range(Lv))
+        node_ptr = np.zeros((S, ptr_len), np.int64)
+        max_occ = np.zeros(Lv, np.int64)
+        for d, (nptr, tms, cum, eidx) in enumerate(snap.levels):
+            cnt = np.diff(nptr).reshape(E, 1 << d)
+            eos = edge_of_event[eidx] if len(eidx) else eidx
+            off_d = El * ((1 << d) - 1) + d
+            for s, o in enumerate(self._owned):
+                sel = np.nonzero(self._own_mask[s][eos])[0] if len(eos) else eos
+                k = len(sel)
+                time_lvl[s, d * Np : d * Np + k] = tms[sel]
+                pos_lvl[s, d * Np : d * Np + k] = snap.pos[eidx[sel]]
+                cum_lvl[s, d * Np : d * Np + k] = cum[sel]
+                cl = np.zeros((El, 1 << d), np.int64)
+                cl[: len(o)] = cnt[o]
+                np.cumsum(cl.ravel(), out=node_ptr[s, off_d + 1 : off_d + El * (1 << d) + 1])
+                max_occ[d] = max(max_occ[d], int(cl.max(initial=0)))
+        pack = _ShardedSealed()
+        with self._jax.experimental.enable_x64():
+            pack.tables = dict(
+                time_lvl=self._shard_put(time_lvl),
+                pos_lvl=self._shard_put(pos_lvl),
+                cum_lvl=self._shard_put(cum_lvl),
+                node_ptr=self._shard_put(node_ptr),
+                edge_len=self._lens_dev,
+            )
+        pack.n_levels = Lv
+        pack.max_occ = max_occ
+        pack.nbytes = time_lvl.nbytes + pos_lvl.nbytes + cum_lvl.nbytes + node_ptr.nbytes
+        self._sealed_packs[key] = pack
+        while len(self._sealed_packs) > self.max_snapshots:
+            old_key, _ = self._sealed_packs.popitem(last=False)
+            for tk in [k for k in self._tab_cache if k[1:3] == old_key]:
+                del self._tab_cache[tk]
+        return pack
+
+    def _get_pending(self, snap) -> _ShardedPend:
+        """Stacked pending-CSR tables for the snapshot's pending epoch."""
+        key = snap.pend_revision
+        pack = self._pend_packs.get(key)
+        if pack is not None:
+            self._pend_packs.move_to_end(key)
+            return pack
+        S, El = self.n_shards, self.El
+        E = snap.net.n_edges
+        K = snap.ctx.K
+        csr = snap.pending_csr()
+        pack = _ShardedPend()
+        if csr is None:
+            pptr = np.zeros((S, El + 1), np.int64)
+            pp = np.zeros((S, 1))
+            pt = np.full((S, 1), np.inf)
+            pf = np.zeros((S, 1, N_COMBOS, K))
+            pack.pend_steps = 0
+        else:
+            gptr, gp, gt, gf = csr
+            counts = np.diff(gptr)
+            edge_of = np.repeat(np.arange(E, dtype=np.int64), counts)
+            per_shard = np.bincount(self.shard_of[edge_of], minlength=S)
+            Pp = _size_class(max(int(per_shard.max(initial=1)), 1), floor=64)
+            pptr = np.zeros((S, El + 1), np.int64)
+            pp = np.zeros((S, Pp))
+            pt = np.full((S, Pp), np.inf)
+            pf = np.zeros((S, Pp, N_COMBOS, K))
+            for s, o in enumerate(self._owned):
+                sel = np.nonzero(self._own_mask[s][edge_of])[0]
+                k = len(sel)
+                pp[s, :k] = gp[sel]
+                pt[s, :k] = gt[sel]
+                pf[s, :k] = gf[sel]
+                cl = np.zeros(El, np.int64)
+                cl[: len(o)] = counts[o]
+                np.cumsum(cl, out=pptr[s, 1:])
+            pack.pend_steps = next_pow2(int(counts.max(initial=1)))
+        with self._jax.experimental.enable_x64():
+            pack.tables = dict(
+                pend_ptr=self._shard_put(pptr),
+                pend_pos=self._shard_put(pp),
+                pend_time=self._shard_put(pt),
+                pend_phi=self._shard_put(pf),
+            )
+        pack.nbytes = pptr.nbytes + pp.nbytes + pt.nbytes + pf.nbytes
+        self._pend_packs[key] = pack
+        while len(self._pend_packs) > self.max_snapshots + 2:
+            self._pend_packs.popitem(last=False)
+        return pack
+
+    def _forest(self, sealed: _ShardedSealed, pend: _ShardedPend):
+        from .jax_engine import FlatDynamicForest
+
+        return FlatDynamicForest(**sealed.tables, **pend.tables)
+
+    # ------------------------------------------------------------ per query
+    def window_tables(self, wb, ts_key, snap, sealed: _ShardedSealed, hq: int,
+                      exact: bool):
+        """Sharded window tables for (ts, structure epoch, hq, mode), LRU.
+
+        Same builders (`dyn_node_tables` / `dyn_window_tables`) as the
+        single-host engine, run per shard over the shard-local CSRs."""
+        key = (ts_key, snap.revision, snap.depth, int(hq), bool(exact), self._mesh_key)
+        hit = self._tab_cache.get(key)
+        if hit is not None:
+            self._tab_cache.move_to_end(key)
+            return hit
+
+        def steps(occ):
+            return max(int(np.ceil(np.log2(int(occ) + 1))) + 1, 1)
+
+        W = len(ts_key)
+        forest = self._forest(sealed, self._get_pending(snap))
+        with self._jax.experimental.enable_x64():
+            # only the active branch's trip counts enter the jit key — a
+            # seal that moves an occupancy the other mode reads must not
+            # recompile this one (mirrors the single-host engine, which
+            # passes each builder only its own static)
+            tabs = (self._progs["dyn_tables"](
+                forest, wb,
+                n_levels=sealed.n_levels, hq=int(hq),
+                search_steps=1 if exact else steps(sealed.max_occ[hq]),
+                steps_per_level=(
+                    tuple(steps(o) for o in sealed.max_occ[: hq + 1])
+                    if exact else ()
+                ),
+                exact=bool(exact),
+            ),)
+        nn = self.El * (((1 << (hq + 1)) - 1) if exact else (1 << hq)) * self.n_shards
+        self.counters["rank_searches"] += 3 * W * nn
+        self.counters["moment_gathers"] += 3 * W * nn
+        self._tab_cache[key] = tabs
+        while len(self._tab_cache) > 4 * self.max_snapshots:
+            self._tab_cache.popitem(last=False)
+        return tabs
+
+    def _atom_packs(self, plan):
+        """Sharded device atom blocks for a HostPlan (local edge ids)."""
+        key = (plan.key, self._mesh_key)
+        hit = self._pack_cache.get(key)
+        if hit is not None:
+            return hit
+        packs = []
+        for atoms in plan.blocks:
+            fields = route_atoms_by_shard(
+                atoms, self.shard_of, self.edge_slot, self.n_shards
+            )
+            packs.append(dict(fa=self._upload_fa(fields), atoms=atoms, m=atoms.m))
+        self._pack_cache.put(key, packs)
+        return packs
+
+    def flush_plan(self, heat, plan, wb, ts_key, *, h0=None, exact_leaf=False,
+                   snapshot=None, **_):
+        """heat[L, W] += every atom block, snapshot-consistent, collective."""
+        if plan.n_atoms == 0:
+            return heat
+        snap = snapshot if snapshot is not None else self.df.snapshot()
+        sealed = self._get_sealed(snap)
+        pend = self._get_pending(snap)
+        hq = snap.depth if h0 is None else min(int(h0), snap.depth)
+        scan_steps = 0
+        if exact_leaf:
+            occ = int(sealed.max_occ[hq])
+            scan_steps = -(-occ // 8) * 8 if occ else 0
+        W = heat.shape[1]
+        tables = self.window_tables(wb, ts_key, snap, sealed, hq, bool(exact_leaf))
+        forest = self._forest(sealed, pend)
+        for entry in self._atom_packs(plan):
+            atoms = entry["atoms"]
+            snap.counters["pending"] += snap.pending_scan_pairs(atoms) * W
+            if exact_leaf:
+                snap.counters["partial"] += snap.partial_scan_pairs(atoms, hq) * 2 * W
+            self.counters["moment_gathers"] += (
+                2 * (hq + 1) * entry["m"] if exact_leaf else 2 * entry["m"]
+            )
+            with self._jax.experimental.enable_x64():
+                heat = self._progs["dyn_flush"](
+                    forest, entry["fa"], wb, tables, heat,
+                    n_levels=sealed.n_levels, hq=int(hq),
+                    scan_steps=int(scan_steps), pend_steps=int(pend.pend_steps),
+                    exact=bool(exact_leaf),
+                )
+        return heat

@@ -4,7 +4,8 @@ Same algorithm as rfs.RangeForest, expressed as pure jax.numpy on the flat
 tables so it can run under jit / shard_map on TPU meshes. Scalar gathers only
 — memory stays O(W·M) regardless of table size (the Pallas ``tree_query``
 kernel is the size-classed VMEM-resident accelerator for the same math; this
-engine is the general fallback and the distribution vehicle).
+engine is the general fallback, and the packed executor below is also the
+distribution vehicle — distributed.py runs it verbatim per shard).
 
 Window batching (the paper's multiple temporal KDE scenario, §8.2): one call
 answers all W query windows. Each window center t contributes two *half
@@ -19,9 +20,11 @@ Three jnp executors. The default is the **packed-plan** executor
 transpose of the merge tree whose per-node window values are q_t-folded once
 per (snapshot, window batch) at node-count scale, leaving the per-atom walk
 one paired gather per level with window-independent [M] state — the
-gather-lean hot path. The two legacy executors below share its hoisted
-:func:`rank_boundaries` table and remain for the equivalence matrix and the
-distributed path; they are selected with the static ``cascade`` flag:
+gather-lean hot path — single-host and sharded (distributed.py slabs the
+same layout and runs the same walk under shard_map). The two legacy
+executors below share its hoisted :func:`rank_boundaries` table and remain
+for the equivalence matrix; they are selected with the static ``cascade``
+flag:
 
   * ``cascade=False`` — canonical bucket decomposition with a per-bucket
     binary search (the paper-faithful O(log²) path, identical to
@@ -877,7 +880,7 @@ def eval_atoms_flat(
     forest: FlatForest,
     atoms: FlatAtoms,
     wb: WindowBatch,
-    ranks=None,
+    ranks,
     *,
     max_levels: int,
     search_steps: int,
@@ -888,12 +891,10 @@ def eval_atoms_flat(
     Callers reduce the Wh axis (sum the two halves of each window center) and
     scatter the M axis onto lixels. Requires the (left, right)-paired row
     layout produced by ``make_window_batch`` (rows 2w / 2w+1 are the two
-    halves of center w). ``ranks`` optionally supplies the precomputed
-    :func:`rank_boundaries` table [3, W, E] (the plan hoist); ``None``
-    recomputes it inline (the distributed path).
+    halves of center w). ``ranks`` supplies the precomputed
+    :func:`rank_boundaries` table [3, W, E] (the plan hoist) — every caller,
+    including the sharded path, goes through the cached plan now.
     """
-    if ranks is None:
-        ranks = rank_boundaries(forest, wb, search_steps=search_steps)
     if cascade:
         acc = _engine_cascade(
             forest, atoms, wb, ranks,

@@ -803,6 +803,15 @@ class FlatForestEngine(_DeviceEngine):
             ]
         )
 
+    @property
+    def bytes_per_shard(self) -> int:
+        """Device bytes each participating device holds — the single-host
+        engine IS one shard, so this equals :attr:`device_bytes`. The sharded
+        engines (distributed.py) report their per-shard slab instead; the
+        1/devices memory-scaling claim is measured via QueryStats, never
+        asserted from a docstring."""
+        return self.device_bytes
+
     # ----------------------------------------------------- plan-side caches
     def _atom_packs(self, plan):
         """Device atom packs for a HostPlan: per block, per LEVEL class
@@ -1140,6 +1149,15 @@ def _get_pallas():
     return _JIT_PALLAS
 
 
+_EXTERNAL_JIT_FNS: list = []  # jitted callables registered by other modules
+# (distributed.py's sharded programs) so the recompile audit covers them too
+
+
+def register_jit_fns(fns) -> None:
+    """Add jitted callables to the :func:`jit_entry_count` audit set."""
+    _EXTERNAL_JIT_FNS.extend(fns)
+
+
 def jit_entry_count() -> int:
     """Total compiled entries across the module-level jit caches.
 
@@ -1157,6 +1175,7 @@ def jit_entry_count() -> int:
         fns.extend(_JIT_DYN)
     if _JIT_PALLAS is not None:
         fns.extend(_JIT_PALLAS)
+    fns.extend(_EXTERNAL_JIT_FNS)
     total = 0
     for f in fns:
         probe = getattr(f, "_cache_size", None)
@@ -1296,6 +1315,11 @@ class FlatDynamicEngine(_DeviceEngine):
                 list(self._group_cache.values()),
             ]
         )
+
+    @property
+    def bytes_per_shard(self) -> int:
+        """See :attr:`FlatForestEngine.bytes_per_shard` — one host, one shard."""
+        return self.device_bytes
 
     def _get_pending(self, snap) -> _PendPack:
         """Pending-CSR tables for the snapshot's pending epoch (LRU)."""

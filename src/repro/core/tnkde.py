@@ -34,6 +34,13 @@ the index in large vectorized blocks — the same batching the distributed
 decompositions), 'pallas' (same as engine='pallas'). Every query reuses the
 plan cached for its (epoch, LS) pair — warm queries skip planning entirely —
 and window-side tables cached by the ts tuple (DESIGN.md §7).
+
+``mesh`` shards the forest index across the mesh's ``shard_axes``
+(DESIGN.md §3): the same packed executors run per shard under shard_map
+with a psum of the heatmap, so sharded == single-host to summation-order
+noise, index memory per device scales ~1/shards (``QueryStats.
+bytes_per_shard``), and streaming DRFS mutation (insert/seal/extend)
+works unchanged. rfs/drfs only; the packed executor only.
 """
 from __future__ import annotations
 
@@ -82,6 +89,11 @@ class QueryStats:
     # the packed walk gathers one paired node row per (level, atom).
     n_rank_searches: int = 0
     n_moment_gathers: int = 0
+    # device bytes each participating device holds (index tables + cached
+    # packed plans). Single-host engines report their full device footprint
+    # (one shard); the sharded engines report one slab — the MEASURED form
+    # of the 1/devices memory-scaling claim (DESIGN.md §3).
+    bytes_per_shard: int = 0
 
 
 class TNKDE:
@@ -98,6 +110,8 @@ class TNKDE:
         solution: str = "rfs",
         engine: str = "auto",
         executor: str = "auto",
+        mesh=None,
+        shard_axes: Sequence[str] = ("data",),
         lixel_sharing: bool = False,
         cascade: bool = True,
         drfs_depth: int = 8,
@@ -119,6 +133,14 @@ class TNKDE:
             raise ValueError(f"unknown executor {executor!r}")
         if solution == "drfs" and executor in ("search", "cascade"):
             raise ValueError("search/cascade executors are rfs-only")
+        if mesh is not None:
+            if solution not in ("rfs", "drfs"):
+                raise ValueError("mesh= shards the forest indexes (rfs/drfs)")
+            if engine in ("numpy", "pallas") or executor in ("search", "cascade", "pallas"):
+                raise ValueError(
+                    "the sharded path runs the packed jnp executor "
+                    "(engine='jax'/'auto', executor='packed'/'auto')"
+                )
         if lixel_sharing and solution == "sps":
             raise ValueError("lixel sharing needs an aggregation index (ada/rfs/drfs)")
         t0 = _time.perf_counter()
@@ -150,9 +172,21 @@ class TNKDE:
         # packed-plan default (DESIGN.md §7)
         self.engine = "numpy"
         self._fe = None
+        self.mesh = mesh
+        self.shard_axes = tuple(shard_axes)
         if engine == "pallas":
             executor = "pallas"
-        if solution in ("rfs", "drfs") and engine != "numpy":
+        if mesh is not None:
+            # sharding is explicit: never fall back silently to one host
+            from .distributed import ShardedDynamicEngine, ShardedForestEngine
+
+            self._fe = (
+                ShardedForestEngine(self.index, mesh, self.shard_axes)
+                if solution == "rfs"
+                else ShardedDynamicEngine(self.index, mesh, self.shard_axes)
+            )
+            self.engine = "jax"
+        elif solution in ("rfs", "drfs") and engine != "numpy":
             try:
                 from .rfs import FlatDynamicEngine, FlatForestEngine
 
@@ -200,10 +234,15 @@ class TNKDE:
     def engine_desc(self) -> str:
         """Human-readable backend/executor that actually answers queries,
         e.g. ``'jax/packed'``, ``'pallas/pallas'`` or ``'numpy'`` — what
-        benchmarks and examples print so auto-resolution is never silent."""
+        benchmarks and examples print so auto-resolution is never silent.
+        Sharded engines append ``@shards=N`` (the mesh data-axis extent)."""
         if self._fe is None:
             return "numpy"
-        return f"{self.engine}/{self._fe.executor}"
+        desc = f"{self.engine}/{self._fe.executor}"
+        n_shards = getattr(self._fe, "n_shards", 1)
+        if self.mesh is not None:
+            desc += f"@shards={n_shards}"
+        return desc
 
     @property
     def epoch(self):
@@ -390,6 +429,7 @@ class TNKDE:
             eng1 = self._fe.counters
             self.stats.n_rank_searches += eng1["rank_searches"] - eng0.get("rank_searches", 0)
             self.stats.n_moment_gathers += eng1["moment_gathers"] - eng0.get("moment_gathers", 0)
+            self.stats.bytes_per_shard = self._fe.bytes_per_shard
         self.stats.query_seconds += _time.perf_counter() - t0
         if self.index is not None and hasattr(self.index, "index_bytes"):
             self.stats.index_bytes = self.index.index_bytes  # ADA builds lazily

@@ -289,11 +289,103 @@ def lower_layer_cost(cfg: ModelConfig, shape: ShapeSpec, mesh, rules, attn_impl)
     }
 
 
+def kde_cell(multi_pod: bool, *, compile_prog: bool = True):
+    """Lower (and optionally compile) the sharded packed TN-KDE query
+    program on a production mesh: the KDE analogue of :func:`lower_cell`.
+
+    Shards over ``data`` on the 16x16 pod (16 shards) and over
+    ``(pod, data)`` on the 2x16x16 double pod (32 shards); prints the
+    resolved ``engine_desc`` per mesh so the routing is never silent. The
+    flush program lowered here is byte-for-byte the one
+    ``distributed.ShardedForestEngine.flush_plan`` dispatches — the legacy
+    cascade program is gone.
+    """
+    from repro.core import TNKDE
+    from repro.data.spatial import make_events, make_network
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = ("pod", "data") if multi_pod else ("data",)
+    net = make_network(40, 70, seed=5)
+    ev = make_events(net, 800, seed=6, span_days=10)
+    ts = [2.0 * 86400.0, 5.0 * 86400.0, 8.0 * 86400.0]
+    t0 = time.time()
+    model = TNKDE(
+        net, ev, solution="rfs", mesh=mesh, shard_axes=axes,
+        g=50.0, b_s=600.0, b_t=2.0 * 86400.0,
+    )
+    fe = model._fe
+    res = {
+        "kind": "kde_sharded",
+        "mesh": dict(mesh.shape),
+        "shard_axes": list(axes),
+        "engine_desc": model.engine_desc,
+        "n_shards": int(fe.n_shards),
+        "bytes_per_shard": int(fe.bytes_per_shard),
+        "build_s": time.time() - t0,
+    }
+    wb = fe.window_batch(model.ctx, ts)
+    plan = model._host_plan(None)
+    t1 = time.time()
+    lowered = fe.lower_flush(wb, plan, model.n_lixels)
+    res["lower_s"] = time.time() - t1
+    if compile_prog:
+        t2 = time.time()
+        compiled = lowered.compile()
+        res["compile_s"] = time.time() - t2
+        try:
+            mem = compiled.memory_analysis()
+            res["memory"] = {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+            }
+        except Exception:
+            pass
+        res["collectives"] = collective_bytes(compiled.as_text())
+    return res
+
+
+def kde_main(args):
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for mp in meshes:
+        tag = f"kde__{'pod2' if mp else 'pod1'}"
+        try:
+            res = kde_cell(mp, compile_prog=not args.kde_no_compile)
+            res["ok"] = True
+            coll = res.get("collectives", {}).get("total")
+            print(
+                f"[OK] {tag}: engine={res['engine_desc']} "
+                f"shards={res['n_shards']} "
+                f"bytes/shard={res['bytes_per_shard']/2**20:.2f}MiB "
+                f"lower={res['lower_s']:.1f}s"
+                + (f" compile={res['compile_s']:.1f}s" if "compile_s" in res else "")
+                + (f" coll={coll:.3g}B" if coll is not None else "")
+            )
+        except Exception as e:
+            res = {"kind": "kde_sharded", "mesh": "pod2" if mp else "pod1",
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            failures += 1
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=1)
+    print(f"done; failures={failures}")
+    return 1 if failures else 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument(
+        "--kde", action="store_true",
+        help="lower the sharded packed TN-KDE query program on the "
+        "production meshes instead of the LLM cells",
+    )
+    ap.add_argument("--kde-no-compile", action="store_true",
+                    help="with --kde: stop after lowering (skip XLA compile)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="runs/dryrun")
     ap.add_argument("--profile-train", default="train")
@@ -307,6 +399,8 @@ def main(argv=None):
         help="refresh only the `layer` record of existing cell JSONs",
     )
     args = ap.parse_args(argv)
+    if args.kde:
+        return kde_main(args)
 
     cells = runnable_cells() if args.all else [(args.arch, args.shape)]
     if args.layer_cost_only:

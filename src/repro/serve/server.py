@@ -117,14 +117,22 @@ class TNKDEServer:
         batch_cap: int = 8,
         window_cap: int = 16,
         cache_rows: int = 4096,
+        mesh=None,
+        shard_axes=("data",),
     ):
+        """``mesh`` shards every profile's forest index across the mesh's
+        ``shard_axes`` (DESIGN.md §3): micro-batched, epoch-pinned queries
+        then answer from the sharded packed engines — the MVCC pins work
+        unchanged because the sharded DRFS engine packs per snapshot epoch
+        exactly like the single-host one."""
         profiles = profiles or {"default": ProfileConfig()}
         self.profiles = {
             name: (p if isinstance(p, ProfileConfig) else ProfileConfig(**p))
             for name, p in profiles.items()
         }
+        mesh_kw = {} if mesh is None else dict(mesh=mesh, shard_axes=tuple(shard_axes))
         self.models: Dict[str, TNKDE] = {
-            name: TNKDE(net, events, **cfg.to_kwargs())
+            name: TNKDE(net, events, **mesh_kw, **cfg.to_kwargs())
             for name, cfg in self.profiles.items()
         }
         self.window_cap = int(window_cap)
