@@ -42,12 +42,19 @@ def _emit_dist(scale: float) -> None:
     run_dist_bench(scale=scale, out_json="BENCH_dist.json")
 
 
+def _emit_recovery(scale: float) -> None:
+    from benchmarks.perf_recovery import run_recovery_bench
+
+    run_recovery_bench(scale=scale, out_json="BENCH_recovery.json")
+
+
 #: every BENCH_*.json producer: (filename, callable(scale))
 EMITTERS = [
     ("BENCH_kde.json", _emit_kde),
     ("BENCH_stream.json", _emit_stream),
     ("BENCH_serve.json", _emit_serve),
     ("BENCH_dist.json", _emit_dist),
+    ("BENCH_recovery.json", _emit_recovery),
 ]
 
 
@@ -70,6 +77,14 @@ def _bench_metrics(name: str, rec: dict):
     elif name == "BENCH_serve.json":
         if rec.get("speedup_vs_sequential"):
             out["speedup_vs_sequential"] = float(rec["speedup_vs_sequential"])
+    elif name == "BENCH_recovery.json":
+        # recovery timings are capacity/latency telemetry, not accelerated-
+        # vs-baseline ratios: deliberately NO entries here, so the perf
+        # gate's speedup floors and regression ratios never apply to them.
+        # The bench asserts its own correctness floors (1e-12 equivalence,
+        # epoch match) when it runs; the summary/aggregate rows still show
+        # the file via the generic discovery below.
+        pass
     elif name == "BENCH_dist.json":
         for r in rec.get("rungs", []):
             if not isinstance(r, dict):
@@ -183,7 +198,8 @@ def _headline(rec: dict) -> str:
         if key in rec:
             bits.append(f"{key}={rec[key]}")
     for key in ("speedup_at_W_warm", "speedup_vs_sequential",
-                "recompiles_after_warmup"):
+                "recompiles_after_warmup", "epochs_match",
+                "durability_overhead_frac"):
         if key in rec:
             bits.append(f"{key}={rec[key]}")
     if isinstance(rec.get("rungs"), list):
@@ -226,6 +242,7 @@ def main(argv=None) -> None:
     ap.add_argument("--kde-scale", type=float, default=0.08)
     ap.add_argument("--serve-scale", type=float, default=0.04)
     ap.add_argument("--dist-scale", type=float, default=0.04)
+    ap.add_argument("--recovery-scale", type=float, default=0.04)
     ap.add_argument(
         "--gate",
         action="store_true",
@@ -251,6 +268,7 @@ def main(argv=None) -> None:
             scale = {
                 "BENCH_serve.json": args.serve_scale,
                 "BENCH_dist.json": args.dist_scale,
+                "BENCH_recovery.json": args.recovery_scale,
             }.get(name, args.kde_scale)
             try:
                 emit(scale)

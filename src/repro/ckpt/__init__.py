@@ -1,1 +1,7 @@
-from .checkpoint import CheckpointManager, save_checkpoint, restore_checkpoint, latest_step  # noqa: F401
+from .checkpoint import (  # noqa: F401
+    CheckpointManager,
+    latest_step,
+    load_checkpoint_arrays,
+    restore_checkpoint,
+    save_checkpoint,
+)

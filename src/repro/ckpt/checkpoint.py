@@ -34,7 +34,23 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "load_checkpoint_arrays",
+    "latest_step",
+    "CheckpointManager",
+]
+
+# Test seam for the fault-injection harness (repro.ft.faults): when set, it
+# is invoked at every named stage of the save path and may raise to simulate
+# a process killed at exactly that point. Production never sets it.
+_CRASH_HOOK = None
+
+
+def _crash_point(stage: str, detail: int = 0) -> None:
+    if _CRASH_HOOK is not None:
+        _CRASH_HOOK(stage, detail)
 
 
 def _leaf_paths(tree) -> Dict[str, Any]:
@@ -46,15 +62,40 @@ def _step_dir(base: str, step: int) -> str:
     return os.path.join(base, f"step_{step:09d}")
 
 
+def _is_step_dir(name: str) -> bool:
+    # a ".tmp" staging dir is never a step, even once its COMMIT marker has
+    # been written — only the atomic os.replace into the final name commits
+    return name.startswith("step_") and not name.endswith(".tmp")
+
+
 def latest_step(base: str) -> Optional[int]:
     if not os.path.isdir(base):
         return None
     best = None
     for name in os.listdir(base):
-        if name.startswith("step_") and os.path.exists(os.path.join(base, name, "COMMIT")):
+        if _is_step_dir(name) and os.path.exists(os.path.join(base, name, "COMMIT")):
             s = int(name.split("_")[1])
             best = s if best is None or s > best else best
     return best
+
+
+def _gc_uncommitted(base: str) -> int:
+    """Remove the debris a killed save leaves behind: ``.tmp`` staging dirs
+    and step dirs without a COMMIT marker. Called at the start of every
+    save, so one crash never accumulates garbage across restarts."""
+    removed = 0
+    if not os.path.isdir(base):
+        return removed
+    for name in os.listdir(base):
+        full = os.path.join(base, name)
+        stale_tmp = name.startswith("step_") and name.endswith(".tmp")
+        uncommitted = _is_step_dir(name) and not os.path.exists(
+            os.path.join(full, "COMMIT")
+        )
+        if stale_tmp or uncommitted:
+            shutil.rmtree(full, ignore_errors=True)
+            removed += 1
+    return removed
 
 
 def save_checkpoint(
@@ -88,14 +129,19 @@ def save_checkpoint(
     def write():
         d = _step_dir(base, step)
         tmp = d + ".tmp"
+        _gc_uncommitted(base)
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp, exist_ok=True)
         for idx, (kp, v) in enumerate(flat):
+            _crash_point("array", idx)
             np.save(os.path.join(tmp, f"h0_l{idx:04d}.npy"), v)
+        _crash_point("meta")
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
+        _crash_point("commit")
         with open(os.path.join(tmp, "COMMIT"), "w") as f:
             f.write("ok")
+        _crash_point("replace")
         shutil.rmtree(d, ignore_errors=True)
         os.replace(tmp, d)
         _prune(base, keep_last)
@@ -112,7 +158,7 @@ def _prune(base: str, keep_last: int):
     steps = sorted(
         int(n.split("_")[1])
         for n in os.listdir(base)
-        if n.startswith("step_") and os.path.exists(os.path.join(base, n, "COMMIT"))
+        if _is_step_dir(n) and os.path.exists(os.path.join(base, n, "COMMIT"))
     )
     for s in steps[:-keep_last] if keep_last > 0 else []:
         shutil.rmtree(_step_dir(base, s), ignore_errors=True)
@@ -161,6 +207,32 @@ def restore_checkpoint(
             )
     tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(skeleton), out)
     return tree, step, meta["extras"]
+
+
+def load_checkpoint_arrays(
+    base: str, *, step: Optional[int] = None
+) -> tuple[Dict[str, np.ndarray], int, dict]:
+    """Load a committed step as a flat ``{keystr: ndarray}`` map, no skeleton.
+
+    :func:`restore_checkpoint` validates shapes against a caller-provided
+    skeleton — right for model parameters, impossible for state whose shapes
+    are data-dependent (the DRFS index checkpoints: array lengths follow the
+    streamed event count). This reads the same atomic-COMMIT layout and
+    returns whatever shapes the checkpoint holds, keyed by
+    ``jax.tree_util.keystr`` (a flat dict saved as ``{"x": ...}`` comes back
+    under ``"['x']"``). Returns ``(arrays, step, extras)``.
+    """
+    step = latest_step(base) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {base}")
+    d = _step_dir(base, step)
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    arrays = {
+        leaf["key"]: np.load(os.path.join(d, leaf["file"]))
+        for leaf in meta["leaves"]
+    }
+    return arrays, step, meta["extras"]
 
 
 class CheckpointManager:

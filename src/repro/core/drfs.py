@@ -630,6 +630,58 @@ class DynamicRangeForest(_DrfsQueryView):
         self.revision += 1
         self.pend_revision += 1
 
+    # ----------------------------------------------------- durability (WAL)
+    def state_tree(self) -> dict:
+        """Flat host-array capture of the **sealed** structure — the payload
+        of a ``TNKDE.checkpoint`` (DESIGN.md §8). Callers seal first: the
+        pending buffers are ephemeral by contract (their inserts are in the
+        WAL, so recovery replays them); refusing to snapshot them keeps the
+        checkpoint format one sealed structure, not two.
+
+        Arrays are returned by reference — safe to persist asynchronously,
+        because every mutation rebinds fresh arrays (MVCC) instead of
+        writing in place.
+        """
+        if self._n_pending:
+            raise ValueError("state_tree() requires a sealed forest (seal() first)")
+        tree = {"ptr": self.ptr, "pos": self.pos, "time": self.time, "phi": self.phi}
+        for d, (node_ptr, time_s, cum, ev_idx) in enumerate(self.levels):
+            tree[f"lvl{d}_ptr"] = node_ptr
+            tree[f"lvl{d}_time"] = time_s
+            tree[f"lvl{d}_cum"] = cum
+            tree[f"lvl{d}_idx"] = ev_idx
+        return tree
+
+    def load_state(
+        self, tree: dict, *, depth: int, revision: int, pend_revision: int
+    ) -> None:
+        """Rebind the sealed structure from a :meth:`state_tree` capture.
+
+        The inverse of checkpointing: after this, the forest is exactly the
+        captured sealed state at the captured epoch — replaying the WAL
+        suffix then reproduces the pre-crash state bit-for-bit (mutation is
+        deterministic in the operation sequence).
+        """
+        self.depth = int(depth)
+        self.ptr = tree["ptr"]
+        self.pos = tree["pos"]
+        self.time = tree["time"]
+        self.phi = tree["phi"]
+        self.levels = [
+            (
+                tree[f"lvl{d}_ptr"],
+                tree[f"lvl{d}_time"],
+                tree[f"lvl{d}_cum"],
+                tree[f"lvl{d}_idx"],
+            )
+            for d in range(self.depth + 1)
+        ]
+        self._pend_edge, self._pend_pos, self._pend_time, self._pend_phi = [], [], [], []
+        self._n_pending = 0
+        self._pend_csr = None
+        self.revision = int(revision)
+        self.pend_revision = int(pend_revision)
+
     # ----------------------------------------------------------------- MVCC
     @property
     def epoch(self) -> Tuple[int, int]:

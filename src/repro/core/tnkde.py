@@ -61,6 +61,7 @@ from .plan import build_edge_geometry
 from .rfs import RangeForest
 from .shortest_path import adjacency_csr, bounded_dijkstra
 from .sps import sps_eval_edge
+from . import wal as _wal
 
 __all__ = ["TNKDE", "QueryStats"]
 
@@ -169,21 +170,66 @@ class TNKDE:
         # ---- engine resolution: promote the jit'd flat engines -------------
         # engine='pallas' (or executor='pallas') routes the tree phase of
         # every flush through the Pallas kernels; the jnp executors are the
-        # packed-plan default (DESIGN.md §7)
-        self.engine = "numpy"
-        self._fe = None
+        # packed-plan default (DESIGN.md §7). The requested pair is kept so
+        # the engine can be REBUILT over a mutated index (restore()) or
+        # tripped down the degradation ladder (degrade(), DESIGN.md §8).
         self.mesh = mesh
         self.shard_axes = tuple(shard_axes)
+        self._engine_req = engine
+        self._executor_req = executor
+        self._build_engine()
+        # ---- durability: WAL hookup + config identity (DESIGN.md §8) -------
+        self._wal = None  # attach_wal(); logged-before-mutation when set
+        self._replaying = False  # replay must not re-log its own records
+        self._ckpt_step = 0
+        self._fingerprint = dict(
+            solution=solution,
+            g=float(g),
+            b_s=float(b_s),
+            b_t=float(b_t),
+            spatial_kernel=spatial_kernel,
+            temporal_kernel=temporal_kernel,
+            drfs_depth=int(drfs_depth),
+            drfs_h0=drfs_h0,
+            drfs_exact_leaf=bool(drfs_exact_leaf),
+            n_edges=int(net.n_edges),
+            n_lixels=int(self.lix.n_lixels),
+            n_base_events=int(self.ee.n),
+        )
+        self._adj = adjacency_csr(net)
+        # per-edge event extremes for window-independent LS classification
+        E = net.n_edges
+        self.ev_min_pos = np.full(E, np.inf)
+        self.ev_max_pos = np.full(E, -np.inf)
+        counts = np.diff(self.ee.ptr)
+        eo = np.repeat(np.arange(E), counts)
+        if self.ee.n:
+            np.minimum.at(self.ev_min_pos, eo, self.ee.pos)
+            np.maximum.at(self.ev_max_pos, eo, self.ee.pos)
+        self.stats = QueryStats(build_seconds=_time.perf_counter() - t0)
+        if self.index is not None and hasattr(self.index, "index_bytes"):
+            self.stats.index_bytes = self.index.index_bytes
+
+    def _build_engine(self) -> None:
+        """(Re)bind the flush engine + plan cache for the current
+        ``(engine, executor)`` request. Used at construction, by ``restore``
+        (fresh device/pack caches over the restored index state) and by
+        ``degrade`` (ladder trips); always leaves ``engine``/``_fe``/
+        ``_plan_cache`` consistent."""
+        engine, executor = self._engine_req, self._executor_req
+        solution = self.solution
+        self.engine = "numpy"
+        self._fe = None
         if engine == "pallas":
             executor = "pallas"
-        if mesh is not None:
+        if self.mesh is not None:
             # sharding is explicit: never fall back silently to one host
             from .distributed import ShardedDynamicEngine, ShardedForestEngine
 
             self._fe = (
-                ShardedForestEngine(self.index, mesh, self.shard_axes)
+                ShardedForestEngine(self.index, self.mesh, self.shard_axes)
                 if solution == "rfs"
-                else ShardedDynamicEngine(self.index, mesh, self.shard_axes)
+                else ShardedDynamicEngine(self.index, self.mesh, self.shard_axes)
             )
             self.engine = "jax"
         elif solution in ("rfs", "drfs") and engine != "numpy":
@@ -211,19 +257,34 @@ class TNKDE:
         from .query_plan import PlanCache
 
         self._plan_cache = PlanCache(2)
-        self._adj = adjacency_csr(net)
-        # per-edge event extremes for window-independent LS classification
-        E = net.n_edges
-        self.ev_min_pos = np.full(E, np.inf)
-        self.ev_max_pos = np.full(E, -np.inf)
-        counts = np.diff(self.ee.ptr)
-        eo = np.repeat(np.arange(E), counts)
-        if self.ee.n:
-            np.minimum.at(self.ev_min_pos, eo, self.ee.pos)
-            np.maximum.at(self.ev_max_pos, eo, self.ee.pos)
-        self.stats = QueryStats(build_seconds=_time.perf_counter() - t0)
-        if self.index is not None and hasattr(self.index, "index_bytes"):
-            self.stats.index_bytes = self.index.index_bytes
+
+    def degrade(self) -> Optional[str]:
+        """Trip one rung down the executor degradation ladder
+        ``pallas → jax/packed → numpy`` (DESIGN.md §8).
+
+        Returns the new ``engine_desc``, or ``None`` when already at the
+        numpy floor. The serve tier calls this after repeated engine
+        faults: queries keep answering on the next rung (the host path
+        consumes the same packed plans and MVCC snapshots), trading speed
+        for availability instead of failing the profile outright. Sharded
+        engines fall back to the single-host packed executor first.
+        """
+        if self._fe is None:
+            return None
+        if self.mesh is not None:
+            self.mesh = None
+            self._engine_req, self._executor_req = "jax", "packed"
+        elif self.engine == "pallas":
+            self._engine_req, self._executor_req = "jax", "packed"
+        else:
+            self._engine_req, self._executor_req = "numpy", "auto"
+        try:
+            self._build_engine()
+        except Exception:
+            # a fallback rung that cannot even build lands on the floor
+            self._engine_req, self._executor_req = "numpy", "auto"
+            self._build_engine()
+        return self.engine_desc
 
     # ------------------------------------------------------------------ API
     @property
@@ -266,9 +327,13 @@ class TNKDE:
         return None
 
     def insert(self, events: Events) -> None:
-        """Streaming insertion (DRFS only, §5)."""
+        """Streaming insertion (DRFS only, §5). With a WAL attached, the
+        batch is fsync'd to the log **before** any in-memory mutation —
+        a crash at any later instant replays it (DESIGN.md §8)."""
         if self.solution != "drfs":
             raise ValueError("insert() requires solution='drfs'")
+        if self._wal is not None and not self._replaying:
+            self._wal.append_insert(events)
         net = self.net
         pos = np.clip(events.pos, 0.0, net.edge_len[events.edge_id])
         from .aggregation import MomentContext  # noqa: F401 (doc pointer)
@@ -300,6 +365,179 @@ class TNKDE:
         self.ee = merge_edge_events(net, self.ee, events)
         np.minimum.at(self.ev_min_pos, events.edge_id, pos)
         np.maximum.at(self.ev_max_pos, events.edge_id, pos)
+
+    # ------------------------------------------- durability (DESIGN.md §8)
+    def attach_wal(self, wal) -> None:
+        """Log every subsequent mutation (``insert``/``seal``/``extend``) to
+        ``wal`` before it takes effect in memory. DRFS only — the static
+        solutions have no mutations to log."""
+        if self.solution != "drfs":
+            raise ValueError("attach_wal() requires solution='drfs'")
+        self._wal = wal
+
+    def seal(self) -> None:
+        """Explicit seal, durably logged when a WAL is attached. The
+        *automatic* geometric seal inside ``index.insert`` is intentionally
+        not logged: its trigger is a pure function of event counts, so
+        replaying the logged inserts re-fires it at the same points."""
+        if self.solution != "drfs":
+            raise ValueError("seal() requires solution='drfs'")
+        if self._wal is not None and not self._replaying:
+            self._wal.append_marker(_wal.KIND_SEAL)
+        self.index.seal()
+
+    def extend(self) -> None:
+        """Add one index depth level (Algorithm 4), durably logged."""
+        if self.solution != "drfs":
+            raise ValueError("extend() requires solution='drfs'")
+        if self._wal is not None and not self._replaying:
+            self._wal.append_marker(_wal.KIND_EXTEND)
+        self.index.extend()
+
+    def checkpoint(
+        self,
+        ckpt_dir: str,
+        *,
+        step: Optional[int] = None,
+        keep_last: int = 3,
+        blocking: bool = True,
+    ) -> int:
+        """Persist the sealed index through the atomic-COMMIT checkpoint
+        layout (``repro.ckpt``); returns the step written.
+
+        Seals first (logged, so a crash *during* the save still replays
+        consistently from the previous checkpoint), snapshots the index
+        state tree plus the planner's per-edge extremes, then — once the
+        save committed — rotates the WAL and prunes segments the new
+        checkpoint fully covers. With ``blocking=False`` the arrays are
+        captured by reference (safe: MVCC rebinds, never overwrites) and
+        written on a worker thread; rotation still happens now, pruning is
+        deferred to the next blocking checkpoint.
+        """
+        if self.solution != "drfs":
+            raise ValueError("checkpoint() requires solution='drfs'")
+        from ..ckpt import save_checkpoint
+
+        th = getattr(self, "_ckpt_thread", None)
+        if th is not None:
+            th.join()
+            self._ckpt_thread = None
+        self.seal()
+        if step is not None:
+            seq = int(step)  # coordinated checkpoint: the server picks the seq
+        elif self._wal is not None:
+            seq = self._wal.last_seq
+        else:
+            seq = self._ckpt_step + 1
+        tree = self.index.state_tree()
+        extras = {
+            "seq": int(seq),
+            "depth": int(self.index.depth),
+            "revision": int(self.index.revision),
+            "pend_revision": int(self.index.pend_revision),
+            "ee_t_min": float(self.ee.t_min),
+            "ee_t_max": float(self.ee.t_max),
+            "n_events": int(self.index.n_sealed),
+            "fingerprint": self._fingerprint,
+        }
+        self._ckpt_thread = save_checkpoint(
+            ckpt_dir, seq, tree, extras=extras, blocking=blocking, keep_last=keep_last
+        )
+        self._ckpt_step = seq
+        if self._wal is not None:
+            self._wal.rotate()
+            if blocking:
+                self._wal.prune(seq)
+        return seq
+
+    def restore(self, ckpt_dir=None, *, wal=None, attach: bool = True):
+        """Crash recovery: rebind the latest committed checkpoint (if any),
+        then replay the WAL suffix past its sequence number.
+
+        Call on a freshly-constructed model with the *same* configuration
+        and base events as the crashed process — enforced via a config
+        fingerprint stored in the checkpoint. With no committed checkpoint
+        the whole log replays against the seed state. ``attach=True`` keeps
+        logging to ``wal`` afterwards, so the recovered process is itself
+        durable. Returns a :class:`repro.core.wal.RecoveryReport`.
+        """
+        if self.solution != "drfs":
+            raise ValueError("restore() requires solution='drfs'")
+        t0 = _time.perf_counter()
+        step = None
+        seq0 = 0
+        arrays = None
+        if ckpt_dir is not None:
+            from ..ckpt import load_checkpoint_arrays
+
+            try:
+                arrays, step, extras = load_checkpoint_arrays(ckpt_dir)
+            except FileNotFoundError:
+                arrays = None  # crashed before the first checkpoint committed
+        if arrays is not None:
+            fp = extras.get("fingerprint")
+            if fp != self._fingerprint:
+                raise ValueError(
+                    "checkpoint fingerprint mismatch: the checkpoint was taken "
+                    f"under a different configuration ({fp!r} != "
+                    f"{self._fingerprint!r})"
+                )
+            # load_checkpoint_arrays keys by jax keystr: "['ptr']" -> "ptr"
+            tree = {k[2:-2]: v for k, v in arrays.items()}
+            self.index.load_state(
+                tree,
+                depth=extras["depth"],
+                revision=extras["revision"],
+                pend_revision=extras["pend_revision"],
+            )
+            # the sealed index arrays ARE the canonical (edge, time)-sorted
+            # event set — rebind the planner's view from them by reference
+            from .events import EdgeEvents
+
+            self.ee = EdgeEvents(
+                ptr=self.index.ptr,
+                pos=self.index.pos,
+                time=self.index.time,
+                t_min=float(extras["ee_t_min"]),
+                t_max=float(extras["ee_t_max"]),
+            )
+            E = self.net.n_edges
+            self.ev_min_pos = np.full(E, np.inf)
+            self.ev_max_pos = np.full(E, -np.inf)
+            eo = np.repeat(np.arange(E), np.diff(self.index.ptr))
+            if self.index.n_sealed:
+                np.minimum.at(self.ev_min_pos, eo, self.index.pos)
+                np.maximum.at(self.ev_max_pos, eo, self.index.pos)
+            seq0 = int(extras["seq"])
+            self._ckpt_step = step
+            self._build_engine()  # fresh pack/plan caches over restored state
+        report = _wal.RecoveryReport(
+            restored_step=step,
+            from_seq=seq0,
+            to_seq=seq0,
+            n_truncated_bytes=wal.truncated_bytes if wal is not None else 0,
+            restore_seconds=_time.perf_counter() - t0,
+        )
+        if wal is not None:
+            t1 = _time.perf_counter()
+            self._replaying = True
+            try:
+                for rec in wal.records(after_seq=seq0):
+                    if rec.kind == _wal.KIND_INSERT:
+                        self.insert(rec.events)
+                        report.n_events += rec.events.n
+                    elif rec.kind == _wal.KIND_SEAL:
+                        self.index.seal()
+                    else:
+                        self.index.extend()
+                    report.n_records += 1
+                    report.to_seq = rec.seq
+            finally:
+                self._replaying = False
+            report.replay_seconds = _time.perf_counter() - t1
+            if attach:
+                self._wal = wal
+        return report
 
     def edge_geometries(self):
         """Yield the window-independent EdgeGeometry of every query edge with

@@ -1,2 +1,8 @@
 from .elastic import ElasticPlan, plan_degraded_mesh  # noqa: F401
+from .faults import (  # noqa: F401
+    KillPoint,
+    crash_checkpoint_save,
+    inject_query_faults,
+    tear_wal_tail,
+)
 from .watchdog import StepWatchdog, PreemptionHandler  # noqa: F401

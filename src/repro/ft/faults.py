@@ -1,0 +1,133 @@
+"""Deterministic fault injection (DESIGN.md §8).
+
+The injectors emulate, without any real process mayhem, exactly the failure
+modes the durability + serving layers claim to survive:
+
+* :func:`crash_checkpoint_save` — kill the process at a *named stage* of the
+  checkpoint write path (before the Nth array, before meta.json, before or
+  after COMMIT-in-staging). Drives the "a save killed anywhere leaves
+  ``latest_step`` at the previous commit" property test.
+* :func:`tear_wal_tail` — chop or scribble bytes at the tail of the last WAL
+  segment, the footprint of a crash mid-append.
+* :func:`inject_query_faults` — wrap a model's ``query`` so the Nth engine
+  pass raises (:class:`~repro.serve.errors.EngineFaultError`, optionally
+  transient) and/or stalls for ``slow_s`` — drives the serve tier's retry,
+  degradation-ladder and watchdog paths.
+
+Everything is plain-Python and in-process so the property tests stay fast;
+the *actual* process-death path is covered by the subprocess crash smoke in
+``tests/test_recovery.py`` (``os._exit`` mid-stream, then recover).
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import time
+from typing import Callable, Iterable, Optional, Set
+
+__all__ = [
+    "KillPoint",
+    "crash_checkpoint_save",
+    "inject_query_faults",
+    "tear_wal_tail",
+]
+
+
+class KillPoint(BaseException):
+    """Raised by the checkpoint crash hook to emulate sudden process death.
+
+    Deliberately a ``BaseException``: the code under test must not be able
+    to swallow it with a routine ``except Exception`` — a real SIGKILL
+    wouldn't be catchable either.
+    """
+
+    def __init__(self, stage: str, detail: int = 0):
+        super().__init__(f"injected kill at checkpoint stage {stage!r}[{detail}]")
+        self.stage = stage
+        self.detail = detail
+
+
+@contextlib.contextmanager
+def crash_checkpoint_save(stage: str, detail: int = 0):
+    """Arm the ``repro.ckpt`` crash seam: the next save raises
+    :class:`KillPoint` when it reaches ``stage`` (``'array'``/``'meta'``/
+    ``'commit'``/``'replace'``; ``detail`` selects the array index)."""
+    from repro.ckpt import checkpoint as _ck
+
+    def hook(s: str, d: int = 0) -> None:
+        if s == stage and d == detail:
+            raise KillPoint(s, d)
+
+    prev = _ck._CRASH_HOOK
+    _ck._CRASH_HOOK = hook
+    try:
+        yield
+    finally:
+        _ck._CRASH_HOOK = prev
+
+
+def tear_wal_tail(wal_dir: str, nbytes: int = 16, *, scribble: bool = False) -> str:
+    """Damage the tail of the LAST segment — what a crash mid-append leaves.
+
+    ``scribble=False`` truncates ``nbytes`` off the end (short final
+    record); ``scribble=True`` overwrites the last ``nbytes`` with garbage
+    (bad CRC). Returns the damaged segment's path.
+    """
+    segs = sorted(
+        n for n in os.listdir(wal_dir) if n.startswith("seg_") and n.endswith(".wal")
+    )
+    if not segs:
+        raise FileNotFoundError(f"no WAL segments under {wal_dir}")
+    path = os.path.join(wal_dir, segs[-1])
+    size = os.path.getsize(path)
+    n = min(int(nbytes), size)
+    with open(path, "rb+") as f:
+        if scribble:
+            f.seek(size - n)
+            f.write(b"\xde\xad" * ((n + 1) // 2))
+        else:
+            f.truncate(size - n)
+    return path
+
+
+def inject_query_faults(
+    model,
+    *,
+    fail_on: Iterable[int] = (),
+    transient: bool = False,
+    slow_on: Iterable[int] = (),
+    slow_s: float = 0.0,
+    exc_factory: Optional[Callable[[], Exception]] = None,
+) -> Callable[[], int]:
+    """Wrap ``model.query`` (instance attribute shadowing the bound method)
+    so call number ``i`` (0-based) raises when ``i in fail_on`` and sleeps
+    ``slow_s`` first when ``i in slow_on``. Counts every call — including
+    the serve tier's retries, which is how the retry tests observe them.
+    Returns a zero-arg callable reporting the call count so far.
+
+    Survives ``TNKDE.degrade``: the wrapper holds the bound method, whose
+    ``self`` is the model, and the model's engine is re-resolved per call —
+    after a ladder trip the same wrapper drives the degraded engine.
+    """
+    fail_set: Set[int] = set(int(i) for i in fail_on)
+    slow_set: Set[int] = set(int(i) for i in slow_on)
+    inner = model.query  # bound method (class attribute lookup)
+    calls = [0]
+
+    def query(ts, **kw):
+        i = calls[0]
+        calls[0] += 1
+        if i in slow_set and slow_s > 0:
+            time.sleep(slow_s)
+        if i in fail_set:
+            if exc_factory is not None:
+                raise exc_factory()
+            from repro.serve.errors import EngineFaultError
+
+            raise EngineFaultError(
+                f"injected engine fault on call {i}", transient=transient
+            )
+        return inner(ts, **kw)
+
+    model.query = query
+    return lambda: calls[0]

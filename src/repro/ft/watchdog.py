@@ -30,7 +30,10 @@ class StepWatchdog:
 
     def step_end(self) -> bool:
         """Record a step; returns True if this step looked like a straggler."""
+        if self._t0 is None:
+            return False  # unmatched step_end (e.g. fault path skipped start)
         dt = time.perf_counter() - self._t0
+        self._t0 = None
         straggler = False
         if dt > self.hard_timeout:
             straggler = True

@@ -15,6 +15,14 @@ Two workloads, selected with --workload:
 
   PYTHONPATH=src python -m repro.launch.serve --workload tnkde --requests 12
   repro-serve --requests 24 --rate 10 --batch-cap 8      (console entry point)
+
+Durability (DESIGN.md §8): ``--wal-dir`` logs every insert before it is
+applied, ``--ckpt-dir`` writes a coordinated atomic checkpoint when the run
+completes, and ``--restore`` recovers a crashed server (checkpoint + WAL
+replay) before serving. ``--deadline``/``--max-queued`` bound the work:
+
+  repro-serve --wal-dir runs/wal --ckpt-dir runs/ckpt            # durable
+  repro-serve --wal-dir runs/wal --ckpt-dir runs/ckpt --restore  # recover
 """
 from __future__ import annotations
 
@@ -39,6 +47,11 @@ def serve_tnkde(
     rate_hz=None,
     batch_cap: int = 8,
     sequential: bool = False,
+    wal_dir=None,
+    ckpt_dir=None,
+    restore: bool = False,
+    deadline_s=None,
+    max_queued=None,
     seed: int = 0,
     log_fn=print,
 ):
@@ -78,6 +91,11 @@ def serve_tnkde(
 
     t_build = time.perf_counter()
     if sequential:
+        if wal_dir or ckpt_dir or restore:
+            raise ValueError(
+                "durability flags (--wal-dir/--ckpt-dir/--restore) require "
+                "the server path; drop --sequential"
+            )
         model = TNKDE(net, base, **prof.to_kwargs())
         log_fn(
             f"[serve-tnkde] sequential dataset={dataset} x{scale} |V|={meta['V']} "
@@ -86,12 +104,33 @@ def serve_tnkde(
         )
         rep = run_sequential(model, workload)
     else:
-        server = TNKDEServer(net, base, {"default": prof}, batch_cap=batch_cap)
+        server = TNKDEServer(
+            net, base, {"default": prof}, batch_cap=batch_cap,
+            default_deadline_s=deadline_s, max_queued=max_queued,
+        )
+        if wal_dir:
+            from repro.core import WriteAheadLog
+
+            wal = WriteAheadLog(wal_dir)
+            if restore:
+                rr = server.restore(ckpt_dir, wal=wal, attach=True)
+                log_fn(
+                    f"[serve-tnkde] recovered: ckpt step={rr.restored_step} "
+                    f"replayed {rr.n_records} records / {rr.n_events} events "
+                    f"(seq {rr.from_seq}->{rr.to_seq}, torn "
+                    f"{rr.n_truncated_bytes}B) in "
+                    f"{rr.restore_seconds + rr.replay_seconds:.3f}s"
+                )
+            else:
+                server.attach_wal(wal)
+        elif restore:
+            raise ValueError("--restore needs --wal-dir (the log to replay)")
         log_fn(
             f"[serve-tnkde] dataset={dataset} x{scale} |V|={meta['V']} |E|={meta['E']} "
             f"N={meta['N']} lixels={server.models['default'].n_lixels} "
             f"build={time.perf_counter()-t_build:.2f}s batch_cap={batch_cap} "
             f"rate={'saturated' if rate_hz is None else f'{rate_hz:g}/s'}"
+            + (f" wal={wal_dir}" if wal_dir else "")
         )
         rep = run_server(server, workload, rate_hz=rate_hz, seed=seed + 11)
         s = server.stats
@@ -100,12 +139,25 @@ def serve_tnkde(
             f"windows req={s.n_windows_requested} eval={s.n_windows_evaluated} "
             f"cache hits={server.cache.hits} misses={server.cache.misses}"
         )
+        if s.n_shed or s.n_expired or s.n_errors:
+            log_fn(
+                f"[serve-tnkde] degraded service: shed={s.n_shed} "
+                f"expired={s.n_expired} errors={s.n_errors} "
+                f"(engine={server.models['default'].engine_desc})"
+            )
+        if ckpt_dir:
+            seq = server.checkpoint(ckpt_dir)
+            log_fn(f"[serve-tnkde] checkpointed {ckpt_dir} @ seq {seq}")
     summ = rep.summary()
-    log_fn(
-        f"[serve-tnkde] done: {summ['throughput_rps']:.2f} req/s "
-        f"p50={summ['p50_ms']:.1f}ms p95={summ['p95_ms']:.1f}ms "
-        f"p99={summ['p99_ms']:.1f}ms"
-    )
+    if "p50_ms" in summ:
+        log_fn(
+            f"[serve-tnkde] done: {summ['throughput_rps']:.2f} req/s "
+            f"p50={summ['p50_ms']:.1f}ms p95={summ['p95_ms']:.1f}ms "
+            f"p99={summ['p99_ms']:.1f}ms"
+        )
+    else:  # every request shed or errored: nothing was answered ok
+        log_fn(f"[serve-tnkde] done: no requests answered ok "
+               f"(shed={summ.get('n_shed', 0)} errors={summ.get('n_errors', 0)})")
     return list(rep.latencies)
 
 
@@ -155,6 +207,22 @@ def main(argv=None):
                     help="max requests coalesced into one micro-batch")
     ap.add_argument("--sequential", action="store_true",
                     help="pre-subsystem one-request-at-a-time loop (baseline)")
+    ap.add_argument("--wal-dir", default=None,
+                    help="write-ahead log dir: inserts are durable before "
+                         "they apply (DESIGN.md §8)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="write a coordinated checkpoint here when the run "
+                         "completes")
+    ap.add_argument("--restore", action="store_true",
+                    help="recover a crashed server first: restore the latest "
+                         "committed checkpoint (if any) and replay the WAL "
+                         "suffix")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline (seconds); expired requests "
+                         "get a typed error instead of an engine pass")
+    ap.add_argument("--max-queued", type=int, default=None,
+                    help="bound the admission queue; beyond it submissions "
+                         "are shed with a retryable queue_full error")
     ap.add_argument("--arch", default="qwen2.5-3b")
     args = ap.parse_args(argv)
     if args.workload == "tnkde":
@@ -162,6 +230,9 @@ def main(argv=None):
             n_requests=args.requests, dataset=args.dataset, scale=args.scale,
             rate_hz=args.rate, batch_cap=args.batch_cap,
             sequential=args.sequential,
+            wal_dir=args.wal_dir, ckpt_dir=args.ckpt_dir,
+            restore=args.restore, deadline_s=args.deadline,
+            max_queued=args.max_queued,
         )
     else:
         serve_lm(arch=args.arch)

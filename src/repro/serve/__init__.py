@@ -8,6 +8,13 @@ an epoch-keyed result cache (`cache`), the `TNKDEServer` control loop
 `benchmarks/perf_serve.py` and `repro.launch.serve` drive.
 """
 from .cache import ResultCache
+from .errors import (
+    DeadlineExceeded,
+    EngineFaultError,
+    QueueFull,
+    ServeError,
+    ServeRejected,
+)
 from .loadgen import (
     InsertItem,
     LoadReport,
@@ -29,16 +36,21 @@ from .server import (
 )
 
 __all__ = [
+    "DeadlineExceeded",
+    "EngineFaultError",
     "InsertItem",
     "LoadReport",
     "MicroBatch",
     "MicroBatcher",
     "ProfileConfig",
     "QueryItem",
+    "QueueFull",
     "Request",
     "RequestStats",
     "ResultCache",
     "Response",
+    "ServeError",
+    "ServeRejected",
     "ServerStats",
     "TNKDEServer",
     "jit_entries",

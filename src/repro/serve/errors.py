@@ -1,0 +1,72 @@
+"""Typed serving failures (DESIGN.md §8).
+
+Two failure channels, deliberately distinct:
+
+* **admission rejections** are *exceptions* (:class:`ServeRejected`
+  subclasses) raised by ``TNKDEServer.submit`` — the request never entered
+  a queue, so there is no Response to carry the error. Load shedding
+  (:class:`QueueFull`) is the bounded-queue backpressure signal.
+* **post-admission failures** are *error Responses*: every admitted request
+  gets exactly one Response, ``ok=False`` ones carrying a
+  :class:`ServeError` (deadline expiry, an engine fault after retry, an
+  internal pump fault). The pump itself never raises — a fault in one
+  micro-batch must not take down the serving loop or the other profiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = [
+    "DeadlineExceeded",
+    "EngineFaultError",
+    "QueueFull",
+    "ServeError",
+    "ServeRejected",
+]
+
+# error codes carried by ServeError (stable strings; clients switch on them)
+DEADLINE_EXCEEDED = "deadline_exceeded"
+ENGINE_FAULT = "engine_fault"
+INTERNAL = "internal"
+
+
+@dataclasses.dataclass
+class ServeError:
+    """The error payload of an ``ok=False`` Response."""
+
+    code: str  # one of the module-level code constants
+    message: str
+    retryable: bool = False  # a resubmit may succeed (transient fault, shed)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ServeRejected(RuntimeError):
+    """Base of admission-time rejections: the request was NOT queued."""
+
+    code = INTERNAL
+    retryable = False
+
+
+class QueueFull(ServeRejected):
+    """Load shed: the scheduler's bounded queue is at ``max_queued``."""
+
+    code = "queue_full"
+    retryable = True
+
+
+class DeadlineExceeded(ServeRejected):
+    """The request's deadline was already in the past at admission."""
+
+    code = DEADLINE_EXCEEDED
+    retryable = False
+
+
+class EngineFaultError(RuntimeError):
+    """Raised by fault injectors (repro.ft.faults) to emulate an engine
+    failure; ``transient=True`` models a fault a single retry clears."""
+
+    def __init__(self, message: str = "injected engine fault", *, transient: bool = False):
+        super().__init__(message)
+        self.transient = transient

@@ -108,11 +108,16 @@ def summarize(latencies: np.ndarray, wall_seconds: float) -> dict:
 
 @dataclasses.dataclass
 class LoadReport:
-    latencies: np.ndarray  # one entry per QueryItem, workload order
+    latencies: np.ndarray  # one entry per ANSWERED QueryItem, workload order
     wall_seconds: float
+    n_shed: int = 0  # admissions rejected (QueueFull load shedding)
+    n_errors: int = 0  # ok=False responses (deadline expiry, engine faults)
 
     def summary(self) -> dict:
-        return summarize(self.latencies, self.wall_seconds)
+        out = summarize(self.latencies, self.wall_seconds)
+        out["n_shed"] = int(self.n_shed)
+        out["n_errors"] = int(self.n_errors)
+        return out
 
 
 def run_sequential(model, workload: List[WorkItem]) -> LoadReport:
@@ -139,18 +144,27 @@ def run_server(
     sleep_fn=time.sleep,
 ) -> LoadReport:
     """Drive the server with the workload; see module docstring for policy."""
+    from .errors import ServeRejected
+
     n = len(workload)
     arrivals = make_arrivals(n, rate_hz, seed=seed)
     lat: dict = {}
+    n_shed = 0
+    n_errors = 0
     t0 = time.perf_counter()
 
     def now() -> float:
         return time.perf_counter() - t0
 
     def handle(responses):
+        nonlocal n_errors
         t = now()
         for r in responses:
-            lat[r.tag] = t - arrivals[r.tag]
+            if getattr(r, "ok", True):
+                lat[r.tag] = t - arrivals[r.tag]
+            else:
+                n_errors += 1  # answered, but with a typed error — not a
+                # latency sample (there is no completed result to time)
 
     i = 0
     while i < n or server.n_queued:
@@ -160,9 +174,12 @@ def run_server(
             if isinstance(item, InsertItem):
                 server.insert(item.events)
             else:
-                server.submit(
-                    item.ts, profile=item.profile, lixels=item.lixels, tag=i
-                )
+                try:
+                    server.submit(
+                        item.ts, profile=item.profile, lixels=item.lixels, tag=i
+                    )
+                except ServeRejected:
+                    n_shed += 1  # load shed at admission: no response coming
             i += 1
             # serve a filled batch before admitting more — saturated mode
             # would otherwise admit the whole backlog first, fragmenting
@@ -190,7 +207,9 @@ def run_server(
         if dt > 0:
             sleep_fn(min(dt, 0.01))
     wall = now()
+    # only answered requests have samples: shed ones never got a Response,
+    # errored ones got an ok=False Response and are counted, not timed
     out = np.asarray(
-        [lat[j] for j in range(n) if isinstance(workload[j], QueryItem)]
+        [lat[j] for j in range(n) if isinstance(workload[j], QueryItem) and j in lat]
     )
-    return LoadReport(out, wall)
+    return LoadReport(out, wall, n_shed=n_shed, n_errors=n_errors)

@@ -53,6 +53,10 @@ class Request:
     lixels: Optional[np.ndarray]  # lixel subset (None = full heatmap)
     tag: object  # caller correlation handle (load generators use it)
     arrival: float  # perf_counter timestamp at admission
+    # absolute perf_counter instant after which the request is worthless;
+    # the server answers it with a deadline_exceeded error Response instead
+    # of spending an engine pass on it (None = no deadline)
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -74,11 +78,23 @@ class MicroBatch:
 
 
 class MicroBatcher:
-    def __init__(self, batch_cap: int = 8, window_cap: int = 16):
+    def __init__(
+        self,
+        batch_cap: int = 8,
+        window_cap: int = 16,
+        max_queued: Optional[int] = None,
+    ):
         if batch_cap < 1 or window_cap < 1:
             raise ValueError("batch_cap and window_cap must be >= 1")
+        if max_queued is not None and max_queued < 1:
+            raise ValueError("max_queued must be >= 1 (or None = unbounded)")
         self.batch_cap = int(batch_cap)
         self.window_cap = int(window_cap)
+        # total queued-request bound across ALL (profile, epoch) queues —
+        # the load-shedding backstop (DESIGN.md §8): beyond it, admission
+        # raises QueueFull instead of letting the backlog (and every queued
+        # request's pinned snapshot) grow without limit
+        self.max_queued = None if max_queued is None else int(max_queued)
         # (profile, epoch) -> queued requests; insertion order = age order
         self._queues: "OrderedDict[Tuple[str, Tuple[int, int]], List[Request]]" = (
             OrderedDict()
@@ -87,6 +103,12 @@ class MicroBatcher:
 
     # ------------------------------------------------------------ admission
     def admit(self, req: Request, snapshot: object) -> None:
+        if self.max_queued is not None and self.n_queued >= self.max_queued:
+            from .errors import QueueFull
+
+            raise QueueFull(
+                f"scheduler at max_queued={self.max_queued}; shedding request"
+            )
         key = (req.profile, req.epoch)
         self._queues.setdefault(key, []).append(req)
         self._snaps.setdefault(key, snapshot)

@@ -21,15 +21,21 @@ keeps a long micro-batch consistent while inserts land between pumps.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import TNKDE
+from repro.core import wal as walmod
 from repro.core.events import Events
+from repro.ft.watchdog import StepWatchdog
 
+from . import errors as _errors
 from .cache import ResultCache
+from .errors import ServeError, ServeRejected
 from .scheduler import MicroBatch, MicroBatcher, Request, window_class
 
 __all__ = [
@@ -89,8 +95,11 @@ class RequestStats:
 class Response:
     id: int
     tag: object
-    heat: np.ndarray  # [len(ts), L] (or [len(ts), len(lixels)])
+    heat: Optional[np.ndarray]  # [len(ts), L] (or [len(ts), len(lixels)]);
+    # None on an error response — check ``ok`` before touching it
     stats: RequestStats
+    ok: bool = True
+    error: Optional[ServeError] = None
 
 
 @dataclasses.dataclass
@@ -102,6 +111,14 @@ class ServerStats:
     n_rows_computed: int = 0  # distinct (epoch, center) rows evaluated
     queue_seconds: float = 0.0
     service_seconds: float = 0.0
+    # ---- fault-tolerance counters (DESIGN.md §8) ----
+    n_shed: int = 0  # admissions rejected at max_queued (QueueFull)
+    n_expired: int = 0  # requests whose deadline passed before execution
+    n_errors: int = 0  # ok=False responses issued
+    n_engine_faults: int = 0  # engine passes that raised
+    n_retries: int = 0  # transient faults retried (once, after backoff)
+    n_degradations: int = 0  # executor-ladder trips (pallas->jax->numpy)
+    n_stragglers: int = 0  # flushes the step watchdog flagged as slow
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -119,6 +136,11 @@ class TNKDEServer:
         cache_rows: int = 4096,
         mesh=None,
         shard_axes=("data",),
+        max_queued: Optional[int] = None,
+        default_deadline_s: Optional[float] = None,
+        degrade_after: int = 2,
+        retry_backoff_s: float = 0.01,
+        watchdog: Optional[StepWatchdog] = None,
     ):
         """``mesh`` shards every profile's forest index across the mesh's
         ``shard_axes`` (DESIGN.md §3): micro-batched, epoch-pinned queries
@@ -136,10 +158,21 @@ class TNKDEServer:
             for name, cfg in self.profiles.items()
         }
         self.window_cap = int(window_cap)
-        self.scheduler = MicroBatcher(batch_cap=batch_cap, window_cap=window_cap)
+        self.scheduler = MicroBatcher(
+            batch_cap=batch_cap, window_cap=window_cap, max_queued=max_queued
+        )
         self.cache = ResultCache(cache_rows)
         self.stats = ServerStats()
         self._next_id = 0
+        # ---- fault envelope (DESIGN.md §8) ----
+        self.default_deadline_s = default_deadline_s
+        self.degrade_after = int(degrade_after)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.watchdog = watchdog if watchdog is not None else StepWatchdog()
+        self._fault_streak: Dict[str, int] = {}
+        # ---- durability (server-level WAL + coordinated checkpoints) ----
+        self._wal = None
+        self._ckpt_step = 0
 
     # ------------------------------------------------------------ admission
     def submit(
@@ -149,11 +182,22 @@ class TNKDEServer:
         profile: str = "default",
         lixels: Optional[np.ndarray] = None,
         tag: object = None,
+        deadline_s: Optional[float] = None,
     ) -> int:
         """Admit a query; returns its request id. The index state is pinned
         NOW — mutations issued between admission and the flush are invisible
-        to this request (snapshot isolation)."""
+        to this request (snapshot isolation).
+
+        ``deadline_s`` (default: the server's ``default_deadline_s``) bounds
+        the request's useful lifetime from admission: a request still queued
+        past it is answered with a ``deadline_exceeded`` error Response
+        instead of an engine pass. Raises :class:`~repro.serve.errors.
+        QueueFull` when the scheduler is at ``max_queued`` (load shedding —
+        the request was NOT admitted and gets no Response).
+        """
         model = self.models[profile]  # KeyError = unknown profile
+        arrival = time.perf_counter()
+        ttl = deadline_s if deadline_s is not None else self.default_deadline_s
         req = Request(
             id=self._next_id,
             profile=profile,
@@ -161,10 +205,15 @@ class TNKDEServer:
             epoch=model.epoch,
             lixels=None if lixels is None else np.asarray(lixels, np.int64),
             tag=tag,
-            arrival=time.perf_counter(),
+            arrival=arrival,
+            deadline=None if ttl is None else arrival + float(ttl),
         )
+        try:
+            self.scheduler.admit(req, model.snapshot())
+        except ServeRejected:
+            self.stats.n_shed += 1
+            raise
         self._next_id += 1
-        self.scheduler.admit(req, model.snapshot())
         return req.id
 
     @property
@@ -185,6 +234,11 @@ class TNKDEServer:
                 f"insert() requires every profile to be streaming (drfs); "
                 f"static profiles: {bad}"
             )
+        if self._wal is not None:
+            # logged ONCE at server level before any model mutates: every
+            # profile consumes the same mutation stream, so one record set
+            # recovers them all (the models themselves stay log-less)
+            self._wal.append_insert(events)
         for name, model in self.models.items():
             model.insert(events)
             floor = self.scheduler.oldest_epoch(name)
@@ -194,6 +248,10 @@ class TNKDEServer:
 
     def seal(self) -> None:
         """Force-merge pending buffers on every streaming profile."""
+        if self._wal is not None and any(
+            m.solution == "drfs" for m in self.models.values()
+        ):
+            self._wal.append_marker(walmod.KIND_SEAL)
         for model in self.models.values():
             if model.solution == "drfs":
                 model.index.seal()
@@ -202,19 +260,131 @@ class TNKDEServer:
     def pump(self, *, force: bool = True) -> List[Response]:
         """Form and execute micro-batches; returns completed responses.
         ``force=False`` executes only batches that reached a cap (the load
-        generator's linger policy decides when to force a drain)."""
+        generator's linger policy decides when to force a drain).
+
+        Never raises: every admitted request in a popped batch gets exactly
+        one Response — engine faults, deadline expiry and unexpected
+        ``_execute`` bugs all convert to ``ok=False`` responses, so one bad
+        batch cannot take down the serving loop or the other profiles.
+        """
         responses: List[Response] = []
         for batch in self.scheduler.form_batches(force=force):
-            responses.extend(self._execute(batch))
+            try:
+                responses.extend(self._execute(batch))
+            except Exception as e:  # defense in depth: _execute already
+                # converts engine faults; this catches its own bugs. Safe
+                # against double-answering: _execute assembles its response
+                # list and returns it at the end, so a raise means NO
+                # response from this batch was delivered.
+                t = time.perf_counter()
+                err = ServeError(
+                    code=_errors.INTERNAL, message=f"{type(e).__name__}: {e}"
+                )
+                responses.extend(
+                    self._error_response(r, batch, t, err) for r in batch.requests
+                )
+                self.stats.n_batches += 1
         return responses
+
+    def _error_response(
+        self, req: Request, batch: MicroBatch, t_start: float, err: ServeError
+    ) -> Response:
+        stats = RequestStats(
+            epoch=batch.epoch,
+            queue_seconds=t_start - req.arrival,
+            service_seconds=0.0,
+            batch_size=len(batch.requests),
+            windows_evaluated=0,
+            cache_hits=0,
+            cache_misses=len(req.ts),
+            atoms=0,
+        )
+        self.stats.n_requests += 1
+        self.stats.n_windows_requested += len(req.ts)
+        self.stats.queue_seconds += stats.queue_seconds
+        self.stats.n_errors += 1
+        return Response(
+            id=req.id, tag=req.tag, heat=None, stats=stats, ok=False, error=err
+        )
+
+    def _query_guarded(self, batch: MicroBatch, eval_ts: List[float]):
+        """One engine pass inside the §8 fault envelope: the step watchdog
+        times the flush (slow ones count as stragglers), a *transient*
+        fault gets ONE retry after a short backoff, and a per-profile
+        consecutive-fault streak of ``degrade_after`` trips the executor
+        degradation ladder (``TNKDE.degrade``: pallas → jax/packed → numpy)
+        so the next batch answers on the slower rung instead of failing.
+        Returns ``(heat, None)`` or ``(None, ServeError)`` — never raises.
+        """
+        model = self.models[batch.profile]
+        last: Optional[Exception] = None
+        for attempt in (0, 1):
+            self.watchdog.step_start()
+            try:
+                F = model.query(list(eval_ts), at=batch.snapshot)
+            except Exception as e:
+                self.watchdog.step_end()
+                self.stats.n_engine_faults += 1
+                last = e
+                if getattr(e, "transient", False) and attempt == 0:
+                    self.stats.n_retries += 1
+                    if self.retry_backoff_s > 0:
+                        time.sleep(self.retry_backoff_s)
+                    continue
+                break
+            if self.watchdog.step_end():
+                self.stats.n_stragglers += 1
+            self._fault_streak[batch.profile] = 0
+            return F, None
+        streak = self._fault_streak.get(batch.profile, 0) + 1
+        self._fault_streak[batch.profile] = streak
+        if streak >= self.degrade_after:
+            if model.degrade() is not None:
+                self.stats.n_degradations += 1
+            self._fault_streak[batch.profile] = 0
+        err = ServeError(
+            code=_errors.ENGINE_FAULT,
+            message=f"{type(last).__name__}: {last}",
+            retryable=bool(getattr(last, "transient", False)),
+        )
+        return None, err
 
     def _execute(self, batch: MicroBatch) -> List[Response]:
         model = self.models[batch.profile]
         t_start = time.perf_counter()
-        centers = batch.centers
+        out: List[Response] = []
+        live: List[Request] = []
+        for req in batch.requests:
+            if req.deadline is not None and t_start >= req.deadline:
+                self.stats.n_expired += 1
+                out.append(
+                    self._error_response(
+                        req,
+                        batch,
+                        t_start,
+                        ServeError(
+                            code=_errors.DEADLINE_EXCEEDED,
+                            message=(
+                                "deadline exceeded before execution (queued "
+                                f"{t_start - req.arrival:.4f}s)"
+                            ),
+                        ),
+                    )
+                )
+            else:
+                live.append(req)
+        if not live:
+            self.stats.n_batches += 1
+            return out
+        # distinct centers of the LIVE requests only — expired ones must not
+        # widen the engine pass they no longer participate in
+        seen: "OrderedDict[float, None]" = OrderedDict()
+        for r in live:
+            for t in r.ts:
+                seen.setdefault(float(t))
         rowmap: Dict[float, np.ndarray] = {}
         misses: List[float] = []
-        for c in centers:
+        for c in seen:
             row = self.cache.get(ResultCache.key(batch.profile, batch.epoch, c))
             if row is None:
                 misses.append(c)
@@ -228,7 +398,14 @@ class TNKDEServer:
             wc = window_class(len(misses), self.window_cap)
             eval_ts = misses + [misses[0]] * (wc - len(misses))
             n_eval = len(eval_ts)
-            F = model.query(eval_ts, at=batch.snapshot)
+            F, err = self._query_guarded(batch, eval_ts)
+            if F is None:
+                # the whole batch shared one failed engine pass: isolate the
+                # fault to these requests (per-request error Responses), the
+                # serving loop and the other queues keep going
+                out.extend(self._error_response(r, batch, t_start, err) for r in live)
+                self.stats.n_batches += 1
+                return out
             for i, c in enumerate(misses):
                 # copy: a view would pin the whole padded [W, L] batch array
                 # in the cache for as long as the row lives
@@ -239,8 +416,7 @@ class TNKDEServer:
         atoms = model.stats.n_atoms - atoms0
         miss_set = set(misses)
         L = model.n_lixels
-        out: List[Response] = []
-        for req in batch.requests:
+        for req in live:
             heat = (
                 np.stack([rowmap[float(t)] for t in req.ts])
                 if req.ts
@@ -268,3 +444,64 @@ class TNKDEServer:
         self.stats.n_rows_computed += len(misses)
         self.stats.service_seconds += service
         return out
+
+    # ----------------------------------------------------------- durability
+    def attach_wal(self, wal) -> None:
+        """Server-level WAL (DESIGN.md §8): every ``insert``/``seal`` is
+        logged ONCE here before the per-profile models mutate."""
+        self._wal = wal
+
+    def checkpoint(self, ckpt_dir: str, *, keep_last: int = 3) -> int:
+        """Coordinated checkpoint: seal (logged), then persist every
+        streaming profile under ``<ckpt_dir>/<profile>`` at ONE sequence
+        number, then rotate + prune the WAL. A crash mid-way leaves
+        profiles at different committed steps — :meth:`restore` replays
+        each profile from its OWN step, which re-converges them."""
+        self.seal()
+        seq = self._wal.last_seq if self._wal is not None else self._ckpt_step + 1
+        for name, model in self.models.items():
+            if model.solution == "drfs":
+                model.checkpoint(
+                    os.path.join(ckpt_dir, name), step=seq, keep_last=keep_last
+                )
+        self._ckpt_step = seq
+        if self._wal is not None:
+            self._wal.rotate()
+            self._wal.prune(seq)
+        return seq
+
+    def restore(self, ckpt_dir=None, *, wal=None, attach: bool = True):
+        """Crash recovery for the whole server: each streaming profile
+        restores its latest committed checkpoint (if any) and replays the
+        shared WAL suffix past its own sequence number; the result cache is
+        dropped (epochs moved). Returns an aggregate
+        :class:`~repro.core.wal.RecoveryReport` (worst-case per-profile
+        replay depth; wall times summed)."""
+        agg = walmod.RecoveryReport(
+            restored_step=None,
+            from_seq=0,
+            to_seq=0,
+            n_truncated_bytes=wal.truncated_bytes if wal is not None else 0,
+        )
+        first = True
+        for name, model in self.models.items():
+            if model.solution != "drfs":
+                continue
+            rep = model.restore(
+                None if ckpt_dir is None else os.path.join(ckpt_dir, name),
+                wal=wal,
+                attach=False,  # the WAL belongs to the server, not the model
+            )
+            agg.restore_seconds += rep.restore_seconds
+            agg.replay_seconds += rep.replay_seconds
+            if first or (rep.from_seq < agg.from_seq):
+                agg.restored_step = rep.restored_step
+                agg.from_seq = rep.from_seq
+                agg.n_records = rep.n_records
+                agg.n_events = rep.n_events
+            agg.to_seq = max(agg.to_seq, rep.to_seq)
+            first = False
+        if wal is not None and attach:
+            self._wal = wal
+        self.cache = ResultCache(self.cache.max_rows)
+        return agg

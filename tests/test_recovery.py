@@ -1,0 +1,315 @@
+"""Crash/recovery property tests (DESIGN.md §8).
+
+The central claim: checkpoint + WAL replay reproduces the uncrashed run —
+heat agreement <= 1e-12 on both DRFS modes (quantized and exact_leaf) and
+identical epochs — no matter where the process dies: mid-append (torn WAL
+tail), mid-checkpoint-save (any stage of the write path), or between
+batches (the subprocess ``os._exit`` smoke).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.ckpt import latest_step, load_checkpoint_arrays, save_checkpoint
+from repro.core import TNKDE
+from repro.core.events import Events
+from repro.core.wal import WriteAheadLog
+from repro.data.spatial import make_events, make_network
+from repro.ft.faults import KillPoint, crash_checkpoint_save, tear_wal_tail
+
+KW = dict(g=40.0, b_s=600.0, b_t=2.0 * 86400.0, solution="drfs", drfs_depth=4)
+TS = [2.5 * 86400.0, 6.0 * 86400.0]
+
+
+def _world(seed=7, n_events=160):
+    net = make_network(24, 40, seed=seed)
+    ev = make_events(net, n_events, seed=seed, span_days=8.0)
+    return net, ev
+
+
+def _batches(net, k=6, n=25, seed=3):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(k):
+        e = rng.integers(0, net.n_edges, n).astype(np.int32)
+        out.append(
+            Events(
+                e,
+                rng.uniform(0, net.edge_len[e]),
+                np.sort(rng.uniform(8.1e5 + i * 1e4, 8.1e5 + (i + 1) * 1e4, n)),
+            )
+        )
+    return out
+
+
+def _apply(model, batches, seal_at=(2,), extend_at=()):
+    for i, b in enumerate(batches):
+        model.insert(b)
+        if i in seal_at:
+            model.seal() if hasattr(model, "seal") else model.index.seal()
+        if i in extend_at:
+            model.extend() if hasattr(model, "extend") else model.index.extend()
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_crash_property(tmp_path):
+    """A save killed at ANY stage leaves latest_step at the previous COMMIT,
+    and the next save garbage-collects the debris."""
+    tree = {"w": np.arange(12.0).reshape(3, 4), "i": np.arange(5)}
+    save_checkpoint(str(tmp_path), 10, tree)
+    assert latest_step(str(tmp_path)) == 10
+
+    stages = [("array", 0), ("array", 1), ("meta", 0), ("commit", 0), ("replace", 0)]
+    for stage, detail in stages:
+        with crash_checkpoint_save(stage, detail):
+            with pytest.raises(KillPoint):
+                save_checkpoint(str(tmp_path), 20, tree)
+        # the killed save is invisible — even at 'replace', where the staging
+        # dir already holds a COMMIT marker (only os.replace commits)
+        assert latest_step(str(tmp_path)) == 10, stage
+        arrays, step, _ = load_checkpoint_arrays(str(tmp_path))
+        assert step == 10
+        np.testing.assert_array_equal(arrays["['w']"], tree["w"])
+
+    # next successful save GCs every uncommitted leftover
+    save_checkpoint(str(tmp_path), 30, tree)
+    names = os.listdir(tmp_path)
+    assert latest_step(str(tmp_path)) == 30
+    assert not [n for n in names if n.endswith(".tmp")]
+    assert not [
+        n
+        for n in names
+        if n.startswith("step_") and not os.path.exists(tmp_path / n / "COMMIT")
+    ]
+
+
+# ------------------------------------------------------------ TNKDE recovery
+@pytest.mark.parametrize("exact_leaf", [False, True], ids=["quantized", "exact_leaf"])
+def test_crash_recovery_equivalence(tmp_path, exact_leaf):
+    """restore(ckpt) + WAL replay == the uncrashed run, on both DRFS modes,
+    including explicit seal/extend markers and a torn final record."""
+    net, ev = _world()
+    batches = _batches(net)
+    kw = dict(KW, drfs_exact_leaf=exact_leaf)
+
+    # the uncrashed reference applies the same logical op sequence the WAL
+    # records — including the checkpoint's own (logged) seal — EXCEPT the
+    # final insert, whose record the crash tears: a torn record was never
+    # applied by contract (appends complete before the in-memory mutation)
+    ref = TNKDE(net, ev, engine="numpy", **kw)
+    _apply(ref, batches[:4], seal_at=(2,), extend_at=(3,))
+    ref.seal()
+    _apply(ref, [batches[4]], seal_at=(), extend_at=())
+    H_ref = ref.query(TS)
+
+    wdir, cdir = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    m = TNKDE(net, ev, engine="numpy", **kw)
+    m.attach_wal(WriteAheadLog(wdir))
+    _apply(m, batches[:4], seal_at=(2,), extend_at=(3,))
+    m.checkpoint(cdir)
+    _apply(m, batches[4:], seal_at=(), extend_at=())
+    m._wal.close()  # "crash": the in-memory model is simply abandoned
+
+    tear_wal_tail(wdir, nbytes=7, scribble=True)  # crash mid-append too
+    rec = TNKDE(net, ev, engine="numpy", **kw)
+    rep = rec.restore(cdir, wal=WriteAheadLog(wdir))
+    assert rep.restored_step is not None and rep.n_truncated_bytes > 0
+    assert np.abs(H_ref - rec.query(TS)).max() <= 1e-12
+    assert rec.epoch == ref.epoch
+    # the recovered model is itself durable: the next insert is logged
+    s0 = rec._wal.last_seq
+    rec.insert(batches[0])
+    assert rec._wal.last_seq == s0 + 1
+
+
+def test_recovery_without_checkpoint(tmp_path):
+    """Crash before the first checkpoint: the whole log replays from seed."""
+    net, ev = _world()
+    batches = _batches(net, k=3)
+    ref = TNKDE(net, ev, engine="numpy", **KW)
+    _apply(ref, batches, seal_at=(1,))
+    m = TNKDE(net, ev, engine="numpy", **KW)
+    m.attach_wal(WriteAheadLog(str(tmp_path / "wal")))
+    _apply(m, batches, seal_at=(1,))
+    m._wal.close()
+    rec = TNKDE(net, ev, engine="numpy", **KW)
+    rep = rec.restore(str(tmp_path / "ckpt"), wal=WriteAheadLog(str(tmp_path / "wal")))
+    assert rep.restored_step is None and rep.n_records == 4  # 3 inserts + seal
+    assert np.abs(ref.query(TS) - rec.query(TS)).max() <= 1e-12
+
+
+def test_restore_rejects_config_mismatch(tmp_path):
+    net, ev = _world()
+    m = TNKDE(net, ev, engine="numpy", **KW)
+    m.insert(_batches(net, k=1)[0])
+    m.checkpoint(str(tmp_path))
+    other = TNKDE(net, ev, engine="numpy", **dict(KW, b_s=500.0))
+    with pytest.raises(ValueError, match="fingerprint"):
+        other.restore(str(tmp_path))
+
+
+def test_crash_during_checkpoint_save_recovers_from_previous(tmp_path):
+    """Killed mid-checkpoint: recovery restores the PREVIOUS commit and
+    replays past it — including the seal marker the doomed save logged."""
+    net, ev = _world()
+    batches = _batches(net)
+    # reference = the same op sequence the durable run logs: the first
+    # checkpoint's seal (after batch 2) and the doomed checkpoint's seal
+    # (after batch 3) are both no-ops-or-merges at matching points
+    ref = TNKDE(net, ev, engine="numpy", **KW)
+    _apply(ref, batches[:3], seal_at=(1,))
+    ref.seal()
+    _apply(ref, [batches[3]], seal_at=(0,))
+    ref.seal()
+    _apply(ref, batches[4:], seal_at=())
+    H_ref = ref.query(TS)
+
+    wdir, cdir = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    m = TNKDE(net, ev, engine="numpy", **KW)
+    m.attach_wal(WriteAheadLog(wdir))
+    _apply(m, batches[:3], seal_at=(1,))
+    m.checkpoint(cdir)
+    step1 = latest_step(cdir)
+    _apply(m, [batches[3]], seal_at=(0,))
+    with crash_checkpoint_save("meta"):
+        with pytest.raises(KillPoint):
+            m.checkpoint(cdir)
+    m._wal.close()
+    assert latest_step(cdir) == step1  # the doomed save never committed
+
+    rec = TNKDE(net, ev, engine="numpy", **KW)
+    rec.restore(cdir, wal=WriteAheadLog(wdir))
+    _apply(rec, batches[4:], seal_at=())
+    assert np.abs(H_ref - rec.query(TS)).max() <= 1e-12
+    assert rec.epoch == ref.epoch
+
+
+def test_recovered_state_serves_on_jax_engine(tmp_path):
+    """Recovery equivalence holds when the recovered model answers through
+    the jit'd packed engine (fresh pack caches over restored arrays)."""
+    net, ev = _world()
+    batches = _batches(net, k=4)
+    ref = TNKDE(net, ev, engine="jax", **KW)
+    _apply(ref, batches[:2], seal_at=(1,))
+    ref.seal()  # the checkpoint's logged seal, at the matching point
+    _apply(ref, batches[2:])
+    H_ref = ref.query(TS)
+    wdir, cdir = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    m = TNKDE(net, ev, engine="numpy", **KW)
+    m.attach_wal(WriteAheadLog(wdir))
+    _apply(m, batches[:2], seal_at=(1,))
+    m.checkpoint(cdir)
+    _apply(m, batches[2:], seal_at=())
+    m._wal.close()
+    rec = TNKDE(net, ev, engine="jax", **KW)
+    rec.restore(cdir, wal=WriteAheadLog(wdir))
+    assert np.abs(H_ref - rec.query(TS)).max() <= 1e-9  # engine-path noise
+
+
+# ---------------------------------------------------- subprocess crash smoke
+def test_subprocess_crash_replay_smoke(tmp_path):
+    """A REAL process death (os._exit mid-stream, no atexit, no flushes
+    beyond the WAL's own fsync): the parent recovers the child's state and
+    matches a reference applying the same operations."""
+    wdir = str(tmp_path / "wal")
+    child = textwrap.dedent(
+        """
+        import os, sys
+        sys.path.insert(0, sys.argv[1])
+        import numpy as np
+        from repro.core import TNKDE
+        from repro.core.events import Events
+        from repro.core.wal import WriteAheadLog
+        from repro.data.spatial import make_events, make_network
+
+        net = make_network(24, 40, seed=7)
+        ev = make_events(net, 160, seed=7, span_days=8.0)
+        m = TNKDE(net, ev, engine="numpy", g=40.0, b_s=600.0, b_t=2.0 * 86400.0,
+                  solution="drfs", drfs_depth=4)
+        m.attach_wal(WriteAheadLog(sys.argv[2]))
+        rng = np.random.default_rng(3)
+        for i in range(4):
+            e = rng.integers(0, net.n_edges, 25).astype(np.int32)
+            m.insert(Events(e, rng.uniform(0, net.edge_len[e]),
+                            np.sort(rng.uniform(8.1e5 + i * 1e4,
+                                                8.1e5 + (i + 1) * 1e4, 25))))
+            if i == 1:
+                m.seal()
+        os._exit(1)  # sudden death: no cleanup, no close()
+        """
+    )
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", child, src, wdir],
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == 1, proc.stderr
+
+    net, ev = _world()
+    batches = _batches(net, k=4)
+    ref = TNKDE(net, ev, engine="numpy", **KW)
+    _apply(ref, batches, seal_at=(1,))
+
+    rec = TNKDE(net, ev, engine="numpy", **KW)
+    rep = rec.restore(None, wal=WriteAheadLog(wdir))
+    assert rep.n_records == 5 and rep.n_events == 100
+    assert np.abs(ref.query(TS) - rec.query(TS)).max() <= 1e-12
+    assert rec.epoch == ref.epoch
+
+
+# -------------------------------------------------------- server-level WAL
+def test_server_multi_profile_recovery(tmp_path):
+    """One server WAL recovers every profile: quantized AND exact_leaf
+    models re-converge to the uncrashed run after a coordinated checkpoint
+    + shared replay, and the restored server stays durable."""
+    from repro.serve import ProfileConfig, TNKDEServer
+
+    net, ev = _world()
+    batches = _batches(net)
+    profs = dict(
+        q=ProfileConfig(g=40.0, b_s=600.0, b_t=2 * 86400.0, solution="drfs",
+                        drfs_depth=4),
+        x=ProfileConfig(g=40.0, b_s=500.0, b_t=86400.0, solution="drfs",
+                        drfs_depth=3, drfs_exact_leaf=True),
+    )
+    ref = TNKDEServer(net, ev, profs)
+    for i, b in enumerate(batches):
+        ref.insert(b)
+        if i == 2:
+            ref.seal()
+        if i == 3:
+            ref.seal()  # the coordinated checkpoint's logged seal
+    H = {n: ref.models[n].query(TS) for n in profs}
+
+    wdir, cdir = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    srv = TNKDEServer(net, ev, profs)
+    srv.attach_wal(WriteAheadLog(wdir))
+    for i, b in enumerate(batches[:4]):
+        srv.insert(b)
+        if i == 2:
+            srv.seal()
+    srv.checkpoint(cdir)
+    for b in batches[4:]:
+        srv.insert(b)
+    srv._wal.close()
+
+    rec = TNKDEServer(net, ev, profs)
+    rep = rec.restore(cdir, wal=WriteAheadLog(wdir))
+    assert rep.restored_step is not None
+    for n in profs:
+        assert np.abs(H[n] - rec.models[n].query(TS)).max() <= 1e-12
+        assert rec.models[n].epoch == ref.models[n].epoch
+    # recovered server logs subsequent mutations to the attached WAL
+    s0 = rec._wal.last_seq
+    rec.insert(batches[0])
+    assert rec._wal.last_seq == s0 + 1
+    # and still serves through the micro-batched path
+    rec.submit(TS, profile="q", tag=0)
+    (r,) = rec.pump()
+    assert r.ok and np.abs(r.heat - rec.models["q"].query(TS)).max() <= 1e-12

@@ -1,0 +1,258 @@
+"""Serve-tier fault isolation (DESIGN.md §8): every admitted request gets
+exactly one Response, the pump never raises, deadlines and load shedding
+bound the work, and repeated engine faults trip the degradation ladder
+while the fallback engine keeps serving with zero recompiles."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.events import Events
+from repro.data.spatial import make_events, make_network
+from repro.ft.faults import inject_query_faults
+from repro.serve import (
+    InsertItem,
+    ProfileConfig,
+    QueryItem,
+    QueueFull,
+    TNKDEServer,
+    jit_entries,
+    run_server,
+)
+
+TS = [2.5 * 86400.0, 6.0 * 86400.0]
+
+
+def _world(seed=7, n_events=160):
+    net = make_network(24, 40, seed=seed)
+    ev = make_events(net, n_events, seed=seed, span_days=8.0)
+    return net, ev
+
+
+def _profiles(**over):
+    cfg = dict(
+        g=40.0, b_s=600.0, b_t=2 * 86400.0, solution="drfs", drfs_depth=4
+    )
+    cfg.update(over)
+    return {"default": ProfileConfig(**cfg)}
+
+
+def _server(net, ev, **kw):
+    kw.setdefault("retry_backoff_s", 0.0)
+    return TNKDEServer(net, ev, _profiles(), **kw)
+
+
+# ------------------------------------------------- satellite (a): batch loss
+def test_every_admitted_request_answered_on_engine_fault():
+    """Regression: an engine fault mid-batch must NOT lose the popped
+    requests — each gets an ok=False Response; the pump does not raise."""
+    net, ev = _world()
+    srv = _server(net, ev)
+    inject_query_faults(srv.models["default"], fail_on={0})
+    ids = [srv.submit(TS, tag=k) for k in range(3)]
+    rs = srv.pump()
+    assert {r.tag for r in rs} == {0, 1, 2}
+    assert {r.id for r in rs} == set(ids)
+    assert all((not r.ok) and r.error.code == "engine_fault" for r in rs)
+    assert all(r.heat is None for r in rs)
+    assert srv.n_queued == 0  # nothing silently retained either
+    assert srv.stats.n_errors == 3 and srv.stats.n_requests == 3
+    # the profile keeps serving on the next pump (fault set exhausted)
+    srv.submit(TS, tag="after")
+    (r,) = srv.pump()
+    assert r.ok and r.heat.shape == (2, srv.models["default"].n_lixels)
+
+
+def test_fault_isolated_to_its_profile():
+    """A fault in one profile's batch leaves the other profile's batch
+    untouched inside the same pump call."""
+    net, ev = _world()
+    profs = {
+        "good": ProfileConfig(g=40.0, b_s=600.0, b_t=2 * 86400.0,
+                              solution="drfs", drfs_depth=4),
+        "bad": ProfileConfig(g=40.0, b_s=500.0, b_t=86400.0,
+                             solution="drfs", drfs_depth=3),
+    }
+    srv = TNKDEServer(net, ev, profs, retry_backoff_s=0.0)
+    inject_query_faults(srv.models["bad"], fail_on=set(range(8)))
+    srv.submit(TS, profile="bad", tag="b")
+    srv.submit(TS, profile="good", tag="g")
+    rs = {r.tag: r for r in srv.pump()}
+    assert not rs["b"].ok and rs["g"].ok
+    oracle = srv.models["good"].query(TS)
+    assert np.abs(rs["g"].heat - oracle).max() <= 1e-12
+
+
+def test_transient_fault_retried_once():
+    net, ev = _world()
+    srv = _server(net, ev)
+    calls = inject_query_faults(srv.models["default"], fail_on={0}, transient=True)
+    srv.submit(TS, tag=0)
+    (r,) = srv.pump()
+    assert r.ok and calls() == 2  # fault + one retry
+    assert srv.stats.n_retries == 1 and srv.stats.n_engine_faults == 1
+    assert srv.stats.n_errors == 0
+
+
+def test_persistent_transient_fault_still_isolated():
+    """transient=True on BOTH attempts: retry once, then error out."""
+    net, ev = _world()
+    srv = _server(net, ev)
+    calls = inject_query_faults(
+        srv.models["default"], fail_on={0, 1}, transient=True
+    )
+    srv.submit(TS, tag=0)
+    (r,) = srv.pump()
+    assert not r.ok and r.error.retryable and calls() == 2
+    assert srv.stats.n_retries == 1 and srv.stats.n_engine_faults == 2
+
+
+# -------------------------------------------------------- degradation ladder
+def test_degradation_ladder_trips_to_numpy_and_serves():
+    net, ev = _world()
+    srv = _server(net, ev, degrade_after=2)
+    model = srv.models["default"]
+    assert model.engine_desc != "numpy"  # starts on the jit'd engine
+    inject_query_faults(model, fail_on={0, 1})
+    for k in range(2):  # two consecutive faulting batches -> ladder trips
+        srv.submit(TS, tag=k)
+        (r,) = srv.pump()
+        assert not r.ok
+    assert srv.stats.n_degradations == 1
+    assert model.engine_desc == "numpy"
+    # the numpy rung serves the SAME answers with zero jit-cache growth
+    j0 = jit_entries()
+    srv.submit(TS, tag="x")
+    (r,) = srv.pump()
+    assert r.ok
+    ref = srv.models["default"].query(TS)
+    assert np.abs(r.heat - ref).max() <= 1e-12
+    assert jit_entries() == j0  # degraded executor: no recompiles at all
+    # streak reset: stats stop moving once healthy
+    assert srv.stats.n_degradations == 1
+
+
+def test_degrade_method_ladder():
+    """TNKDE.degrade walks jax/packed -> numpy -> None (floor)."""
+    net, ev = _world()
+    from repro.core import TNKDE
+
+    m = TNKDE(net, ev, engine="jax", solution="drfs", g=40.0, b_s=600.0,
+              b_t=2 * 86400.0, drfs_depth=4)
+    assert m.engine_desc == "jax/packed"
+    assert m.degrade() == "numpy"
+    assert m.degrade() is None  # already at the floor
+    # still answers correctly on the floor
+    ref = TNKDE(net, ev, engine="numpy", solution="drfs", g=40.0, b_s=600.0,
+                b_t=2 * 86400.0, drfs_depth=4)
+    assert np.abs(m.query(TS) - ref.query(TS)).max() <= 1e-12
+
+
+# ---------------------------------------------- satellite (b): load shedding
+def test_bounded_queue_sheds_with_typed_error():
+    net, ev = _world()
+    srv = _server(net, ev, max_queued=3)
+    for k in range(3):
+        srv.submit(TS, tag=k)
+    with pytest.raises(QueueFull) as ei:
+        srv.submit(TS, tag=99)
+    assert ei.value.retryable and ei.value.code == "queue_full"
+    assert srv.stats.n_shed == 1
+    # draining reopens admission
+    rs = srv.pump()
+    assert len(rs) == 3 and all(r.ok for r in rs)
+    srv.submit(TS, tag="again")
+    assert srv.n_queued == 1
+
+
+def test_unbounded_by_default():
+    net, ev = _world()
+    srv = _server(net, ev)
+    for k in range(64):
+        srv.submit(TS, tag=k)
+    assert srv.n_queued == 64 and srv.stats.n_shed == 0
+
+
+# ------------------------------------------------------------------ deadlines
+def test_deadline_expiry_pre_execution():
+    net, ev = _world()
+    srv = _server(net, ev)
+    srv.submit(TS, tag="dead", deadline_s=0.001)
+    srv.submit(TS, tag="live")  # no deadline
+    time.sleep(0.01)
+    rs = {r.tag: r for r in srv.pump()}
+    assert not rs["dead"].ok and rs["dead"].error.code == "deadline_exceeded"
+    assert rs["live"].ok
+    assert srv.stats.n_expired == 1
+    # expired requests must not widen the engine pass
+    assert rs["live"].stats.windows_evaluated <= len(TS)
+
+
+def test_default_deadline_applies():
+    net, ev = _world()
+    srv = _server(net, ev, default_deadline_s=0.001)
+    srv.submit(TS, tag=0)
+    time.sleep(0.01)
+    (r,) = srv.pump()
+    assert not r.ok and r.error.code == "deadline_exceeded"
+
+
+# ------------------------------------------------------------------ watchdog
+def test_slow_flush_counts_straggler():
+    net, ev = _world()
+    from repro.ft.watchdog import StepWatchdog
+
+    srv = _server(net, ev, watchdog=StepWatchdog(hard_timeout=0.05))
+    inject_query_faults(srv.models["default"], slow_on={0}, slow_s=0.2)
+    srv.submit(TS, tag=0)
+    (r,) = srv.pump()
+    assert r.ok  # slow, not failed
+    assert srv.stats.n_stragglers == 1
+
+
+# --------------------------------------------------- loadgen fault accounting
+def test_run_server_with_shedding_and_faults():
+    """The load generator survives sheds + error responses: latency samples
+    only for answered-ok requests, sheds/errors counted in the report."""
+    net, ev = _world()
+    rng = np.random.default_rng(0)
+    workload = []
+    for k in range(12):
+        workload.append(QueryItem(ts=[float(rng.uniform(2e5, 6e5))]))
+        if k == 5:
+            e = rng.integers(0, net.n_edges, 10).astype(np.int32)
+            workload.append(
+                InsertItem(Events(e, rng.uniform(0, net.edge_len[e]),
+                                  np.sort(rng.uniform(7e5, 7.1e5, 10))))
+            )
+    srv = _server(net, ev)
+    inject_query_faults(srv.models["default"], fail_on={0})
+    rep = run_server(srv, workload, rate_hz=None)
+    s = rep.summary()
+    assert s["n"] == len(rep.latencies)
+    assert rep.n_errors >= 1  # the injected fault batch errored
+    assert rep.n_errors + rep.n_shed + s["n"] == 12  # full accounting
+    assert s["n"] > 0 and "p50_ms" in s and "p99_ms" in s
+    assert s["n_errors"] == rep.n_errors
+
+    # saturated arrivals against a tiny bounded queue: sheds are counted
+    # and the report still sums to the workload
+    srv2 = _server(net, ev, max_queued=2)
+    rep2 = run_server(srv2, [QueryItem(ts=[3e5 + k]) for k in range(10)],
+                      rate_hz=None)
+    assert rep2.n_shed == srv2.stats.n_shed > 0
+    assert rep2.n_errors + rep2.n_shed + rep2.summary()["n"] == 10
+
+
+def test_pump_never_raises_even_on_internal_bug():
+    """Defense in depth: an exception out of _execute itself (not the
+    engine) still converts to per-request error responses."""
+    net, ev = _world()
+    srv = _server(net, ev)
+    srv.submit(TS, tag=0)
+    srv.submit(TS, tag=1)
+    # sabotage something _execute touches outside the guarded engine pass
+    srv.cache = None
+    rs = srv.pump()
+    assert {r.tag for r in rs} == {0, 1}
+    assert all((not r.ok) and r.error.code == "internal" for r in rs)

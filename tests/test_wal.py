@@ -1,0 +1,145 @@
+"""WAL unit tests: record roundtrip, torn-tail truncation, corruption
+detection, rotation + pruning, sequence monotonicity."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.events import Events
+from repro.core.wal import (
+    KIND_EXTEND,
+    KIND_INSERT,
+    KIND_SEAL,
+    WalError,
+    WriteAheadLog,
+)
+from repro.ft.faults import tear_wal_tail
+
+
+def _ev(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return Events(
+        rng.integers(0, 12, n).astype(np.int32),
+        rng.uniform(0.0, 50.0, n),
+        np.sort(rng.uniform(0.0, 1e5, n)),
+    )
+
+
+def test_append_read_roundtrip(tmp_path):
+    w = WriteAheadLog(str(tmp_path))
+    batches = [_ev(5, 1), _ev(0, 2), _ev(9, 3)]
+    w.append_insert(batches[0])
+    w.append_marker(KIND_SEAL)
+    w.append_insert(batches[1])
+    w.append_marker(KIND_EXTEND)
+    w.append_insert(batches[2])
+    w.close()
+
+    r = WriteAheadLog(str(tmp_path))
+    recs = list(r.records())
+    assert [x.seq for x in recs] == [1, 2, 3, 4, 5]
+    assert [x.kind for x in recs] == [
+        KIND_INSERT, KIND_SEAL, KIND_INSERT, KIND_EXTEND, KIND_INSERT,
+    ]
+    for got, want in zip([recs[0], recs[2], recs[4]], batches):
+        np.testing.assert_array_equal(got.events.edge_id, want.edge_id)
+        np.testing.assert_array_equal(got.events.pos, want.pos)
+        np.testing.assert_array_equal(got.events.time, want.time)
+    # markers carry no payload
+    assert recs[1].events is None and recs[3].events is None
+    assert r.truncated_bytes == 0
+    # records(after_seq=) resumes mid-log
+    assert [x.seq for x in r.records(after_seq=3)] == [4, 5]
+
+
+def test_marker_kind_validated(tmp_path):
+    w = WriteAheadLog(str(tmp_path))
+    with pytest.raises(ValueError):
+        w.append_marker(KIND_INSERT)
+
+
+@pytest.mark.parametrize("scribble", [False, True])
+def test_torn_tail_truncated_on_open(tmp_path, scribble):
+    w = WriteAheadLog(str(tmp_path))
+    w.append_insert(_ev(6, 1))
+    w.append_insert(_ev(4, 2))
+    w.close()
+    tear_wal_tail(str(tmp_path), nbytes=10, scribble=scribble)
+
+    r = WriteAheadLog(str(tmp_path))
+    assert r.truncated_bytes > 0
+    recs = list(r.records())
+    # the damaged final record is gone, the first survives intact
+    assert [x.seq for x in recs] == [1]
+    np.testing.assert_array_equal(recs[0].events.edge_id, _ev(6, 1).edge_id)
+    # appends continue from the truncated position with the next seq
+    r.append_insert(_ev(2, 3))
+    assert [x.seq for x in r.records()] == [1, 2]
+
+
+def test_damage_before_tail_raises(tmp_path):
+    w = WriteAheadLog(str(tmp_path))
+    w.append_insert(_ev(6, 1))
+    w.rotate()
+    w.append_insert(_ev(4, 2))
+    w.close()
+    # damage the FIRST (non-final) segment: that is corruption, not a crash
+    segs = sorted(n for n in os.listdir(tmp_path) if n.endswith(".wal"))
+    with open(tmp_path / segs[0], "rb+") as f:
+        f.seek(4)
+        f.write(b"\xff\xff")
+    with pytest.raises(WalError):
+        WriteAheadLog(str(tmp_path))
+
+
+def test_rotate_and_prune(tmp_path):
+    w = WriteAheadLog(str(tmp_path))
+    w.append_insert(_ev(3, 1))
+    w.append_insert(_ev(3, 2))
+    w.rotate()
+    w.append_insert(_ev(3, 3))
+    assert len(w.segments()) == 2
+    # records seq 1..2 are covered by a checkpoint at seq 2
+    assert w.prune(upto_seq=2) == 1
+    assert [x.seq for x in w.records()] == [3]
+    # replay across the rotation boundary still sees monotone seqs
+    w.rotate()
+    w.append_insert(_ev(3, 4))
+    assert [x.seq for x in w.records(after_seq=3)] == [4]
+    w.close()
+
+
+def test_reopen_after_rotate_without_appends(tmp_path):
+    # a crash right after rotation leaves an empty active segment
+    w = WriteAheadLog(str(tmp_path))
+    w.append_insert(_ev(3, 1))
+    w.rotate()
+    w.close()
+    r = WriteAheadLog(str(tmp_path))
+    assert r.last_seq == 1
+    r.append_insert(_ev(3, 2))
+    assert [x.seq for x in r.records()] == [1, 2]
+
+
+def test_reopen_after_rotate_and_prune_preserves_seq(tmp_path):
+    """Regression: once a checkpoint prunes every record-bearing segment,
+    the surviving empty segment's NAME must pin the sequence — a reopen
+    that restarted at seq 1 would log new inserts inside the pruned range,
+    and replay past the checkpoint would silently skip them."""
+    w = WriteAheadLog(str(tmp_path))
+    w.append_insert(_ev(3, 1))
+    w.append_insert(_ev(3, 2))
+    w.rotate()
+    assert w.prune(upto_seq=2) == 1  # only the empty active segment remains
+    w.close()
+    r = WriteAheadLog(str(tmp_path))
+    assert r.last_seq == 2
+    r.append_insert(_ev(3, 3))
+    assert [x.seq for x in r.records(after_seq=2)] == [3]
+
+
+def test_fsync_off_still_durable_within_process(tmp_path):
+    w = WriteAheadLog(str(tmp_path), fsync=False)
+    w.append_insert(_ev(8, 5))
+    w.close()
+    assert [x.seq for x in WriteAheadLog(str(tmp_path)).records()] == [1]
