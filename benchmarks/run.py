@@ -74,6 +74,11 @@ def _bench_metrics(name: str, rec: dict):
             if isinstance(r, dict) and r.get("speedup_vs_numpy"):
                 mode = "exact" if r.get("exact") else "quantized"
                 out[f"warm_speedup_{mode}"] = float(r["speedup_vs_numpy"])
+        sus = rec.get("sustained")
+        if isinstance(sus, dict) and sus.get("bulk_insert_speedup"):
+            # same-run ratio (bulk vs single-event ingest on one machine):
+            # survives container drift like the other headline speedups
+            out["bulk_insert_speedup"] = float(sus["bulk_insert_speedup"])
     elif name == "BENCH_serve.json":
         if rec.get("speedup_vs_sequential"):
             out["speedup_vs_sequential"] = float(rec["speedup_vs_sequential"])
@@ -202,6 +207,12 @@ def _headline(rec: dict) -> str:
                 "durability_overhead_frac"):
         if key in rec:
             bits.append(f"{key}={rec[key]}")
+    if isinstance(rec.get("sustained"), dict):
+        sus = rec["sustained"]
+        for key in ("bulk_insert_speedup", "recompiles_steady_state",
+                    "device_bytes_plateaued"):
+            if key in sus:
+                bits.append(f"{key}={sus[key]}")
     if isinstance(rec.get("rungs"), list):
         bits.append(f"rungs={len(rec['rungs'])}")
         sp = [r.get("speedup_vs_numpy") for r in rec["rungs"]

@@ -419,9 +419,16 @@ class DynamicRangeForest(_DrfsQueryView):
         phi: np.ndarray,
         *,
         depth: int = 8,
+        auto_seal: bool = True,
     ):
         self.net = net
         self.ctx = ctx
+        # auto_seal=True: the geometric seal fires inside insert() (the
+        # standalone streaming default — replay-deterministic because the
+        # trigger is a pure function of event counts). auto_seal=False:
+        # insert never seals; the owner schedules compact()/seal() off the
+        # write path (the serve tier runs it between batches).
+        self.auto_seal = bool(auto_seal)
         self.depth = 0
         E = net.n_edges
         # sealed event arrays (grouped by edge, time-sorted within edge)
@@ -456,6 +463,10 @@ class DynamicRangeForest(_DrfsQueryView):
         return int(self.pos.shape[0])
 
     @property
+    def n_pending(self) -> int:
+        return int(self._n_pending)
+
+    @property
     def index_bytes(self) -> int:
         return sum(p.nbytes + t.nbytes + c.nbytes + i.nbytes for p, t, c, i in self.levels)
 
@@ -485,11 +496,19 @@ class DynamicRangeForest(_DrfsQueryView):
 
     # ------------------------------------------------------------ streaming
     def insert(self, edge: np.ndarray, pos: np.ndarray, time: np.ndarray, phi: np.ndarray):
-        """Streaming insertion (persistent/streaming mode, §5).
+        """Streaming insertion (persistent/streaming mode, §5), O(batch).
 
-        Events must arrive in nondecreasing time order (streaming data).
-        Amortized O(H): appended to pending buffers; a geometric ``seal``
-        merges them when they exceed 25% of the sealed set.
+        Arrival order does NOT matter for correctness: the pending CSR
+        sorts by (edge, time) per materialization, and ``seal`` lexsorts
+        the merged base arrays and re-sorts every dirty node's run — the
+        sealed structure is a pure function of the event *set*. (Equal-time
+        ties are summed over contiguous searchsorted ranges, so tie order
+        cannot change a window sum either; the streaming property tests
+        pin this with out-of-order interleavings against the SPS oracle.)
+
+        With ``auto_seal`` (the default) a geometric ``seal`` merges the
+        pending buffers when they exceed 25% of the sealed set; otherwise
+        the buffers grow until the owner schedules a seal/compact.
         """
         self._pend_edge.append(np.asarray(edge, np.int64))
         self._pend_pos.append(np.asarray(pos, np.float64))
@@ -497,8 +516,16 @@ class DynamicRangeForest(_DrfsQueryView):
         self._pend_phi.append(np.asarray(phi))
         self._n_pending += len(pos)
         self.pend_revision += 1
-        if self._n_pending > max(self.n_sealed, 64) // 4:
+        if self.auto_seal and self.needs_seal:
             self.seal()
+
+    @property
+    def needs_seal(self) -> bool:
+        """The geometric compaction trigger: pending > 25% of sealed. A
+        pure function of event counts, so replay re-fires it identically
+        when ``auto_seal`` is on — and the serve tier polls it between
+        batches when auto-seal is off (background compaction)."""
+        return self._n_pending > max(self.n_sealed, 64) // 4
 
     def pending_csr(self):
         """Pending buffers as a per-edge CSR sorted by (edge, time).
@@ -585,7 +612,35 @@ class DynamicRangeForest(_DrfsQueryView):
         was_old = tag_s >= 0
         old_to_new[tag_s[was_old]] = dirty_dst[was_old]
 
-        # ---- splice every level: clean blocks copied, dirty rebuilt --------
+        new_levels = self._splice_levels(
+            new_ptr, new_pos, new_time, new_phi, dirty, old_to_new
+        )
+
+        self.ptr, self.pos, self.time, self.phi = new_ptr, new_pos, new_time, new_phi
+        self.levels = new_levels
+        self._pend_edge, self._pend_pos, self._pend_time, self._pend_phi = [], [], [], []
+        self._n_pending = 0
+        self._pend_csr = None
+        self.revision += 1
+        self.pend_revision += 1
+
+    def _splice_levels(self, new_ptr, new_pos, new_time, new_phi, dirty, old_to_new):
+        """Rebuild every level's CSR over new base arrays, incrementally.
+
+        Shared by :meth:`seal` and :meth:`evict_before`: clean edges (those
+        whose event set did not change) have their per-level blocks copied
+        verbatim with a uniform shift and their ``ev_idx`` rows remapped
+        through ``old_to_new``; dirty edges are node-grouped, time-sorted
+        within node (the new base arrays are already (edge, time)-sorted,
+        and the stable node argsort preserves that) and freshly cumsum'd.
+        Must be called BEFORE the base arrays are rebound — it reads the
+        old structure from ``self``. Allocates fresh arrays (MVCC).
+        """
+        E = self.net.n_edges
+        N_old = self.n_sealed
+        N_new = int(new_ptr[-1])
+        counts_new = np.diff(new_ptr)
+        edge_old = np.repeat(np.arange(E, dtype=np.int64), np.diff(self.ptr))
         edge_new = np.repeat(np.arange(E, dtype=np.int64), counts_new)
         sel = np.nonzero(dirty[edge_new])[0]  # dirty events, new-array order
         new_levels = []
@@ -621,14 +676,76 @@ class DynamicRangeForest(_DrfsQueryView):
             seg_ptr = np.concatenate([[0], np.cumsum(cnt_nodes_new[dirty_nodes])]).astype(np.int64)
             cum_new[ddst] = segmented_cumsum(new_phi[ev_sorted], seg_ptr)
             new_levels.append((nptr_new, tms_new, cum_new, eidx_new))
+        return new_levels
 
-        self.ptr, self.pos, self.time, self.phi = new_ptr, new_pos, new_time, new_phi
-        self.levels = new_levels
-        self._pend_edge, self._pend_pos, self._pend_time, self._pend_phi = [], [], [], []
-        self._n_pending = 0
-        self._pend_csr = None
-        self.revision += 1
-        self.pend_revision += 1
+    def evict_before(self, cutoff: float) -> Optional[np.ndarray]:
+        """Expire every event with ``time < cutoff`` (sliding time horizon).
+
+        Extends DRFS from insert-only to insert+expire: an infinite stream
+        with a horizon runs in bounded memory. Pending buffers are filtered
+        by value; sealed events are dropped and only the *dirty* edges
+        (those that lost events) have their per-level runs rebuilt — clean
+        edges splice through :meth:`_splice_levels` exactly like an
+        incremental seal. Because sealed runs are time-sorted per edge,
+        eviction removes a per-edge prefix regardless of arrival order.
+
+        Allocates fresh arrays and rebinds (MVCC) — pinned snapshots keep
+        answering over the pre-eviction state. Bumps ``revision`` when
+        sealed state changed and ``pend_revision`` when pending changed, so
+        device packs and plan caches invalidate exactly where needed.
+
+        Returns the per-edge removed counts (int64 [E], sealed + pending),
+        or ``None`` when nothing was evicted. NOT a pure function of event
+        counts — callers must WAL-log the eviction for deterministic replay.
+        """
+        cutoff = float(cutoff)
+        E = self.net.n_edges
+        removed = np.zeros(E, np.int64)
+        # ---- pending buffers: filter by value --------------------------------
+        if self._n_pending:
+            pe = np.concatenate(self._pend_edge)
+            pp = np.concatenate(self._pend_pos)
+            pt = np.concatenate(self._pend_time)
+            pf = np.concatenate(self._pend_phi)
+            keep_p = pt >= cutoff
+            n_drop = int((~keep_p).sum())
+            if n_drop:
+                removed += np.bincount(pe[~keep_p], minlength=E).astype(np.int64)
+                if keep_p.any():
+                    self._pend_edge = [pe[keep_p]]
+                    self._pend_pos = [pp[keep_p]]
+                    self._pend_time = [pt[keep_p]]
+                    self._pend_phi = [pf[keep_p]]
+                else:
+                    self._pend_edge, self._pend_pos = [], []
+                    self._pend_time, self._pend_phi = [], []
+                self._n_pending -= n_drop
+                self._pend_csr = None
+                self.pend_revision += 1
+        # ---- sealed arrays: per-edge prefix drop + dirty-edge splice ---------
+        keep = self.time >= cutoff
+        if not keep.all():
+            counts_old = np.diff(self.ptr)
+            edge_old = np.repeat(np.arange(E, dtype=np.int64), counts_old)
+            drop_counts = np.bincount(edge_old[~keep], minlength=E).astype(np.int64)
+            removed += drop_counts
+            dirty = drop_counts > 0
+            counts_new = counts_old - drop_counts
+            new_ptr = np.zeros(E + 1, np.int64)
+            np.cumsum(counts_new, out=new_ptr[1:])
+            new_pos = self.pos[keep]
+            new_time = self.time[keep]
+            new_phi = self.phi[keep]
+            N_old = self.n_sealed
+            old_to_new = np.full(N_old, -1, np.int64)
+            old_to_new[keep] = np.arange(int(keep.sum()), dtype=np.int64)
+            new_levels = self._splice_levels(
+                new_ptr, new_pos, new_time, new_phi, dirty, old_to_new
+            )
+            self.ptr, self.pos, self.time, self.phi = new_ptr, new_pos, new_time, new_phi
+            self.levels = new_levels
+            self.revision += 1
+        return removed if removed.any() else None
 
     # ----------------------------------------------------- durability (WAL)
     def state_tree(self) -> dict:

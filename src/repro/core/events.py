@@ -15,10 +15,53 @@ from .network import RoadNetwork
 __all__ = [
     "Events",
     "EdgeEvents",
+    "EventCountsView",
+    "EventValidationError",
     "group_events_by_edge",
     "group_by_edge_csr",
     "ragged_arange",
+    "validate_events",
 ]
+
+
+class EventValidationError(ValueError):
+    """A streamed event batch failed ingest validation (bad edge id,
+    out-of-range position, non-finite time). Raised by
+    :func:`validate_events` *before* the batch touches the WAL or any
+    in-memory state — a rejected batch leaves the log, the index and the
+    planner exactly as they were."""
+
+
+def validate_events(net: RoadNetwork, ev: Events) -> None:
+    """Reject invalid insert batches with a typed error, pre-mutation.
+
+    Checks, vectorized over the batch: edge ids in ``[0, n_edges)``,
+    positions finite and inside ``[0, edge_len]`` (no silent clipping on
+    the write path — a producer bug must surface, not be laundered into
+    the durable log), and finite timestamps. The first offending index is
+    named so producers can find the bad record.
+    """
+    if ev.n == 0:
+        return
+    eid = ev.edge_id
+    bad = (eid < 0) | (eid >= net.n_edges)
+    if bad.any():
+        i = int(np.argmax(bad))
+        raise EventValidationError(
+            f"event {i}: edge_id {int(eid[i])} outside [0, {net.n_edges})"
+        )
+    if not np.isfinite(ev.time).all():
+        i = int(np.argmax(~np.isfinite(ev.time)))
+        raise EventValidationError(f"event {i}: non-finite time {ev.time[i]!r}")
+    finite_pos = np.isfinite(ev.pos)
+    lens = net.edge_len[eid]
+    bad = ~finite_pos | (ev.pos < 0.0) | (ev.pos > lens)
+    if bad.any():
+        i = int(np.argmax(bad))
+        raise EventValidationError(
+            f"event {i}: pos {ev.pos[i]!r} outside [0, {lens[i]!r}] "
+            f"on edge {int(eid[i])}"
+        )
 
 
 def ragged_arange(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
@@ -100,6 +143,33 @@ class EdgeEvents:
     def slice(self, e: int):
         lo, hi = int(self.ptr[e]), int(self.ptr[e + 1])
         return self.pos[lo:hi], self.time[lo:hi]
+
+
+@dataclasses.dataclass
+class EventCountsView:
+    """Counts-only event view for the streaming planner (write path).
+
+    Once a DRFS model starts streaming, the planner no longer needs the
+    full merged (pos, time) arrays — candidate pruning and the self-edge
+    flag consume only per-edge **counts** (``ptr``/``count``), the LS
+    extremes live in ``TNKDE.ev_min_pos``/``ev_max_pos``, and the event
+    payloads themselves live in the index (sealed arrays + pending CSR).
+    This view quacks like :class:`EdgeEvents` for planning while costing
+    O(E) to refresh instead of the O(N log N) full ``merge_edge_events``
+    rebuild per insert. ``t_min``/``t_max`` are stream telemetry, tracked
+    incrementally by the model.
+    """
+
+    ptr: np.ndarray  # int64 [E+1]
+    t_min: float
+    t_max: float
+
+    @property
+    def n(self) -> int:
+        return int(self.ptr[-1])
+
+    def count(self, e: int) -> int:
+        return int(self.ptr[e + 1] - self.ptr[e])
 
 
 def merge_edge_events(net: RoadNetwork, ee: EdgeEvents, ev: Events) -> EdgeEvents:

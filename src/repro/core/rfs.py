@@ -1302,6 +1302,30 @@ class FlatDynamicEngine(_DeviceEngine):
                 del self._tab_cache[tk]
         return pack
 
+    def release_stale(self, epoch) -> int:
+        """Drop device packs (and their derived window tables) for epochs
+        strictly older than ``epoch = (revision, pend_revision)``.
+
+        The compactor calls this right after a horizon eviction: the LRU
+        would eventually rotate the pre-eviction packs out, but dropping
+        them eagerly is what makes a horizon-bounded stream's
+        ``device_bytes`` *plateau* instead of sawtoothing at LRU capacity.
+        Safe with MVCC: a still-pinned snapshot that queries later simply
+        re-packs from its own pinned arrays on the cache miss. Returns the
+        number of packs dropped.
+        """
+        revision, pend_revision = epoch
+        dropped = 0
+        for key in [k for k in self._sealed_packs if k[0] < revision]:
+            del self._sealed_packs[key]
+            dropped += 1
+            for tk in [k for k in self._tab_cache if k[1:3] == key]:
+                del self._tab_cache[tk]
+        for key in [k for k in self._pend_packs if k < pend_revision]:
+            del self._pend_packs[key]
+            dropped += 1
+        return dropped
+
     @property
     def device_bytes(self) -> int:
         """Sealed + pending packs + cached packed plans (window tables and

@@ -53,7 +53,13 @@ import numpy as np
 from .ada import AggregateDistanceIndex
 from .aggregation import build_event_moments
 from .drfs import DynamicRangeForest
-from .events import Events, group_events_by_edge
+from .events import (
+    EventCountsView,
+    Events,
+    group_events_by_edge,
+    ragged_arange,
+    validate_events,
+)
 from .kernels_math import get_kernel
 from .lixel_sharing import dominated_sweep
 from .network import RoadNetwork, build_lixels
@@ -118,6 +124,8 @@ class TNKDE:
         drfs_depth: int = 8,
         drfs_h0: Optional[int] = None,
         drfs_exact_leaf: bool = False,
+        auto_seal: bool = True,
+        horizon_s: Optional[float] = None,
         edge_block: int = 128,
         atom_flush: int = 400_000,
     ):
@@ -144,6 +152,14 @@ class TNKDE:
                 )
         if lixel_sharing and solution == "sps":
             raise ValueError("lixel sharing needs an aggregation index (ada/rfs/drfs)")
+        if horizon_s is not None:
+            if solution != "drfs":
+                raise ValueError("horizon_s= (sliding time horizon) requires solution='drfs'")
+            horizon_s = float(horizon_s)
+            if not horizon_s > 0.0:
+                raise ValueError(f"horizon_s must be positive, got {horizon_s!r}")
+        if not auto_seal and solution != "drfs":
+            raise ValueError("auto_seal=False requires solution='drfs'")
         t0 = _time.perf_counter()
         self.net = net
         self.g = g
@@ -152,6 +168,8 @@ class TNKDE:
         self.cascade = cascade
         self.drfs_h0 = drfs_h0
         self.drfs_exact_leaf = drfs_exact_leaf
+        self.auto_seal = bool(auto_seal)
+        self.horizon_s = horizon_s
         self.edge_block = edge_block
         self.atom_flush = atom_flush
         self.lix = build_lixels(net, g)
@@ -163,7 +181,9 @@ class TNKDE:
         if solution == "rfs":
             self.index = RangeForest(net, self.ee, self.ctx, phi, build_bridges=cascade)
         elif solution == "drfs":
-            self.index = DynamicRangeForest(net, self.ee, self.ctx, phi, depth=drfs_depth)
+            self.index = DynamicRangeForest(
+                net, self.ee, self.ctx, phi, depth=drfs_depth, auto_seal=auto_seal
+            )
         elif solution == "ada":
             self.index = AggregateDistanceIndex(net, self.ee, self.ctx)
         self._phi_dim = phi.shape[-1] if phi.size else self.ctx.K
@@ -192,6 +212,11 @@ class TNKDE:
             drfs_depth=int(drfs_depth),
             drfs_h0=drfs_h0,
             drfs_exact_leaf=bool(drfs_exact_leaf),
+            # replay determinism: auto-seal timing and the eviction cutoff
+            # both depend on these, so a restore under different settings
+            # must be rejected, not silently diverge
+            auto_seal=bool(auto_seal),
+            horizon_s=horizon_s,
             n_edges=int(net.n_edges),
             n_lixels=int(self.lix.n_lixels),
             n_base_events=int(self.ee.n),
@@ -326,16 +351,60 @@ class TNKDE:
             return self.index.snapshot()
         return None
 
+    # ------------------------------------------------- planner event view
+    @property
+    def ee(self):
+        """The planner's per-edge event view (candidate pruning, self-edge
+        flags). Construction and restore bind full payload views
+        (:class:`EdgeEvents`); streaming inserts/evictions only dirty the
+        per-edge *counts*, and the view is lazily refreshed in O(E) as a
+        :class:`EventCountsView` — never the O(N log N) full re-merge that
+        made a T-insert stream O(T²). Payloads live in the index; LS
+        extremes live in ``ev_min_pos``/``ev_max_pos``."""
+        if self._ee_dirty:
+            ptr = np.zeros(self.net.n_edges + 1, np.int64)
+            np.cumsum(self._ev_counts, out=ptr[1:])
+            self._ee = EventCountsView(ptr=ptr, t_min=self._ee_tmin, t_max=self._ee_tmax)
+            self._ee_dirty = False
+        return self._ee
+
+    @ee.setter
+    def ee(self, value) -> None:
+        self._ee = value
+        self._ev_counts = np.diff(value.ptr).astype(np.int64)
+        self._ee_tmin = float(value.t_min)
+        self._ee_tmax = float(value.t_max)
+        self._ee_dirty = False
+
+    @property
+    def stream_t_max(self) -> float:
+        """Largest event timestamp seen so far — the stream clock
+        ``compact()`` resolves the horizon cutoff against when the caller
+        does not supply wall time."""
+        return self._ee_tmax
+
     def insert(self, events: Events) -> None:
-        """Streaming insertion (DRFS only, §5). With a WAL attached, the
-        batch is fsync'd to the log **before** any in-memory mutation —
-        a crash at any later instant replays it (DESIGN.md §8)."""
+        """Streaming insertion (DRFS only, §5), vectorized over the batch.
+
+        The whole batch is one O(batch) step: validation, a single WAL
+        append, one φ-moment pass, one DRFS pending append, and incremental
+        per-dirty-edge planner updates (count bumps + extreme min/max) —
+        no per-event host work and no full planner rebuild.
+
+        Invalid batches (bad edge id, out-of-range position, non-finite
+        time) raise :class:`EventValidationError` **before** the WAL append
+        and before any in-memory mutation, so a rejected batch leaves the
+        log, the index and the planner untouched. With a WAL attached, the
+        validated batch is fsync'd to the log before any in-memory
+        mutation — a crash at any later instant replays it (DESIGN.md §8).
+        """
         if self.solution != "drfs":
             raise ValueError("insert() requires solution='drfs'")
+        validate_events(self.net, events)
         if self._wal is not None and not self._replaying:
             self._wal.append_insert(events)
         net = self.net
-        pos = np.clip(events.pos, 0.0, net.edge_len[events.edge_id])
+        pos = events.pos  # validated in [0, edge_len] — no silent clipping
         from .aggregation import MomentContext  # noqa: F401 (doc pointer)
 
         ctx = self.ctx
@@ -358,13 +427,109 @@ class TNKDE:
             axis=1,
         )
         self.index.insert(events.edge_id.astype(np.int64), pos, events.time, phi)
-        # keep the planner's event view (candidate pruning, self-edge flags,
-        # LS extremes) in sync with the streamed index
-        from .events import merge_edge_events
+        # incremental planner update: O(batch) count/extreme bumps on the
+        # dirty edges only — the counts view refreshes lazily in O(E)
+        if n:
+            np.add.at(self._ev_counts, events.edge_id, 1)
+            tmin = float(events.time.min())
+            tmax = float(events.time.max())
+            if int(self._ev_counts.sum()) == n:  # first events ever seen
+                self._ee_tmin, self._ee_tmax = tmin, tmax
+            else:
+                self._ee_tmin = min(self._ee_tmin, tmin)
+                self._ee_tmax = max(self._ee_tmax, tmax)
+            self._ee_dirty = True
+            np.minimum.at(self.ev_min_pos, events.edge_id, pos)
+            np.maximum.at(self.ev_max_pos, events.edge_id, pos)
 
-        self.ee = merge_edge_events(net, self.ee, events)
-        np.minimum.at(self.ev_min_pos, events.edge_id, pos)
-        np.maximum.at(self.ev_max_pos, events.edge_id, pos)
+    # --------------------------------------------- background compaction
+    @property
+    def needs_compaction(self) -> bool:
+        """True when a ``compact()`` would do useful work: the geometric
+        pending/sealed ratio crossed the seal threshold, or (with a
+        horizon) events have expired. Cheap — the serve tier polls this
+        between batches to schedule compaction off the insert/query path."""
+        if self.solution != "drfs":
+            return False
+        if self.index.needs_seal:
+            return True
+        if self.horizon_s is not None and self.index.n_sealed + self.index.n_pending:
+            return self._ee_tmin < self._ee_tmax - self.horizon_s
+        return False
+
+    def compact(self, t_now: Optional[float] = None) -> dict:
+        """One background-compaction step: evict expired events (sliding
+        horizon), then seal the pending buffers into the tree.
+
+        Runs *off* the insert path (with ``auto_seal=False`` insert never
+        seals) and off the query path (MVCC: pinned snapshots keep
+        answering over the pre-compaction arrays). ``t_now`` resolves the
+        horizon cutoff ``t_now - horizon_s``; default is the stream clock
+        ``stream_t_max``. Eviction is NOT a pure function of event counts,
+        so — unlike the count-triggered auto-seal — it is WAL-logged as an
+        explicit EVICT record (carrying the resolved ``t_now``) before it
+        applies; the seal is logged as usual. Returns
+        ``{"evicted": n, "sealed": n}``.
+        """
+        if self.solution != "drfs":
+            raise ValueError("compact() requires solution='drfs'")
+        out = {"evicted": 0, "sealed": 0}
+        if self.horizon_s is not None:
+            t_now = self._ee_tmax if t_now is None else float(t_now)
+            # log only evictions that remove something: _ee_tmin is exact
+            # (recomputed after every eviction), so this never misses — and
+            # a logged record always replays to the identical state
+            if self._ee_tmin < t_now - self.horizon_s and (
+                self.index.n_sealed + self.index.n_pending
+            ):
+                if self._wal is not None and not self._replaying:
+                    self._wal.append_evict(t_now)
+                out["evicted"] = self._apply_evict(t_now)
+        if self.index.n_pending:
+            out["sealed"] = self.index.n_pending
+            self.seal()
+        if out["evicted"] and self._fe is not None and hasattr(self._fe, "release_stale"):
+            # drop device packs for pre-eviction epochs promptly so a
+            # horizon-bounded run's device footprint plateaus
+            self._fe.release_stale(self.index.epoch)
+        return out
+
+    def _apply_evict(self, t_now: float) -> int:
+        """Apply (never log) the eviction for resolved stream time
+        ``t_now`` — called by ``compact`` after logging, and by WAL replay
+        for each EVICT record. Updates the planner's counts and per-edge
+        extremes exactly for the touched edges, so post-eviction LS
+        classification stays exact (stale-wide extremes would only be
+        conservative, but exact keeps replay state identical)."""
+        cutoff = float(t_now) - self.horizon_s
+        idx = self.index
+        removed = idx.evict_before(cutoff)
+        if removed is None:
+            return 0
+        self._ev_counts -= removed
+        self._ee_dirty = True
+        # recompute extremes for touched edges from the surviving events
+        touched = np.nonzero(removed)[0]
+        self.ev_min_pos[touched] = np.inf
+        self.ev_max_pos[touched] = -np.inf
+        cnts = np.diff(idx.ptr)
+        sl = ragged_arange(idx.ptr[touched], cnts[touched])
+        eo = np.repeat(touched, cnts[touched])
+        np.minimum.at(self.ev_min_pos, eo, idx.pos[sl])
+        np.maximum.at(self.ev_max_pos, eo, idx.pos[sl])
+        t_lo = float(idx.time.min()) if idx.n_sealed else np.inf
+        pcsr = idx.pending_csr()
+        if pcsr is not None:
+            pptr, pp, pt, _ = pcsr
+            pe = np.repeat(np.arange(self.net.n_edges, dtype=np.int64), np.diff(pptr))
+            m = removed[pe] > 0
+            np.minimum.at(self.ev_min_pos, pe[m], pp[m])
+            np.maximum.at(self.ev_max_pos, pe[m], pp[m])
+            t_lo = min(t_lo, float(pt.min()))
+        # advance the exact lower stream bound so needs_compaction / the
+        # next compact() gate correctly (never stale-high)
+        self._ee_tmin = t_lo if np.isfinite(t_lo) else self._ee_tmax
+        return int(removed.sum())
 
     # ------------------------------------------- durability (DESIGN.md §8)
     def attach_wal(self, wal) -> None:
@@ -435,8 +600,8 @@ class TNKDE:
             "depth": int(self.index.depth),
             "revision": int(self.index.revision),
             "pend_revision": int(self.index.pend_revision),
-            "ee_t_min": float(self.ee.t_min),
-            "ee_t_max": float(self.ee.t_max),
+            "ee_t_min": float(self._ee_tmin),
+            "ee_t_max": float(self._ee_tmax),
             "n_events": int(self.index.n_sealed),
             "fingerprint": self._fingerprint,
         }
@@ -528,6 +693,13 @@ class TNKDE:
                         report.n_events += rec.events.n
                     elif rec.kind == _wal.KIND_SEAL:
                         self.index.seal()
+                    elif rec.kind == _wal.KIND_EVICT:
+                        # the record carries the resolved stream time; each
+                        # model applies its own horizon cutoff (a server-level
+                        # log serves heterogeneous per-profile horizons, and
+                        # horizon-less models no-op deterministically)
+                        if self.horizon_s is not None:
+                            report.n_evicted += self._apply_evict(rec.t_now)
                     else:
                         self.index.extend()
                     report.n_records += 1

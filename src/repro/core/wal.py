@@ -11,6 +11,14 @@ is data-independent, the geometric auto-seal threshold depends only on
 counts, and Φ moments are recomputed from the logged raw events by the
 same code path), so replay reproduces the uncrashed run bit-for-bit.
 
+Sliding-horizon **eviction** is the one mutation that is NOT a pure
+function of the operation sequence so far — its cutoff depends on the
+stream clock the compactor resolved at runtime — so it is logged as an
+explicit EVICT record carrying that resolved time. Replay re-applies each
+model's own ``t_now - horizon_s`` cutoff against the logged ``t_now``,
+which is why one server-level record serves profiles with heterogeneous
+horizons (horizon-less models no-op deterministically).
+
 Layout — a directory of **segments**, rotated at every checkpoint so
 replay cost is bounded by the checkpoint cadence and fully-covered
 segments can be pruned::
@@ -24,7 +32,9 @@ Record format (little-endian, append-only)::
     <payload_len bytes>
 
 ``kind``: 1=INSERT (payload = n:u64, edge i64[n], pos f64[n], time f64[n]),
-2=SEAL, 3=EXTEND (empty payloads). A **torn final record** — short header,
+2=SEAL, 3=EXTEND (empty payloads), 4=EVICT (payload = t_now f64, the
+resolved stream time the horizon cutoff derives from). A **torn final
+record** — short header,
 short payload, bad magic or bad CRC at the tail of the *last* segment — is
 exactly what a crash mid-append leaves behind; it is detected and truncated
 (never partially applied). The same damage anywhere else is corruption and
@@ -46,6 +56,7 @@ __all__ = [
     "KIND_INSERT",
     "KIND_SEAL",
     "KIND_EXTEND",
+    "KIND_EVICT",
     "RecoveryReport",
     "WalError",
     "WalRecord",
@@ -58,6 +69,7 @@ _HDR = struct.Struct("<IBQII")  # magic, kind, seq, payload_len, payload_crc
 KIND_INSERT = 1
 KIND_SEAL = 2
 KIND_EXTEND = 3
+KIND_EVICT = 4
 
 
 class WalError(RuntimeError):
@@ -69,7 +81,8 @@ class WalError(RuntimeError):
 class WalRecord:
     seq: int
     kind: int
-    events: Optional[Events] = None  # INSERT payload; None for markers
+    events: Optional[Events] = None  # INSERT payload; None otherwise
+    t_now: Optional[float] = None  # EVICT payload; None otherwise
 
 
 @dataclasses.dataclass
@@ -82,6 +95,7 @@ class RecoveryReport:
     to_seq: int  # last applied sequence number
     n_records: int = 0
     n_events: int = 0  # events inside replayed INSERT batches
+    n_evicted: int = 0  # events removed by replayed EVICT records
     n_truncated_bytes: int = 0  # torn tail removed before replay
     restore_seconds: float = 0.0
     replay_seconds: float = 0.0
@@ -138,6 +152,10 @@ def _scan_segment(path: str) -> tuple[List[WalRecord], int, int]:
             break
         if kind == KIND_INSERT:
             rec = WalRecord(seq=seq, kind=kind, events=_decode_insert(payload))
+        elif kind == KIND_EVICT:
+            if plen != 8:
+                raise WalError(f"evict payload length {plen} != 8")
+            rec = WalRecord(seq=seq, kind=kind, t_now=struct.unpack("<d", payload)[0])
         elif kind in (KIND_SEAL, KIND_EXTEND):
             rec = WalRecord(seq=seq, kind=kind)
         else:
@@ -257,10 +275,17 @@ class WriteAheadLog:
         return self._append(KIND_INSERT, _encode_insert(events))
 
     def append_marker(self, kind: int) -> int:
-        """Log a SEAL or EXTEND marker."""
+        """Log a SEAL or EXTEND marker (EVICT carries a payload — use
+        :meth:`append_evict`)."""
         if kind not in (KIND_SEAL, KIND_EXTEND):
             raise ValueError(f"not a marker kind: {kind}")
         return self._append(kind, b"")
+
+    def append_evict(self, t_now: float) -> int:
+        """Log a horizon eviction at resolved stream time ``t_now``;
+        durable before this returns (logged before the eviction applies,
+        like every mutation)."""
+        return self._append(KIND_EVICT, struct.pack("<d", float(t_now)))
 
     # -------------------------------------------------------------- reading
     def records(self, after_seq: int = 0) -> Iterator[WalRecord]:

@@ -127,6 +127,13 @@ class MicroBatcher:
         epochs = [k[1] for k, q in self._queues.items() if k[0] == profile and q]
         return min(epochs) if epochs else None
 
+    def n_queued_for(self, profile: str) -> int:
+        """Queued requests of one profile across its epoch queues — the
+        server's background compactor treats 0 as "idle enough to compact"
+        (queued requests would still be correct either way: they hold
+        pinned snapshots, compaction only rebinds)."""
+        return sum(len(q) for k, q in self._queues.items() if k[0] == profile)
+
     def _full(self, q: Sequence[Request]) -> bool:
         if len(q) >= self.batch_cap:
             return True

@@ -72,6 +72,13 @@ class ProfileConfig:
     drfs_depth: int = 8
     drfs_h0: Optional[int] = None
     drfs_exact_leaf: bool = False
+    # auto_seal=False moves the geometric seal off the insert path; the
+    # server then runs it as background compaction between pumps
+    # (maybe_compact). horizon_s bounds the profile's event history to a
+    # sliding window — expired events are evicted at compaction (WAL-logged
+    # once at server level; profiles may have heterogeneous horizons).
+    auto_seal: bool = True
+    horizon_s: Optional[float] = None
 
     def to_kwargs(self) -> dict:
         return dataclasses.asdict(self)
@@ -119,6 +126,10 @@ class ServerStats:
     n_retries: int = 0  # transient faults retried (once, after backoff)
     n_degradations: int = 0  # executor-ladder trips (pallas->jax->numpy)
     n_stragglers: int = 0  # flushes the step watchdog flagged as slow
+    # ---- background compaction (sliding horizon) ----
+    n_compactions: int = 0  # compact() passes that did work
+    n_sealed_events: int = 0  # pending events merged by compaction seals
+    n_evicted: int = 0  # events expired past the sliding horizon
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -141,6 +152,7 @@ class TNKDEServer:
         degrade_after: int = 2,
         retry_backoff_s: float = 0.01,
         watchdog: Optional[StepWatchdog] = None,
+        auto_compact: bool = True,
     ):
         """``mesh`` shards every profile's forest index across the mesh's
         ``shard_axes`` (DESIGN.md §3): micro-batched, epoch-pinned queries
@@ -170,6 +182,11 @@ class TNKDEServer:
         self.retry_backoff_s = float(retry_backoff_s)
         self.watchdog = watchdog if watchdog is not None else StepWatchdog()
         self._fault_streak: Dict[str, int] = {}
+        # ---- background compaction (DESIGN.md §9) ----
+        # with auto_compact, every pump() tail runs maybe_compact(): seals
+        # and horizon evictions happen between batches, never on the
+        # insert or query path (profiles opt in via auto_seal=False)
+        self.auto_compact = bool(auto_compact)
         # ---- durability (server-level WAL + coordinated checkpoints) ----
         self._wal = None
         self._ckpt_step = 0
@@ -256,6 +273,68 @@ class TNKDEServer:
             if model.solution == "drfs":
                 model.index.seal()
 
+    # ------------------------------------------ background compaction (§9)
+    def compact(self, t_now: Optional[float] = None) -> dict:
+        """One compaction pass over every streaming profile: evict events
+        past each profile's sliding horizon, then seal pending buffers.
+
+        Durability mirrors :meth:`insert`: the EVICT record (carrying the
+        resolved stream time) and the SEAL marker are logged ONCE at server
+        level, before any model mutates — on replay every profile applies
+        its own ``horizon_s`` cutoff against the logged time, so one record
+        set recovers heterogeneous horizons (horizon-less profiles no-op).
+        Queued requests keep answering from their pinned snapshots (MVCC);
+        the result cache is pruned below the still-pinned floor like any
+        other mutation. Returns ``{"evicted": n, "sealed": n}`` totals.
+        """
+        drfs = {n: m for n, m in self.models.items() if m.solution == "drfs"}
+        out = {"evicted": 0, "sealed": 0}
+        if not drfs:
+            return out
+        if t_now is None:
+            t_now = max(m.stream_t_max for m in drfs.values())
+        t_now = float(t_now)
+        will_evict = any(
+            m.horizon_s is not None
+            and (m.index.n_sealed + m.index.n_pending)
+            and m._ee_tmin < t_now - m.horizon_s
+            for m in drfs.values()
+        )
+        will_seal = any(m.index.n_pending for m in drfs.values())
+        if self._wal is not None:
+            # log-before-apply, once for all profiles (models are log-less)
+            if will_evict:
+                self._wal.append_evict(t_now)
+            if will_seal:
+                self._wal.append_marker(walmod.KIND_SEAL)
+        for name, model in drfs.items():
+            r = model.compact(t_now)
+            out["evicted"] += r["evicted"]
+            out["sealed"] += r["sealed"]
+            if r["evicted"] or r["sealed"]:
+                floor = self.scheduler.oldest_epoch(name)
+                self.cache.prune_below(
+                    name, model.epoch if floor is None else min(floor, model.epoch)
+                )
+        if out["evicted"] or out["sealed"]:
+            self.stats.n_compactions += 1
+            self.stats.n_evicted += out["evicted"]
+            self.stats.n_sealed_events += out["sealed"]
+        return out
+
+    def maybe_compact(self) -> Optional[dict]:
+        """The pump-tail hook: compact when some profile needs it and no
+        full batch is waiting (compaction yields to ready query work — it
+        can always run one pump later, queries cannot)."""
+        if not self.auto_compact or self.scheduler.has_ready_batch:
+            return None
+        if any(
+            m.solution == "drfs" and m.needs_compaction
+            for m in self.models.values()
+        ):
+            return self.compact()
+        return None
+
     # ------------------------------------------------------------ execution
     def pump(self, *, force: bool = True) -> List[Response]:
         """Form and execute micro-batches; returns completed responses.
@@ -284,6 +363,7 @@ class TNKDEServer:
                     self._error_response(r, batch, t, err) for r in batch.requests
                 )
                 self.stats.n_batches += 1
+        self.maybe_compact()
         return responses
 
     def _error_response(

@@ -173,6 +173,166 @@ def test_incremental_seal_equals_full_rebuild():
         np.testing.assert_allclose(a[2], b[2], rtol=1e-11, atol=1e-11 * scale)
 
 
+# ----------------------------------------- out-of-order ingest (proof pin)
+def _set_oracle(net, ev_parts, ts):
+    """Fresh SPS over an explicit event *set* (order-independent)."""
+    allev = Events(
+        np.concatenate([e.edge_id for e in ev_parts]),
+        np.concatenate([e.pos for e in ev_parts]),
+        np.concatenate([e.time for e in ev_parts]),
+    )
+    return TNKDE(net, allev, solution="sps", **KW).query(ts)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_out_of_order_inserts_match_oracle(seed, engine):
+    """drfs.insert needs NO arrival-order contract: the sealed structure is
+    a pure function of the event set (pending CSR and seal both lexsort by
+    (edge, time)), so shuffled batches — reversed within, permuted across,
+    with seals interleaved — must match the set oracle exactly."""
+    net, ev = _world(7 + seed)
+    rng = np.random.default_rng(seed * 17 + 3)
+    base, parts = _sub(ev, 0, 40), []
+    lo = 40
+    while lo < ev.n:
+        hi = min(lo + int(rng.integers(10, 50)), ev.n)
+        parts.append(_sub(ev, lo, hi))
+        lo = hi
+    m = TNKDE(net, base, solution="drfs", engine=engine,
+              drfs_depth=4, drfs_exact_leaf=True, **KW)
+    for i in rng.permutation(len(parts)):  # batches out of chronological order
+        p = parts[i]
+        m.insert(Events(p.edge_id[::-1], p.pos[::-1], p.time[::-1]))  # reversed within
+        if rng.random() < 0.4:
+            m.index.seal()
+    ref = _set_oracle(net, [base] + parts, TS)
+    got = m.query(TS)
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-9 * max(ref.max(), 1.0))
+    m.index.seal()
+    np.testing.assert_allclose(m.query(TS), ref, rtol=1e-9, atol=1e-9 * max(ref.max(), 1.0))
+
+
+# ------------------------------- compaction + sliding-horizon interleavings
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_compact_evict_interleavings_match_survivor_oracle(seed, engine):
+    """Bulk inserts + background compact() under a sliding horizon: after
+    every compaction the model must equal a fresh SPS over exactly the
+    SURVIVING event set (eviction keeps per-edge time-sorted prefixes out,
+    nothing else), on both engines."""
+    net, ev = _world(11 + seed)
+    rng = np.random.default_rng(seed * 31 + 7)
+    horizon = 2.5 * 86400.0
+    m = TNKDE(net, _sub(ev, 0, 40), solution="drfs", engine=engine,
+              drfs_depth=4, drfs_exact_leaf=True,
+              auto_seal=False, horizon_s=horizon, **KW)
+    n = 40
+    qts = None
+    while n < ev.n:
+        k = min(int(rng.integers(15, 60)), ev.n - n)
+        m.insert(_sub(ev, n, n + k))
+        n += k
+        out = m.compact()
+        assert m.index.n_pending == 0, "compact must seal everything pending"
+        e_, p_, t_ = m.index.snapshot().event_set()
+        cutoff = m.stream_t_max - horizon
+        assert (t_ >= cutoff).all(), "an expired event survived compaction"
+        if out["evicted"]:
+            assert t_.shape[0] < n, "eviction reported but nothing removed"
+        qts = [m.stream_t_max - 0.5 * 86400.0, m.stream_t_max]
+        ref = _set_oracle(net, [Events(e_, p_, t_)], qts)
+        got = m.query(qts)
+        np.testing.assert_allclose(
+            got, ref, rtol=1e-9, atol=1e-9 * max(ref.max(), 1.0),
+            err_msg=f"engine={engine} n={n}",
+        )
+    assert m.stats.index_bytes >= 0  # smoke: structure stayed consistent
+
+
+def test_compact_recomputes_planner_extremes_exactly():
+    """Post-eviction LS extremes must equal a fresh model's over the
+    surviving set — stale-wide extremes would be conservative-but-slower,
+    and (worse) would diverge replay state from the live run."""
+    net, ev = _world(19)
+    m = TNKDE(net, _sub(ev, 0, 60), solution="drfs", engine="numpy",
+              drfs_depth=4, auto_seal=False, horizon_s=2.0 * 86400.0, **KW)
+    m.insert(_sub(ev, 60, ev.n))
+    m.compact()
+    e_, p_, t_ = m.index.snapshot().event_set()
+    fresh = TNKDE(net, Events(e_, p_, t_), solution="drfs", engine="numpy",
+                  drfs_depth=4, **KW)
+    np.testing.assert_array_equal(np.diff(m.ee.ptr), np.diff(fresh.ee.ptr))
+    np.testing.assert_array_equal(m.ev_min_pos, fresh.ev_min_pos)
+    np.testing.assert_array_equal(m.ev_max_pos, fresh.ev_max_pos)
+    assert m._ee_tmin == float(t_.min())
+
+
+# --------------------------------------- write-path bugfix regression pins
+def test_insert_planner_update_is_incremental(monkeypatch):
+    """The quadratic-ingest bugfix pin: TNKDE.insert must never fall back
+    to the full merge_edge_events rebuild (O(total) per insert — O(T²)
+    across a stream). The incremental counts must still match a fresh
+    rebuild exactly."""
+    import repro.core.events as events_mod
+
+    net, ev = _world(23)
+    m = TNKDE(net, _sub(ev, 0, 60), solution="drfs", engine="numpy",
+              drfs_depth=4, **KW)
+
+    def _boom(*a, **k):  # any call = the O(T^2) path resurfaced
+        raise AssertionError("insert() used the full merge_edge_events rebuild")
+
+    monkeypatch.setattr(events_mod, "merge_edge_events", _boom)
+    n = 60
+    while n < ev.n:
+        m.insert(_sub(ev, n, min(n + 30, ev.n)))
+        n = min(n + 30, ev.n)
+    fresh = TNKDE(net, _sub(ev, 0, ev.n), solution="drfs", engine="numpy",
+                  drfs_depth=4, **KW)
+    assert m.ee.n == ev.n
+    np.testing.assert_array_equal(m.ee.ptr, fresh.ee.ptr)
+    np.testing.assert_array_equal(m.ev_min_pos, fresh.ev_min_pos)
+    np.testing.assert_array_equal(m.ev_max_pos, fresh.ev_max_pos)
+    assert m._ee_tmax == fresh._ee_tmax
+
+
+def test_invalid_batch_rejected_atomically(tmp_path):
+    """The WAL-poisoning bugfix pin: a batch with a bad edge id, an
+    out-of-range position or a non-finite time raises EventValidationError
+    BEFORE the WAL append and before any mutation — log, index and planner
+    are untouched, and the model keeps accepting good batches."""
+    from repro.core.events import EventValidationError
+    from repro.core.wal import WriteAheadLog
+
+    net, ev = _world(29)
+    m = TNKDE(net, _sub(ev, 0, 60), solution="drfs", engine="numpy",
+              drfs_depth=4, **KW)
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    m.attach_wal(wal)
+    good = _sub(ev, 60, 80)
+    m.insert(good)
+    seq0, ep0, n0 = wal.last_seq, m.epoch, m.ee.n
+    ptr0 = m.ee.ptr.copy()
+    bad_batches = [
+        Events(np.array([net.n_edges]), np.array([0.0]), np.array([1.0])),
+        Events(np.array([-1]), np.array([0.0]), np.array([1.0])),
+        Events(np.array([0]), np.array([net.edge_len[0] + 1.0]), np.array([1.0])),
+        Events(np.array([0]), np.array([-0.5]), np.array([1.0])),
+        Events(np.array([0]), np.array([np.nan]), np.array([1.0])),
+        Events(np.array([0]), np.array([0.0]), np.array([np.inf])),
+    ]
+    for bad in bad_batches:
+        with pytest.raises(EventValidationError):
+            m.insert(bad)
+    assert wal.last_seq == seq0, "rejected batch reached the WAL"
+    assert m.epoch == ep0 and m.ee.n == n0
+    np.testing.assert_array_equal(m.ee.ptr, ptr0)
+    m.insert(_sub(ev, 80, 100))  # still healthy after rejections
+    assert wal.last_seq == seq0 + 1 and m.ee.n == n0 + 20
+    wal.close()
+
+
 # ------------------------------------------------- hypothesis sweep (slow)
 try:
     import hypothesis  # noqa: F401

@@ -263,6 +263,84 @@ def test_subprocess_crash_replay_smoke(tmp_path):
     assert rec.epoch == ref.epoch
 
 
+# ------------------------------------------------- sliding-horizon recovery
+def test_evict_replay_equivalence(tmp_path):
+    """Replay-after-crash reproduces evictions EXACTLY: same surviving
+    event set, bit-identical index arrays, identical epochs, heat <= 1e-12
+    — including a torn final record and a checkpoint between evictions.
+    (Eviction is not a pure function of event counts, so this only holds
+    because each eviction's resolved stream time is WAL-logged.)"""
+    # horizon ~2.5 batch spans: evictions keep firing through the whole
+    # stream (also past the checkpoint, so replay must re-apply some)
+    kw = dict(KW, auto_seal=False, horizon_s=2.5e4, drfs_exact_leaf=True)
+    net, ev = _world()
+    batches = _batches(net)
+
+    wdir, cdir = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    m = TNKDE(net, ev, engine="numpy", **kw)
+    m.attach_wal(WriteAheadLog(wdir))
+    n_evicted = 0
+    for i, b in enumerate(batches[:4]):
+        m.insert(b)
+        n_evicted += m.compact()["evicted"]
+        if i == 2:
+            m.checkpoint(cdir)
+    m.insert(batches[4])
+    m.compact()
+    m.insert(batches[5])  # this record gets torn — never applied by contract
+    m._wal.close()
+    assert n_evicted > 0, "scenario must actually evict"
+    tear_wal_tail(wdir, nbytes=7, scribble=True)
+
+    rec = TNKDE(net, ev, engine="numpy", **kw)
+    rep = rec.restore(cdir, wal=WriteAheadLog(wdir))
+    assert rep.n_evicted > 0 and rep.n_truncated_bytes > 0
+    # live model minus the torn batch = replayed model, exactly
+    ref = TNKDE(net, ev, engine="numpy", **kw)
+    for i, b in enumerate(batches[:4]):
+        ref.insert(b)
+        ref.compact()
+        if i == 2:
+            ref.seal()  # the checkpoint's logged seal, at the matching point
+    ref.insert(batches[4])
+    ref.compact()
+    assert rec.epoch == ref.epoch
+    np.testing.assert_array_equal(rec.index.ptr, ref.index.ptr)
+    np.testing.assert_array_equal(rec.index.time, ref.index.time)
+    np.testing.assert_array_equal(rec.index.pos, ref.index.pos)
+    TS2 = [rec.stream_t_max - 5e4, rec.stream_t_max]
+    assert np.abs(ref.query(TS2) - rec.query(TS2)).max() <= 1e-12
+    # planner state replayed exactly too (counts, extremes, stream bounds)
+    np.testing.assert_array_equal(rec._ev_counts, ref._ev_counts)
+    np.testing.assert_array_equal(rec.ev_min_pos, ref.ev_min_pos)
+    assert (rec._ee_tmin, rec._ee_tmax) == (ref._ee_tmin, ref._ee_tmax)
+
+
+def test_horizon_bounds_device_bytes(tmp_path):
+    """An infinite stream under a sliding horizon runs in bounded memory:
+    once warm, the device footprint (packs + plans + tables) must plateau
+    — eviction keeps N bounded, the size-classed packs stop growing, and
+    compact() releases stale-epoch packs eagerly."""
+    pytest.importorskip("jax")
+    net, ev = _world()
+    m = TNKDE(net, ev, engine="jax", auto_seal=False, horizon_s=3e4,
+              drfs_exact_leaf=True, **KW)
+    t0 = 8.1e5
+    rng = np.random.default_rng(5)
+    series = []
+    for i in range(10):
+        e = rng.integers(0, net.n_edges, 40).astype(np.int32)
+        m.insert(Events(e, rng.uniform(0, net.edge_len[e]),
+                        np.sort(rng.uniform(t0 + i * 1e4, t0 + (i + 1) * 1e4, 40))))
+        m.compact()
+        m.query([t0 + (i + 1) * 1e4 - 5e3])  # keep the read path warm
+        series.append(m._fe.device_bytes)
+        # the horizon admits ~3 batches of history: event count is bounded
+        assert m.ee.n <= 160 + 3 * 40
+    warm = 4  # first rounds still evicting the 160 base events
+    assert max(series[warm:]) <= max(series[:warm]), series
+
+
 # -------------------------------------------------------- server-level WAL
 def test_server_multi_profile_recovery(tmp_path):
     """One server WAL recovers every profile: quantized AND exact_leaf

@@ -7,6 +7,7 @@ import pytest
 
 from repro.core.events import Events
 from repro.core.wal import (
+    KIND_EVICT,
     KIND_EXTEND,
     KIND_INSERT,
     KIND_SEAL,
@@ -56,6 +57,29 @@ def test_marker_kind_validated(tmp_path):
     w = WriteAheadLog(str(tmp_path))
     with pytest.raises(ValueError):
         w.append_marker(KIND_INSERT)
+    # EVICT carries a payload; it is not a bare marker either
+    with pytest.raises(ValueError):
+        w.append_marker(KIND_EVICT)
+
+
+def test_evict_record_roundtrip(tmp_path):
+    """EVICT records carry the resolved stream time exactly (it becomes a
+    float64 cutoff on replay — any rounding would change which events the
+    replayed eviction removes)."""
+    w = WriteAheadLog(str(tmp_path))
+    t_now = 7748250.678071138
+    w.append_insert(_ev(4, 1))
+    w.append_evict(t_now)
+    w.append_marker(KIND_SEAL)
+    w.append_evict(0.0)
+    w.close()
+    recs = list(WriteAheadLog(str(tmp_path)).records())
+    assert [x.kind for x in recs] == [KIND_INSERT, KIND_EVICT, KIND_SEAL, KIND_EVICT]
+    assert recs[1].t_now == t_now  # bit-exact f64 roundtrip
+    assert recs[3].t_now == 0.0
+    assert recs[1].events is None
+    # EVICT survives rotation + reopen like any record
+    assert [x.seq for x in WriteAheadLog(str(tmp_path)).records(after_seq=1)] == [2, 3, 4]
 
 
 @pytest.mark.parametrize("scribble", [False, True])
